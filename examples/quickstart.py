@@ -1,0 +1,55 @@
+"""Quickstart: ADC-DGD in 60 seconds.
+
+Reproduces the paper's core story on the four-node network of Section V:
+
+  1. DGD with *direct* compression does not converge (Fig. 1 phenomenon).
+  2. ADC-DGD with the SAME compressor converges like uncompressed DGD.
+  3. ADC-DGD transmits a fraction of the bytes.
+
+Run:
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import compression, consensus, problems, topology
+
+
+def main() -> None:
+    # the paper's four-node problem: f1 non-convex, global objective convex
+    prob = problems.paper_4node()
+    mix = topology.paper_fig3()           # the consensus matrix of Fig. 4
+    print(f"network: 4 nodes, beta = {mix.beta:.3f} (second-largest |eig| of W)")
+
+    comp = compression.RandomizedRounding(delta=1.0)   # paper Example 2
+    ss = consensus.StepSize(alpha0=0.02, eta=0.0)      # constant step-size
+    steps = 800
+
+    algs = {
+        "DGD (uncompressed, 8B/elem)": consensus.DGD(mix, ss),
+        "DGD + direct compression   ": consensus.CompressedDGD(mix, comp, ss),
+        "ADC-DGD (paper Alg. 2)     ": consensus.ADCDGD(mix, comp, ss, gamma=1.0),
+    }
+
+    print(f"\n{'algorithm':<30} {'final f(x_bar)':>14} {'|grad|':>10} "
+          f"{'consensus err':>14} {'kB sent':>8}")
+    for name, alg in algs.items():
+        r = consensus.run(alg, prob, steps, key=0)
+        print(f"{name:<30} {r['obj'][-1]:>14.5f} {r['grad_norm'][-1]:>10.2e} "
+              f"{r['consensus'][-1]:>14.2e} {r['bytes'][-1] / 1e3:>8.1f}")
+
+    print("\nTakeaway: direct compression stalls at a noise floor; ADC-DGD's")
+    print("amplified differentials make the compression noise vanish (var ~ 1/k^2),")
+    print("matching uncompressed DGD at a fraction of the communication cost.")
+
+    # gamma phase transition (paper Figs. 7/8): larger gamma converges faster
+    # up to gamma = 1; past 1 only the transmitted magnitudes keep growing.
+    print(f"\n{'gamma':>6} {'tail f(x_bar)':>14} {'max transmitted':>16}")
+    for gamma in (0.6, 0.8, 1.0, 1.2):
+        alg = consensus.ADCDGD(mix, comp, ss, gamma=gamma)
+        t = consensus.run_many(alg, prob, 400, 20, seed=7)
+        print(f"{gamma:>6} {float(np.mean(t['obj'][:, -50:])):>14.5f} "
+              f"{float(np.mean(t['max_tx'][:, -1])):>16.3f}")
+
+
+if __name__ == "__main__":
+    main()

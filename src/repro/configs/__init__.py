@@ -1,0 +1,111 @@
+"""Architecture config registry + reduced smoke variants + input specs.
+
+``get_config(arch_id)`` returns the exact assigned configuration;
+``reduced(cfg)`` returns a small same-family variant (<=2 periods,
+d_model<=512, <=4 experts) for CPU smoke tests;
+``input_specs(cfg, shape, ...)`` returns ShapeDtypeStruct stand-ins for every
+model input of a given input shape (no device allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import INPUT_SHAPES, InputShape, ModelConfig
+
+_MODULES = {
+    "jamba-v0.1-52b": "jamba_v0_1_52b",
+    "qwen3-0.6b": "qwen3_0_6b",
+    "chameleon-34b": "chameleon_34b",
+    "yi-9b": "yi_9b",
+    "gemma2-9b": "gemma2_9b",
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "whisper-small": "whisper_small",
+    "granite-moe-3b-a800m": "granite_moe_3b_a800m",
+    "mamba2-1.3b": "mamba2_1_3b",
+    "smollm-135m": "smollm_135m",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; have {sorted(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+    return mod.CONFIG
+
+
+def all_configs() -> dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}
+
+
+def reduced(cfg: ModelConfig, d_model: int = 256) -> ModelConfig:
+    """Small same-family variant: <=2 periods, d_model<=512, <=4 experts."""
+    n_heads = min(cfg.n_heads, 4) if cfg.n_heads else 0
+    n_kv = min(cfg.n_kv_heads, max(1, n_heads // 2)) if cfg.n_kv_heads else 0
+    changes = dict(
+        arch_id=cfg.arch_id + "-smoke",
+        d_model=d_model,
+        vocab_size=min(cfg.vocab_size, 1024),
+        n_periods=min(cfg.n_periods, 2),
+        n_heads=n_heads,
+        n_kv_heads=n_kv,
+        head_dim=64 if cfg.head_dim else None,
+        d_ff=min(cfg.d_ff, 512) if cfg.d_ff else 0,
+        dense_d_ff=min(cfg.dense_d_ff, 512) if cfg.dense_d_ff else 0,
+        sliding_window=min(cfg.sliding_window, 64) if cfg.sliding_window else None,
+        long_context_window=(min(cfg.long_context_window, 128)
+                             if cfg.long_context_window else None),
+    )
+    if cfg.n_experts:
+        # capacity_factor=8: no token drops in smoke variants, so distributed
+        # MoE matches the single-device oracle exactly (drop patterns depend
+        # on the per-device batch split and are tested separately).
+        changes.update(n_experts=4, top_k=min(cfg.top_k, 2),
+                       moe_d_ff=min(cfg.moe_d_ff, 128),
+                       n_shared_experts=min(cfg.n_shared_experts, 1),
+                       capacity_factor=8.0)
+    if cfg.ssm_state:
+        changes.update(ssm_state=16, ssm_heads=8, ssm_head_dim=64,
+                       ssm_chunk=32)
+        # keep d_inner = expand * d_model consistent with heads*head_dim
+        changes["d_model"] = 256
+        changes["ssm_heads"] = (2 * 256) // 64  # 8
+    if cfg.is_encoder_decoder:
+        changes.update(n_encoder_layers=2, encoder_frames=32)
+    return dataclasses.replace(cfg, **changes)
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins, shard-ready, no allocation)
+# ---------------------------------------------------------------------------
+
+def shape_applicable(cfg: ModelConfig, shape: InputShape) -> tuple[bool, str]:
+    """Whether (arch, input-shape) runs; reason string if skipped."""
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, ("pure full-attention architecture: long_500k requires "
+                       "sub-quadratic attention (DESIGN.md section 5)")
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape,
+                dtype=jnp.int32) -> dict[str, jax.ShapeDtypeStruct]:
+    """Global-batch input ShapeDtypeStructs for train/prefill/decode."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        }
+    elif shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    else:  # decode: ONE new token; the cache of seq_len lives in serve state
+        specs = {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+    if cfg.frontend == "audio_frames" and shape.kind != "decode":
+        specs["enc_frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_frames, cfg.d_model), jnp.float32)
+    return specs

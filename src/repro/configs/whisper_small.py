@@ -1,0 +1,30 @@
+"""whisper-small [audio] — enc-dec, conv frontend (stub).  [arXiv:2212.04356]
+
+12L (x2: encoder+decoder) d_model=768 12H (MHA kv=12) d_ff=3072 vocab=51865.
+
+The mel-spectrogram + conv feature extractor frontend is the allowed stub:
+``input_specs`` provides precomputed frame embeddings (B, 1504, 768) —
+whisper's native 1500 frames padded to 1504 so the frame sequence divides
+the 16-way `model` axis (sequence-sharded attention; the stub frontend
+simply emits 4 trailing zero frames).
+12 heads do not divide tp=16 -> sequence-sharded attention path.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="whisper-small",
+    family="audio",
+    d_model=768,
+    vocab_size=51865,
+    period="A",
+    n_periods=12,                # decoder layers
+    n_heads=12,
+    n_kv_heads=12,
+    d_ff=3072,
+    mlp_act="gelu",
+    is_encoder_decoder=True,
+    n_encoder_layers=12,
+    encoder_frames=1504,   # 1500 padded to a multiple of tp=16 (see docstring)
+    frontend="audio_frames",
+    citation="arXiv:2212.04356",
+)

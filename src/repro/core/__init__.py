@@ -1,0 +1,29 @@
+"""Core library: the paper's contribution (ADC-DGD) and its substrate.
+
+Public surface:
+  topology     — mixing matrices W and their spectral properties
+  compression  — unbiased stochastic compression operators (Definition 1)
+  problems     — consensus optimization test problems
+  consensus    — ADC-DGD + baselines, single-process reference
+  distributed  — shard_map/pjit distributed runtime for ADC-DGD
+  theory       — rate/error-ball predictions for validation
+"""
+from . import compression, consensus, problems, theory, topology  # noqa: F401
+
+from .compression import (  # noqa: F401
+    Compressor,
+    IdentityCompressor,
+    Int8BlockQuantizer,
+    QuantizationSparsifier,
+    RandomizedRounding,
+    TernaryCompressor,
+)
+from .consensus import ADCDGD, DGD, CentralizedGD, CompressedDGD, DGDt, StepSize, run  # noqa: F401
+from .problems import (  # noqa: F401
+    ConsensusProblem,
+    paper_2node,
+    paper_4node,
+    paper_circle_problem,
+    quadratic_problem,
+)
+from .topology import MixingMatrix, fully_connected, paper_fig3, ring, torus  # noqa: F401

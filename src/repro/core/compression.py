@@ -1,0 +1,237 @@
+"""Unbiased stochastic compression operators (paper Definition 1).
+
+Every operator ``C`` here satisfies  C(z) = z + eps_z  with  E[eps_z] = 0 and
+E[eps_z^2] <= sigma^2  per element — the exact contract the paper's
+convergence theory requires.  Implemented operators:
+
+  * ``RandomizedRounding``     — paper Example 2 (Alistarh et al. QSGD-style
+                                 randomized rounding to the integer grid),
+                                 generalized to an arbitrary grid step
+                                 (paper Example 1, the low-precision
+                                 quantizer, is the special case of a uniform
+                                 partition with spacing ``delta``).
+  * ``QuantizationSparsifier`` — paper Example 3 (value is pushed to the next
+                                 grid level or to zero; yields sparsity).
+  * ``TernaryCompressor``      — TernGrad-like {-1, 0, +1} * scale, unbiased
+                                 (paper reference [26]).
+  * ``Int8BlockQuantizer``     — the production *wire format*: stochastic
+                                 rounding to int8 codes with one fp32 scale
+                                 per block.  ``mode='fixed'`` keeps the grid
+                                 step constant (paper-faithful: amplification
+                                 k^gamma genuinely shrinks the effective
+                                 noise); ``mode='adaptive'`` rescales per
+                                 block to max|z| (production default; noise
+                                 is relative, decaying with ||y||).
+  * ``IdentityCompressor``     — sigma = 0; ADC-DGD with it must reproduce
+                                 exact DGD bit-for-bit (tested).
+
+All operators are pure jittable functions of ``(key, z)`` and also expose the
+(codes, scales) wire representation so the distributed runtime can transmit
+compressed payloads over collectives.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "Compressor",
+    "IdentityCompressor",
+    "RandomizedRounding",
+    "QuantizationSparsifier",
+    "TernaryCompressor",
+    "Int8BlockQuantizer",
+    "by_name",
+]
+
+
+class Compressor:
+    """Base interface. Subclasses are frozen dataclasses (hashable, static)."""
+
+    #: nominal bits per element on the wire (for bytes accounting)
+    wire_bits: float = 32.0
+
+    def apply(self, key: jax.Array, z: jax.Array) -> jax.Array:
+        """Compress-then-decompress: returns z + eps (unbiased)."""
+        raise NotImplementedError
+
+    def sigma2(self, z: jax.Array | None = None) -> float:
+        """Per-element variance bound sigma^2 (may depend on scale of z)."""
+        raise NotImplementedError
+
+    def wire_bytes(self, n_elements: int) -> float:
+        return self.wire_bits * n_elements / 8.0
+
+
+@dataclasses.dataclass(frozen=True)
+class IdentityCompressor(Compressor):
+    wire_bits: float = 32.0
+
+    def apply(self, key, z):
+        del key
+        return z
+
+    def sigma2(self, z=None):
+        return 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class RandomizedRounding(Compressor):
+    """Stochastic rounding to the uniform grid {i * delta}.
+
+    [C(z)] = floor(z/d)*d + d * Bernoulli(frac(z/d));  E[C(z)] = z and
+    Var <= delta^2/4 per element (worst case at frac = 1/2).
+    Paper Examples 1 and 2 (Example 2 is delta = 1).
+    """
+
+    delta: float = 1.0
+    wire_bits: float = 16.0  # paper Section V stores codes as int16
+
+    def apply(self, key, z):
+        s = z / self.delta
+        lo = jnp.floor(s)
+        p_up = s - lo  # P[round up]
+        up = jax.random.bernoulli(key, p_up.astype(jnp.float32), shape=s.shape)
+        return (lo + up.astype(s.dtype)) * jnp.asarray(self.delta, z.dtype)
+
+    def codes(self, key, z):
+        """Integer wire codes (what actually gets transmitted)."""
+        s = z / self.delta
+        lo = jnp.floor(s)
+        p_up = s - lo
+        up = jax.random.bernoulli(key, p_up.astype(jnp.float32), shape=s.shape)
+        return (lo + up.astype(s.dtype)).astype(jnp.int32)
+
+    def decode(self, codes):
+        return codes.astype(jnp.float32) * self.delta
+
+    def sigma2(self, z=None):
+        return self.delta**2 / 4.0
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizationSparsifier(Compressor):
+    """Paper Example 3: push |z| up to the next level w.p. z/level, else 0.
+
+    Uniform m-level partition of the ball B(0, M): a_i = i*M/m. For
+    a_i <= |z| < a_{i+1}:  C(z) = sign(z)*a_{i+1} w.p. |z|/a_{i+1}, else 0.
+    Unbiased; produces many exact zeros => sparse wire encoding.
+    """
+
+    m_levels: int = 16
+    big_m: float = 1.0  # M, the assumed bound on |z_i|
+    wire_bits: float = 8.0  # level index + sign, sparsely encoded
+
+    def apply(self, key, z):
+        a = self.big_m / self.m_levels  # level spacing
+        mag = jnp.abs(z)
+        # next level above |z| (level a_{i+1}); clamp into the partition
+        upper = jnp.minimum(jnp.ceil(mag / a), self.m_levels) * a
+        upper = jnp.maximum(upper, a)  # |z| in [0, a) -> level a
+        p_keep = jnp.where(upper > 0, mag / upper, 0.0)
+        keep = jax.random.bernoulli(key, p_keep.astype(jnp.float32), z.shape)
+        return jnp.sign(z) * upper * keep.astype(z.dtype)
+
+    def sigma2(self, z=None):
+        # worst case: |z| just below a level edge; var <= M*a/4 <= M^2/(4m)... use
+        # the coarse bound E[eps^2] <= upper*|z| <= M^2/m * m = M^2/4 safe bound:
+        return self.big_m**2 / 4.0
+
+
+@dataclasses.dataclass(frozen=True)
+class TernaryCompressor(Compressor):
+    """TernGrad (paper ref [26]): C(z) = s * sign(z) * Bernoulli(|z|/s).
+
+    s = max|z| is transmitted once per tensor; codes are 2-bit ternary.
+    """
+
+    wire_bits: float = 2.0
+
+    def apply(self, key, z):
+        s = jnp.maximum(jnp.max(jnp.abs(z)), 1e-30)
+        p = jnp.abs(z) / s
+        keep = jax.random.bernoulli(key, p.astype(jnp.float32), z.shape)
+        return s * jnp.sign(z) * keep.astype(z.dtype)
+
+    def sigma2(self, z=None):
+        if z is None:
+            return float("inf")  # scale-dependent
+        s = float(np.max(np.abs(z)))
+        return s**2 / 4.0
+
+
+@dataclasses.dataclass(frozen=True)
+class Int8BlockQuantizer(Compressor):
+    """Production wire format: stochastic int8 codes + per-block fp32 scale.
+
+    mode='adaptive': scale_b = max|z_b|/127 per block b (never overflows;
+        noise is *relative*).
+    mode='fixed':    scale = ``step`` (grid is constant; amplification by
+        k^gamma genuinely divides the effective noise — paper-faithful).
+        Codes are clamped to [-127, 127]; overflow fraction is exposed for
+        monitoring (paper Section IV-D worries precisely about this).
+
+    Wire cost: 8 bits/element + 32 bits/block.
+    """
+
+    block: int = 512
+    mode: str = "adaptive"  # 'adaptive' | 'fixed'
+    step: float = 1e-3      # grid step for mode='fixed'
+
+    @property
+    def wire_bits(self) -> float:  # type: ignore[override]
+        return 8.0 + 32.0 / self.block
+
+    # -- wire-level API ------------------------------------------------
+    def encode(self, key, z):
+        """Returns (codes int8 (nblocks, block), scales f32 (nblocks, 1), meta)."""
+        flat = z.reshape(-1)
+        n = flat.shape[0]
+        pad = (-n) % self.block
+        flat = jnp.pad(flat, (0, pad))
+        blocks = flat.reshape(-1, self.block).astype(jnp.float32)
+        if self.mode == "adaptive":
+            scales = jnp.maximum(jnp.max(jnp.abs(blocks), axis=1, keepdims=True), 1e-30) / 127.0
+        else:
+            scales = jnp.full((blocks.shape[0], 1), self.step, jnp.float32)
+        s = blocks / scales
+        lo = jnp.floor(s)
+        p_up = s - lo
+        up = jax.random.bernoulli(key, p_up, shape=s.shape)
+        q = lo + up.astype(jnp.float32)
+        overflow = jnp.mean((jnp.abs(q) > 127.0).astype(jnp.float32))
+        codes = jnp.clip(q, -127.0, 127.0).astype(jnp.int8)
+        return codes, scales, {"orig_shape": z.shape, "n": n, "overflow_frac": overflow}
+
+    def decode(self, codes, scales, meta):
+        flat = (codes.astype(jnp.float32) * scales).reshape(-1)[: meta["n"]]
+        return flat.reshape(meta["orig_shape"])
+
+    def apply(self, key, z):
+        codes, scales, meta = self.encode(key, z)
+        return self.decode(codes, scales, meta).astype(z.dtype)
+
+    def sigma2(self, z=None):
+        if self.mode == "fixed":
+            return self.step**2 / 4.0
+        if z is None:
+            return float("inf")  # relative; bounded by (max|z|/127)^2/4
+        s = float(np.max(np.abs(z))) / 127.0
+        return s**2 / 4.0
+
+
+def by_name(name: str, **kw) -> Compressor:
+    reg = {
+        "identity": IdentityCompressor,
+        "randomized_rounding": RandomizedRounding,
+        "sparsifier": QuantizationSparsifier,
+        "ternary": TernaryCompressor,
+        "int8": Int8BlockQuantizer,
+    }
+    if name not in reg:
+        raise KeyError(f"unknown compressor {name!r}; have {sorted(reg)}")
+    return reg[name](**kw)

@@ -1,0 +1,380 @@
+"""Consensus algorithms: ADC-DGD (the paper's contribution) and baselines.
+
+Single-process *reference* implementations operating on stacked node states
+``x`` of shape ``(N, P)``.  These are the oracles against which the
+distributed (shard_map) runtime in :mod:`repro.core.distributed` and the
+Pallas wire-format kernels are validated, and they power the paper-figure
+benchmarks.
+
+Implemented algorithms:
+
+  * ``ADCDGD``          — Algorithm 2: amplified-differential compression.
+  * ``DGD``             — Algorithm 1 (Nedic & Ozdaglar), no compression.
+  * ``DGDt``            — DGD^t (Berahas et al. [21]): t consensus steps per
+                          gradient step.
+  * ``CompressedDGD``   — Eq. (5): DGD with *directly* compressed exchanges.
+                          Provably non-convergent; reproduced as the paper's
+                          Fig. 1 negative result.
+  * ``CentralizedGD``   — single-machine gradient descent on the global f
+                          (upper-bound reference).
+
+Every algorithm is a frozen dataclass with ``init(problem)`` and a jittable
+``step(state, problem, key) -> (state, metrics)``; ``run()`` drives them with
+``lax.scan`` and collects the paper's metrics (objective at the mean iterate,
+global gradient norm, consensus error, cumulative wire bytes, max transmitted
+magnitude).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .compression import Compressor, IdentityCompressor
+from .problems import ConsensusProblem
+from .topology import MixingMatrix
+
+__all__ = [
+    "StepSize",
+    "ADCDGD",
+    "DGD",
+    "DGDt",
+    "CompressedDGD",
+    "CentralizedGD",
+    "run",
+    "by_name",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class StepSize:
+    """alpha_k = alpha0 / k^eta  (eta = 0 -> constant step-size)."""
+
+    alpha0: float
+    eta: float = 0.0
+
+    def __call__(self, k):
+        return self.alpha0 / jnp.maximum(1.0, k) ** self.eta
+
+
+def _per_node_keys(key: jax.Array, n: int) -> jax.Array:
+    return jax.random.split(key, n)
+
+
+class _Algorithm:
+    """Interface: see module docstring."""
+
+    name: str = "algorithm"
+
+    def init(self, problem: ConsensusProblem) -> dict[str, Any]:
+        raise NotImplementedError
+
+    def step(self, state, problem: ConsensusProblem, key: jax.Array):
+        raise NotImplementedError
+
+    def bytes_per_iteration(self, problem: ConsensusProblem) -> float:
+        """Total wire bytes per iteration over the whole network.
+
+        Each node broadcasts one message per iteration; every undirected
+        edge carries it in both directions -> 2*E messages of P elements.
+        """
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class ADCDGD(_Algorithm):
+    """Amplified-Differential Compression DGD (paper Algorithm 2).
+
+    Per iteration k (k = 1, 2, ...):
+        y_i,k   = x_i,k - xt_i,k-1                (local differential)
+        d_i,k   = C(k^gamma * y_i,k)              (amplified, compressed, sent)
+        xt_j,k  = xt_j,k-1 + d_j,k / k^gamma      (receiver-side integration)
+        x_i,k+1 = sum_j W_ij xt_j,k - alpha_k grad f_i(x_i,k)
+
+    The amplification turns the per-step compression noise into
+    eps/k^gamma — zero mean, variance sigma^2/k^(2gamma) -> 0 for
+    gamma > 1/2 (paper Eq. (8)): a variance-reduction scheme.
+    """
+
+    mixing: MixingMatrix
+    compressor: Compressor
+    stepsize: StepSize
+    gamma: float = 1.0
+    name: str = "adc_dgd"
+
+    def init(self, problem, x0: jax.Array | None = None):
+        n, p = self.mixing.n, problem.dim
+        assert n == problem.n_nodes, (n, problem.n_nodes)
+        if x0 is None:
+            x0 = jnp.zeros((n, p))
+        # Paper init: x_{i,0} = xt_{i,0} = 0; x_{i,1} = -alpha_1 grad f_i(x_{i,0}).
+        # Generalized: start all nodes at the shared x0 (zero-cost agreement),
+        # take the first gradient step; xt stays at x0.
+        g0 = problem.grad_fn(x0)
+        x1 = x0 - self.stepsize(jnp.asarray(1.0)) * g0
+        return {
+            "x": x1,
+            "x_tilde": x0,
+            "k": jnp.asarray(1, jnp.int32),
+        }
+
+    def step(self, state, problem, key):
+        w = jnp.asarray(self.mixing.w)
+        k = state["k"].astype(jnp.float32)
+        kg = k**self.gamma
+        y = state["x"] - state["x_tilde"]                     # (N, P)
+        amplified = kg * y
+        keys = _per_node_keys(key, self.mixing.n)
+        d = jax.vmap(self.compressor.apply)(keys, amplified)  # transmitted
+        x_tilde = state["x_tilde"] + d / kg
+        grads = problem.grad_fn(state["x"])
+        alpha = self.stepsize(k)
+        x_next = w @ x_tilde - alpha * grads
+        metrics = {
+            "max_transmitted": jnp.max(jnp.abs(d)),           # paper Fig. 8
+            "alpha": alpha,
+        }
+        return {"x": x_next, "x_tilde": x_tilde, "k": state["k"] + 1}, metrics
+
+    def bytes_per_iteration(self, problem):
+        msgs = 2 * self.mixing.n_edges  # one broadcast per node per edge-direction
+        return msgs * self.compressor.wire_bytes(problem.dim)
+
+
+@dataclasses.dataclass(frozen=True)
+class DGD(_Algorithm):
+    """Original DGD (paper Algorithm 1): x <- W x - alpha_k grad f(x)."""
+
+    mixing: MixingMatrix
+    stepsize: StepSize
+    name: str = "dgd"
+    #: bytes per transmitted element (paper stores uncompressed as double)
+    elem_bytes: float = 8.0
+
+    def init(self, problem, x0: jax.Array | None = None):
+        n, p = self.mixing.n, problem.dim
+        if x0 is None:
+            x0 = jnp.zeros((n, p))
+        g0 = problem.grad_fn(x0)
+        x1 = x0 - self.stepsize(jnp.asarray(1.0)) * g0
+        return {"x": x1, "k": jnp.asarray(1, jnp.int32)}
+
+    def step(self, state, problem, key):
+        del key
+        w = jnp.asarray(self.mixing.w)
+        k = state["k"].astype(jnp.float32)
+        alpha = self.stepsize(k)
+        grads = problem.grad_fn(state["x"])
+        x_next = w @ state["x"] - alpha * grads
+        return {"x": x_next, "k": state["k"] + 1}, {
+            "max_transmitted": jnp.max(jnp.abs(state["x"])),
+            "alpha": alpha,
+        }
+
+    def bytes_per_iteration(self, problem):
+        return 2 * self.mixing.n_edges * self.elem_bytes * problem.dim
+
+
+@dataclasses.dataclass(frozen=True)
+class DGDt(_Algorithm):
+    """DGD^t (Berahas et al. [21]): t consensus rounds per gradient step.
+
+    Effective mixing matrix W^t (beta^t mixing) at t-fold communication cost.
+    """
+
+    mixing: MixingMatrix
+    stepsize: StepSize
+    t: int = 3
+    name: str = "dgd_t"
+    elem_bytes: float = 8.0
+
+    def init(self, problem, x0=None):
+        return DGD(self.mixing, self.stepsize).init(problem, x0)
+
+    def step(self, state, problem, key):
+        del key
+        wt = jnp.asarray(np.linalg.matrix_power(self.mixing.w, self.t))
+        k = state["k"].astype(jnp.float32)
+        alpha = self.stepsize(k)
+        grads = problem.grad_fn(state["x"])
+        x_next = wt @ state["x"] - alpha * grads
+        return {"x": x_next, "k": state["k"] + 1}, {
+            "max_transmitted": jnp.max(jnp.abs(state["x"])),
+            "alpha": alpha,
+        }
+
+    def bytes_per_iteration(self, problem):
+        return self.t * 2 * self.mixing.n_edges * self.elem_bytes * problem.dim
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressedDGD(_Algorithm):
+    """DGD with *direct* compression (paper Eq. (5)) — does NOT converge.
+
+    x_i <- W_ii x_i + sum_{j != i} W_ij C(x_j) - alpha grad f_i(x_i).
+    The compression noise enters undamped each iteration, so the iterates
+    hover in a noise ball that never vanishes (paper Fig. 1).  (We even give
+    the baseline the advantage of using its own x_i uncompressed.)
+    """
+
+    mixing: MixingMatrix
+    compressor: Compressor
+    stepsize: StepSize
+    name: str = "compressed_dgd"
+
+    def init(self, problem, x0=None):
+        return DGD(self.mixing, self.stepsize).init(problem, x0)
+
+    def step(self, state, problem, key):
+        w = jnp.asarray(self.mixing.w)
+        n = self.mixing.n
+        k = state["k"].astype(jnp.float32)
+        alpha = self.stepsize(k)
+        keys = _per_node_keys(key, n)
+        cx = jax.vmap(self.compressor.apply)(keys, state["x"])  # broadcast C(x_j)
+        w_diag = jnp.diag(jnp.diag(w))
+        w_off = w - w_diag
+        grads = problem.grad_fn(state["x"])
+        x_next = w_diag @ state["x"] + w_off @ cx - alpha * grads
+        return {"x": x_next, "k": state["k"] + 1}, {
+            "max_transmitted": jnp.max(jnp.abs(cx)),
+            "alpha": alpha,
+        }
+
+    def bytes_per_iteration(self, problem):
+        return 2 * self.mixing.n_edges * self.compressor.wire_bytes(problem.dim)
+
+
+@dataclasses.dataclass(frozen=True)
+class CentralizedGD(_Algorithm):
+    """Classical gradient descent on the global objective (no network)."""
+
+    stepsize: StepSize
+    n_nodes: int = 1
+    name: str = "centralized_gd"
+
+    def init(self, problem, x0=None):
+        if x0 is None:
+            x0 = jnp.zeros((problem.n_nodes, problem.dim))
+        return {"x": x0, "k": jnp.asarray(1, jnp.int32)}
+
+    def step(self, state, problem, key):
+        del key
+        k = state["k"].astype(jnp.float32)
+        alpha = self.stepsize(k)
+        x_bar = jnp.mean(state["x"], axis=0)
+        g = problem.global_grad(x_bar) / problem.n_nodes
+        x_next = jnp.broadcast_to(x_bar - alpha * g, state["x"].shape)
+        return {"x": x_next, "k": state["k"] + 1}, {
+            "max_transmitted": jnp.asarray(0.0),
+            "alpha": alpha,
+        }
+
+    def bytes_per_iteration(self, problem):
+        return 0.0
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+def run(
+    algorithm: _Algorithm,
+    problem: ConsensusProblem,
+    n_steps: int,
+    key: jax.Array | int = 0,
+    x0: jax.Array | None = None,
+    log_every: int = 1,
+) -> dict[str, np.ndarray]:
+    """Run ``n_steps`` iterations with lax.scan; return stacked metrics.
+
+    Returned dict (np arrays of length n_steps//log_every):
+      obj        — global objective at the mean iterate f(x_bar)
+      grad_norm  — ||(1/N) sum_i grad f_i(x_bar)||   (paper's y-axis)
+      consensus  — ||x - 1 (x) x_bar||               (Theorem 1 metric)
+      max_tx     — max transmitted magnitude          (paper Fig. 8)
+      bytes      — cumulative wire bytes              (paper Fig. 6)
+      x_final    — final stacked iterate (N, P)
+    """
+    if isinstance(key, int):
+        key = jax.random.PRNGKey(key)
+    state = algorithm.init(problem, x0=x0)
+    bytes_per_iter = algorithm.bytes_per_iteration(problem)
+
+    def scan_step(carry, k_key):
+        state = carry
+        state, metrics = algorithm.step(state, problem, k_key)
+        x_bar = jnp.mean(state["x"], axis=0)
+        out = {
+            "obj": problem.global_obj(x_bar),
+            "grad_norm": jnp.linalg.norm(problem.global_grad(x_bar)) / problem.n_nodes,
+            "consensus": problem.consensus_error(state["x"]),
+            "max_tx": metrics["max_transmitted"],
+            "alpha": metrics["alpha"],
+        }
+        return state, out
+
+    keys = jax.random.split(key, n_steps)
+    state, traj = jax.lax.scan(scan_step, state, keys)
+    traj = jax.tree.map(np.asarray, traj)
+    sl = slice(log_every - 1, None, log_every)
+    result = {k: v[sl] for k, v in traj.items()}
+    result["bytes"] = bytes_per_iter * (np.arange(n_steps, dtype=np.float64) + 1)[sl]
+    result["x_final"] = np.asarray(state["x"])
+    return result
+
+
+def run_many(
+    algorithm: _Algorithm,
+    problem: ConsensusProblem,
+    n_steps: int,
+    n_trials: int,
+    seed: int = 0,
+    x0: jax.Array | None = None,
+) -> dict[str, np.ndarray]:
+    """Vectorized multi-trial run: vmap over PRNG keys, one trace total.
+
+    Returns metric arrays of shape (n_trials, n_steps) — the 100-trial means
+    of the paper's Figs. 7/8/10 without 100 retraces.
+    """
+    keys = jax.random.split(jax.random.PRNGKey(seed), n_trials)
+
+    def one(key):
+        state = algorithm.init(problem, x0=x0)
+
+        def scan_step(state, k_key):
+            state, metrics = algorithm.step(state, problem, k_key)
+            x_bar = jnp.mean(state["x"], axis=0)
+            out = {
+                "obj": problem.global_obj(x_bar),
+                "grad_norm": jnp.linalg.norm(problem.global_grad(x_bar)) / problem.n_nodes,
+                "consensus": problem.consensus_error(state["x"]),
+                "max_tx": metrics["max_transmitted"],
+            }
+            return state, out
+
+        ks = jax.random.split(key, n_steps)
+        _, traj = jax.lax.scan(scan_step, state, ks)
+        return traj
+
+    traj = jax.jit(jax.vmap(one))(keys)
+    return jax.tree.map(np.asarray, traj)
+
+
+def by_name(name: str, mixing: MixingMatrix, stepsize: StepSize,
+            compressor: Compressor | None = None, **kw) -> _Algorithm:
+    if name == "adc_dgd":
+        return ADCDGD(mixing, compressor or IdentityCompressor(), stepsize, **kw)
+    if name == "dgd":
+        return DGD(mixing, stepsize)
+    if name == "dgd_t":
+        return DGDt(mixing, stepsize, **kw)
+    if name == "compressed_dgd":
+        return CompressedDGD(mixing, compressor or IdentityCompressor(), stepsize)
+    if name == "centralized_gd":
+        return CentralizedGD(stepsize)
+    raise KeyError(f"unknown algorithm {name!r}")

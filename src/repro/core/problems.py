@@ -1,0 +1,192 @@
+"""Consensus optimization problems (paper Section III/V test functions).
+
+A problem bundles per-node local objectives f_i and their gradients in a
+vectorized, jit-friendly form operating on stacked states ``x`` of shape
+``(N, P)`` (one row per node).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "ConsensusProblem",
+    "quadratic_problem",
+    "paper_2node",
+    "paper_4node",
+    "paper_circle_problem",
+    "decentralized_linear_regression",
+    "decentralized_logistic_regression",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ConsensusProblem:
+    """min_x sum_i f_i(x) in consensus form over N nodes, x in R^P."""
+
+    n_nodes: int
+    dim: int
+    #: (N, P) -> (N, P): per-node gradient of f_i evaluated at row i
+    grad_fn: Callable
+    #: (P,)    -> scalar: global objective f(x) = sum_i f_i(x)
+    global_obj: Callable
+    #: (P,)    -> (P,): gradient of the *global* objective at a single point
+    global_grad: Callable
+    #: known optimum (or None)
+    x_star: np.ndarray | None = None
+    name: str = "problem"
+
+    def mean_grad_norm(self, x_stack: jax.Array) -> jax.Array:
+        """|| (1/N) sum_i grad f_i(x_bar) || — the paper's convergence metric."""
+        x_bar = jnp.mean(x_stack, axis=0)
+        return jnp.linalg.norm(self.global_grad(x_bar) / self.n_nodes)
+
+    def consensus_error(self, x_stack: jax.Array) -> jax.Array:
+        """|| x - 1 (x) bar x ||  (Theorem 1 metric)."""
+        x_bar = jnp.mean(x_stack, axis=0, keepdims=True)
+        return jnp.linalg.norm(x_stack - x_bar)
+
+
+# ---------------------------------------------------------------------------
+# Quadratics (the paper's experiments are all of this family)
+# ---------------------------------------------------------------------------
+
+def quadratic_problem(a: np.ndarray, b: np.ndarray, name: str = "quadratic") -> ConsensusProblem:
+    """f_i(x) = sum_p a[i,p] * (x[p] - b[i,p])^2.
+
+    ``a`` may contain negative rows (non-convex local objectives, as in the
+    paper's four-node example where f_1(x) = -4x^2) as long as the *global*
+    sum stays strongly convex (sum_i a[i] > 0 per coordinate).
+    """
+    a = np.atleast_2d(np.asarray(a, dtype=np.float64))
+    b = np.atleast_2d(np.asarray(b, dtype=np.float64))
+    assert a.shape == b.shape
+    n, p = a.shape
+    a_sum = a.sum(axis=0)
+    if np.any(a_sum <= 0):
+        raise ValueError("global objective must be coercive: sum_i a_i > 0")
+    # global optimum of sum_i a_i (x-b_i)^2: x* = sum(a b)/sum(a)
+    x_star = (a * b).sum(axis=0) / a_sum
+
+    aj = jnp.asarray(a)
+    bj = jnp.asarray(b)
+
+    def grad_fn(x_stack, key=None):
+        del key
+        return 2.0 * aj * (x_stack - bj)
+
+    def global_obj(x):
+        return jnp.sum(aj * (x[None, :] - bj) ** 2)
+
+    def global_grad(x):
+        return jnp.sum(2.0 * aj * (x[None, :] - bj), axis=0)
+
+    return ConsensusProblem(
+        n_nodes=n, dim=p, grad_fn=grad_fn, global_obj=global_obj,
+        global_grad=global_grad, x_star=x_star, name=name,
+    )
+
+
+def paper_2node() -> ConsensusProblem:
+    """Fig. 1 motivating example: f1 = 4(x-2)^2, f2 = 2(x+3)^2 (x* = 2/3... ).
+
+    x* = (4*2 + 2*(-3)) / 6 = 1/3.
+    """
+    return quadratic_problem(a=[[4.0], [2.0]], b=[[2.0], [-3.0]], name="paper_2node")
+
+
+def paper_4node() -> ConsensusProblem:
+    """Section V-1 example: f1=-4x^2, f2=2(x-0.2)^2, f3=2(x+0.3)^2, f4=5(x-0.1)^2.
+
+    f1 is non-convex; the sum 5x^2 + ... is strongly convex.
+    x* = (0 + 2*0.2 - 2*0.3 + 5*0.1)/(-4+2+2+5) = 0.3/5 = 0.06.
+    """
+    return quadratic_problem(
+        a=[[-4.0], [2.0], [2.0], [5.0]],
+        b=[[0.0], [0.2], [-0.3], [0.1]],
+        name="paper_4node",
+    )
+
+
+def paper_circle_problem(n: int, seed: int = 0, dim: int = 1) -> ConsensusProblem:
+    """Section V-3: f_i = a_i (x-b_i)^2, a~U[0,10], b~U[0,1], circle graph."""
+    rng = np.random.default_rng(seed)
+    a = rng.uniform(0.0, 10.0, size=(n, dim))
+    b = rng.uniform(0.0, 1.0, size=(n, dim))
+    return quadratic_problem(a, b, name=f"paper_circle{n}")
+
+
+# ---------------------------------------------------------------------------
+# Decentralized ML problems (high-dimensional; the paper's motivation)
+# ---------------------------------------------------------------------------
+
+def decentralized_linear_regression(
+    n_nodes: int, dim: int, samples_per_node: int = 64, seed: int = 0, noise: float = 0.01,
+) -> ConsensusProblem:
+    """f_i(x) = (1/2m) ||A_i x - y_i||^2 with a shared ground-truth x_true."""
+    rng = np.random.default_rng(seed)
+    x_true = rng.normal(size=(dim,)) / np.sqrt(dim)
+    A = rng.normal(size=(n_nodes, samples_per_node, dim)) / np.sqrt(dim)
+    y = A @ x_true + noise * rng.normal(size=(n_nodes, samples_per_node))
+    Aj, yj = jnp.asarray(A), jnp.asarray(y)
+    m = samples_per_node
+
+    def grad_fn(x_stack, key=None):
+        del key
+        resid = jnp.einsum("nmd,nd->nm", Aj, x_stack) - yj
+        return jnp.einsum("nmd,nm->nd", Aj, resid) / m
+
+    def global_obj(x):
+        r = jnp.einsum("nmd,d->nm", Aj, x) - yj
+        return 0.5 * jnp.sum(r * r) / m
+
+    def global_grad(x):
+        r = jnp.einsum("nmd,d->nm", Aj, x) - yj
+        return jnp.einsum("nmd,nm->d", Aj, r) / m
+
+    # closed-form optimum of the global least squares
+    A2 = A.reshape(-1, dim)
+    y2 = y.reshape(-1)
+    x_star, *_ = np.linalg.lstsq(A2, y2, rcond=None)
+    return ConsensusProblem(
+        n_nodes=n_nodes, dim=dim, grad_fn=grad_fn, global_obj=global_obj,
+        global_grad=global_grad, x_star=x_star, name=f"linreg{n_nodes}x{dim}",
+    )
+
+
+def decentralized_logistic_regression(
+    n_nodes: int, dim: int, samples_per_node: int = 64, seed: int = 0, l2: float = 1e-3,
+) -> ConsensusProblem:
+    """Binary logistic regression with l2; smooth, strongly convex global f."""
+    rng = np.random.default_rng(seed)
+    w_true = rng.normal(size=(dim,))
+    A = rng.normal(size=(n_nodes, samples_per_node, dim))
+    logits = A @ w_true
+    labels = (rng.uniform(size=logits.shape) < 1.0 / (1.0 + np.exp(-logits))).astype(np.float64)
+    Aj = jnp.asarray(A)
+    yj = jnp.asarray(labels)
+    m = samples_per_node
+
+    def _local_loss(x_row, Ai, yi):
+        z = Ai @ x_row
+        return jnp.mean(jnp.logaddexp(0.0, z) - yi * z) + 0.5 * l2 * jnp.sum(x_row**2)
+
+    def grad_fn(x_stack, key=None):
+        del key
+        g = jax.vmap(jax.grad(_local_loss))(x_stack, Aj, yj)
+        return g
+
+    def global_obj(x):
+        z = jnp.einsum("nmd,d->nm", Aj, x)
+        per = jnp.logaddexp(0.0, z) - yj * z
+        return jnp.sum(jnp.mean(per, axis=1)) + 0.5 * l2 * len(A) * jnp.sum(x**2)
+
+    global_grad = jax.grad(global_obj)
+    return ConsensusProblem(
+        n_nodes=n_nodes, dim=dim, grad_fn=grad_fn, global_obj=global_obj,
+        global_grad=global_grad, x_star=None, name=f"logreg{n_nodes}x{dim}",
+    )

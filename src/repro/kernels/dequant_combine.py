@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: fused dequantize + x_tilde integrate + ring combine.
+
+The receive side of the ADC-DGD exchange.  Per parameter-shard block row:
+
+    x_tilde' = x_tilde + deamp * codes_self * scale_self
+    m_agg'   = m_agg  + w_side * deamp * (dec(left) + dec(right))
+    combined = w_self * x_tilde' + m_agg'
+
+Unfused, this is 3 int8 dequant reads + 2 fp32 state updates + 1 weighted
+combine = 8 HBM round trips over the full parameter shard; fused it is one
+pass (3 int8 + 2 fp32 reads, 3 fp32 writes) — the memory-roofline win is
+~2.2x on the consensus step (see EXPERIMENTS.md §Perf).
+
+TPU mapping: pure VPU elementwise tile (TILE_N, BLOCK) fp32 = 64 KiB in
+VMEM x 5 operands + 3 results; int8 tiles in (32, 128) packing.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .quantize import BLOCK, TILE_N, _align_vma, _out_vma
+
+__all__ = ["dequant_combine_pallas"]
+
+
+def _kernel(w_ref, cs_ref, ss_ref, cl_ref, sl_ref, cr_ref, sr_ref,
+            xt_ref, m_ref, xt_out_ref, m_out_ref, comb_ref):
+    w_self = w_ref[0]
+    w_side = w_ref[1]
+    deamp = w_ref[2]
+    d_self = cs_ref[...].astype(jnp.float32) * ss_ref[...]
+    d_l = cl_ref[...].astype(jnp.float32) * sl_ref[...]
+    d_r = cr_ref[...].astype(jnp.float32) * sr_ref[...]
+    x_t = xt_ref[...] + deamp * d_self
+    m = m_ref[...] + w_side * deamp * (d_l + d_r)
+    xt_out_ref[...] = x_t
+    m_out_ref[...] = m
+    comb_ref[...] = w_self * x_t + m
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dequant_combine_pallas(codes_self, scale_self, codes_left, scale_left,
+                           codes_right, scale_right, x_tilde, m_agg,
+                           w_self, w_side, deamp, interpret: bool = True):
+    """All array args (n_blocks, BLOCK) / scales (n_blocks, 1).
+
+    Returns (x_tilde', m_agg', combined).
+    """
+    n, b = x_tilde.shape
+    assert n % TILE_N == 0 and b % 128 == 0, (n, b)
+    grid = (n // TILE_N,)
+    row = pl.BlockSpec((TILE_N, b), lambda i: (i, 0))
+    scal = pl.BlockSpec((TILE_N, 1), lambda i: (i, 0))
+    w = jnp.stack([jnp.asarray(w_self, jnp.float32),
+                   jnp.asarray(w_side, jnp.float32),
+                   jnp.asarray(deamp, jnp.float32)])
+    (w, codes_self, scale_self, codes_left, scale_left, codes_right,
+     scale_right, x_tilde, m_agg) = _align_vma(
+        w, codes_self, scale_self, codes_left, scale_left, codes_right,
+        scale_right, x_tilde, m_agg)
+    vma_kw = _out_vma(w, codes_self, x_tilde)
+    out_shape = tuple(jax.ShapeDtypeStruct((n, b), jnp.float32, **vma_kw)
+                      for _ in range(3))
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY),
+                  row, scal, row, scal, row, scal, row, row],
+        out_specs=(row, row, row),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(w, codes_self, scale_self, codes_left, scale_left, codes_right,
+      scale_right, x_tilde, m_agg)

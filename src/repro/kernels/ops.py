@@ -1,0 +1,81 @@
+"""Jit'd wrappers dispatching between the Pallas kernels and the jnp oracle.
+
+The public API works on arbitrary 1-D (already flattened + padded) parameter
+shards; padding/blocking is handled here so callers (core.distributed) stay
+shape-agnostic.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .dequant_combine import dequant_combine_pallas
+from .gqa_decode import gqa_decode_pallas
+from .quantize import BLOCK, TILE_N, quantize_blocks_pallas
+
+__all__ = ["blockify", "unblockify", "quantize_blocks", "dequant_combine",
+           "gqa_decode", "BLOCK", "padded_block_rows"]
+
+
+def padded_block_rows(n_elements: int, block: int = BLOCK,
+                      tile_n: int = TILE_N) -> int:
+    rows = math.ceil(max(n_elements, 1) / block)
+    return int(math.ceil(rows / tile_n) * tile_n)
+
+
+def blockify(flat: jax.Array, block: int = BLOCK) -> jax.Array:
+    """1-D -> (n_rows, block) zero-padded, rows padded to TILE_N."""
+    n = flat.shape[0]
+    rows = padded_block_rows(n, block)
+    pad = rows * block - n
+    return jnp.pad(flat, (0, pad)).reshape(rows, block)
+
+
+def unblockify(blocks: jax.Array, n: int) -> jax.Array:
+    return blocks.reshape(-1)[:n]
+
+
+def _vma_carrying(*arrays) -> bool:
+    """True when any input is vma-varying (i.e. we are inside a shard_map
+    with check_vma=True).  jax 0.8.2's *interpret-mode* pallas executor
+    cannot replay kernel jaxprs on vma-typed values (out buffers and sliced
+    blocks are re-created without vma, so every binop fails type-checking),
+    so the jit'd wrappers fall back to the bit-identical jnp reference there.
+    On a real TPU (interpret=False) kernel avals are vma-stripped by design
+    and the pallas path is used unconditionally."""
+    return any(getattr(jax.typeof(a), "vma", None) for a in arrays)
+
+
+def quantize_blocks(y_blocks: jax.Array, noise: jax.Array,
+                    fixed_step=None, use_pallas: bool = False):
+    """(rows, BLOCK) f32 -> (codes int8, scales f32 (rows,1))."""
+    if use_pallas and not _vma_carrying(y_blocks, noise):
+        return quantize_blocks_pallas(y_blocks, noise, fixed_step=fixed_step)
+    return ref.quantize_blocks_ref(y_blocks, noise, fixed_step=fixed_step)
+
+
+def gqa_decode(q, k, v, valid, softcap=None, use_pallas: bool = False):
+    """Flash-decode partials (m, l, acc) over a KV-cache shard.
+
+    q: (b, kvh, g, hd); k/v: (b, S, kvh, hd); valid: (S,).  S must be a
+    multiple of TILE_S for the pallas path; the ref path is shape-free."""
+    if use_pallas and not _vma_carrying(q, k, v) \
+            and k.shape[1] % 512 == 0:
+        return gqa_decode_pallas(q, k, v, valid, softcap=softcap)
+    return ref.gqa_decode_ref(q, k, v, valid, softcap=softcap)
+
+
+def dequant_combine(codes_self, scale_self, codes_left, scale_left,
+                    codes_right, scale_right, x_tilde, m_agg,
+                    w_self, w_side, deamp, use_pallas: bool = False):
+    if use_pallas and not _vma_carrying(codes_self, x_tilde, m_agg):
+        return dequant_combine_pallas(
+            codes_self, scale_self, codes_left, scale_left, codes_right,
+            scale_right, x_tilde, m_agg, w_self, w_side, deamp)
+    return ref.dequant_combine_ref(
+        codes_self, scale_self, codes_left, scale_left, codes_right,
+        scale_right, x_tilde, m_agg, w_self, w_side, deamp)

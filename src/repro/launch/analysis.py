@@ -1,0 +1,147 @@
+"""Compiled-artifact analysis: collective bytes, roofline terms.
+
+This container has no TPU; the "profile" is the compiled HLO + XLA cost
+analysis.  Hardware model (TPU v5e): 197 TFLOP/s bf16 per chip, 819 GB/s
+HBM, ~50 GB/s/link ICI.
+
+Roofline terms per (arch x shape x mesh), all in seconds per step:
+
+  compute    = HLO_FLOPs / (chips * peak_flops)
+  memory     = HLO_bytes / (chips * hbm_bw)
+  collective = collective_bytes_per_chip / link_bw
+
+collective_bytes is not in cost_analysis(); we parse the post-optimization
+HLO and sum operand/output sizes of all-gather / all-reduce / reduce-scatter
+/ all-to-all / collective-permute ops with per-kind wire multipliers
+(documented below).  HLO shapes are per-chip (SPMD), so the parsed sizes are
+already per-device.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Any
+
+__all__ = ["HW", "collective_bytes", "roofline", "summarize_combo"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12        # bf16 per chip
+    hbm_bw: float = 819e9             # bytes/s per chip
+    link_bw: float = 50e9             # bytes/s per ICI link (per direction)
+
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+# bytes-on-wire multiplier per output byte, ring-algorithm estimates:
+#   all-gather: each chip receives (n-1)/n of the output ~ 1x output
+#   all-reduce: ring = 2x (reduce-scatter + all-gather), counted on output
+#   reduce-scatter: receives ~1x of the *input* ~ n x output; use input size
+#   all-to-all: ~1x size
+#   collective-permute: exactly 1x
+_WIRE_MULT = {
+    "all-gather": 1.0,
+    "all-reduce": 2.0,
+    "reduce-scatter": 1.0,   # applied to input size (parsed from operand)
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\w+\[[\d,]*\][^ ]*))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Per-kind wire bytes (per chip) parsed from post-optimization HLO."""
+    out: dict[str, float] = {k: 0.0 for k in _WIRE_MULT}
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(3)
+        if "-done(" in line:
+            continue  # started ops counted at -start
+        shape_str = m.group(1) or m.group(2) or ""
+        size = _shape_bytes(shape_str)
+        out[kind] += size * _WIRE_MULT[kind]
+    out["total"] = sum(v for k, v in out.items())
+    return out
+
+
+def roofline(flops: float, hbm_bytes: float, coll_bytes_per_chip: float,
+             chips: int, hw: HW = HW()) -> dict[str, float]:
+    """Three roofline terms (seconds).  flops/hbm_bytes are per-chip values
+    from cost_analysis (SPMD HLO is per-chip)."""
+    compute_s = flops / hw.peak_flops
+    memory_s = hbm_bytes / hw.hbm_bw
+    collective_s = coll_bytes_per_chip / hw.link_bw
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    terms["dominant"] = dominant
+    terms["bound_s"] = terms[dominant]
+    return terms
+
+
+def model_flops_per_step(n_active_params: float, tokens_per_step: float,
+                         kind: str = "train") -> float:
+    """MODEL_FLOPS = 6*N*D for training, 2*N*D for inference-forward."""
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_active_params * tokens_per_step
+
+
+def summarize_combo(arch: str, shape: str, mesh_name: str, chips: int,
+                    cost: dict, mem: Any, hlo_text: str,
+                    n_active_params: float, tokens_per_step: float,
+                    kind: str, extra: dict | None = None) -> dict:
+    from .hlo_cost import parse_hlo_cost
+    hc = parse_hlo_cost(hlo_text)
+    # trip-corrected static cost model (hlo_cost.py) is the source of truth;
+    # raw cost_analysis numbers are retained for reference (they undercount
+    # while-loop bodies).
+    flops = hc.flops
+    hbm = hc.hbm_bytes
+    rf = roofline(flops, hbm, hc.collective_bytes, chips)
+    mflops = model_flops_per_step(n_active_params, tokens_per_step, kind)
+    mflops_per_chip = mflops / chips
+    rec = {
+        "arch": arch, "shape": shape, "mesh": mesh_name, "chips": chips,
+        "hlo_flops_per_chip": flops,
+        "hlo_bytes_per_chip": hbm,
+        "collective_bytes_per_chip": hc.collective_bytes,
+        "collective_breakdown": hc.collective_breakdown,
+        "xla_cost_analysis_flops": float(cost.get("flops", 0.0)),
+        "xla_cost_analysis_bytes": float(cost.get("bytes accessed", 0.0)),
+        "unknown_trip_loops": hc.unknown_trip_loops,
+        **rf,
+        "model_flops_per_chip": mflops_per_chip,
+        "useful_flops_ratio": (mflops_per_chip / flops) if flops else 0.0,
+        "memory_analysis": str(mem),
+    }
+    if extra:
+        rec.update(extra)
+    return rec

@@ -1,0 +1,206 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh).
+
+The two lines above MUST stay the first statements in this module — jax
+locks the device count at first init, and the production meshes need 512
+placeholder devices (2 pods x 16 x 16).
+
+For every applicable (architecture x input shape) (DESIGN.md section 5) and
+both production meshes this script:
+
+  1. builds the distributed train_step (train_4k/prefill_32k) or serve_step
+     (decode shapes),
+  2. ``jax.jit(step, in_shardings=..).lower(**input_specs(...)).compile()``,
+  3. prints ``compiled.memory_analysis()`` (proves the per-chip footprint)
+     and ``compiled.cost_analysis()`` (FLOPs/bytes for §Roofline),
+  4. parses collective bytes from the optimized HLO,
+  5. appends the record to benchmarks/artifacts/dryrun/<combo>.json.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                 # everything
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh single   # one mesh
+  PYTHONPATH=src python -m repro.launch.dryrun --variant dgd_fp32  # baseline
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+
+def run_combo(arch_id: str, shape_name: str, multi_pod: bool,
+              out_dir: str, variant: str = "adc_int8",
+              consensus_nodes: int = 4, skip_existing: bool = True,
+              remat="full", serve_layout: str = "fsdp",
+              ssm_chunk: int | None = None, tag_suffix: str = "",
+              microbatches: int = 1):
+    import dataclasses as _dc
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config, input_specs, shape_applicable
+    from repro.launch.analysis import summarize_combo
+    from repro.launch.mesh import make_production_mesh
+    from repro.models.config import INPUT_SHAPES
+
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    tag = f"{arch_id}__{shape_name}__{mesh_name}__{variant}{tag_suffix}"
+    path = os.path.join(out_dir, tag + ".json")
+    if skip_existing and os.path.exists(path):
+        print(f"[skip existing] {tag}")
+        return json.load(open(path))
+
+    cfg = get_config(arch_id)
+    if ssm_chunk is not None and cfg.ssm_state:
+        cfg = _dc.replace(cfg, ssm_chunk=ssm_chunk)
+    shape = INPUT_SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        rec = {"arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+               "variant": variant, "skipped": True, "reason": why}
+        os.makedirs(out_dir, exist_ok=True)
+        json.dump(rec, open(path, "w"), indent=1)
+        print(f"[skip n/a] {tag}: {why}")
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    t0 = time.time()
+    print(f"[lower] {tag} ({chips} chips) ...", flush=True)
+
+    algo = {"adc_int8": "adc_dgd", "dgd_fp32": "dgd",
+            "allreduce": "allreduce"}[variant]
+
+    if shape.kind == "train":
+        from repro.launch.train import build_train_setup
+        remat_arg = {"full": True, "dots": "dots", "none": False}[remat] \
+            if isinstance(remat, str) else remat
+        setup = build_train_setup(
+            cfg, mesh, consensus_nodes=consensus_nodes, algorithm=algo,
+            optimizer="sgd", compute_dtype=jnp.bfloat16,
+            global_batch=shape.global_batch, remat=remat_arg,
+            microbatches=microbatches)
+        specs = input_specs(cfg, shape)
+        state_struct = {
+            "params": setup.state_shape["params"],
+            "opt": jax.eval_shape(setup.optimizer.init,
+                                  setup.state_shape["params"]),
+            "consensus": setup.state_shape["consensus"],
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+        lowered = setup.train_step.lower(state_struct, specs)
+        tokens_per_step = shape.global_batch * shape.seq_len
+        kind = "train"
+    elif shape.kind == "prefill":
+        from repro.launch.serve import build_prefill_setup
+        setup = build_prefill_setup(
+            cfg, mesh, global_batch=shape.global_batch,
+            seq_len=shape.seq_len, compute_dtype=jnp.bfloat16)
+        specs = input_specs(cfg, shape)
+        lowered = setup.prefill_step.lower(setup.params_shape, specs)
+        tokens_per_step = shape.global_batch * shape.seq_len
+        kind = "serve"
+    else:
+        from repro.launch.serve import build_serve_setup
+        setup = build_serve_setup(
+            cfg, mesh, global_batch=shape.global_batch,
+            capacity=shape.seq_len, compute_dtype=jnp.bfloat16,
+            cache_dtype=jnp.bfloat16,
+            long_serve=(shape_name == "long_500k"),
+            param_layout=serve_layout)
+        state_struct = setup.state_shape
+        lowered = setup.serve_step.lower(state_struct)
+        tokens_per_step = shape.global_batch  # ONE new token per sequence
+        kind = "serve"
+
+    t_lower = time.time() - t0
+    print(f"[compile] {tag} (lowered in {t_lower:.1f}s) ...", flush=True)
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost_list = compiled.cost_analysis()
+    cost = cost_list[0] if isinstance(cost_list, (list, tuple)) else cost_list
+    hlo = compiled.as_text()
+    print(mem)
+    print({k: v for k, v in cost.items()
+           if k in ("flops", "bytes accessed")})
+
+    rec = summarize_combo(
+        arch_id, shape_name, mesh_name, chips, cost, mem, hlo,
+        n_active_params=cfg.active_param_count(),
+        tokens_per_step=tokens_per_step, kind=kind,
+        extra={"variant": variant, "lower_s": t_lower,
+               "compile_s": t_compile,
+               "n_params": cfg.param_count(),
+               "n_active_params": cfg.active_param_count()})
+    os.makedirs(out_dir, exist_ok=True)
+    json.dump(rec, open(path, "w"), indent=1)
+    dom = rec["dominant"]
+    print(f"[done] {tag}: compute={rec['compute_s']*1e3:.2f}ms "
+          f"memory={rec['memory_s']*1e3:.2f}ms "
+          f"collective={rec['collective_s']*1e3:.2f}ms "
+          f"dominant={dom} useful={rec['useful_flops_ratio']:.2f} "
+          f"(compile {t_compile:.0f}s)", flush=True)
+    return rec
+
+
+def main():
+    from repro.configs import ARCH_IDS
+    from repro.models.config import INPUT_SHAPES
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--variant", default="adc_int8",
+                    choices=["adc_int8", "dgd_fp32", "allreduce"])
+    ap.add_argument("--out", default="benchmarks/artifacts/dryrun")
+    ap.add_argument("--nodes", type=int, default=4)
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--remat", default="full", choices=["full", "dots", "none"])
+    ap.add_argument("--serve-layout", default="fsdp",
+                    choices=["fsdp", "replicated"])
+    ap.add_argument("--ssm-chunk", type=int, default=None)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--tag-suffix", default="",
+                    help="artifact filename suffix for perf experiments")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(ARCH_IDS)
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                try:
+                    run_combo(arch, shape, multi, args.out,
+                              variant=args.variant,
+                              consensus_nodes=args.nodes,
+                              skip_existing=not args.force,
+                              remat=args.remat,
+                              serve_layout=args.serve_layout,
+                              ssm_chunk=args.ssm_chunk,
+                              tag_suffix=args.tag_suffix,
+                              microbatches=args.microbatches)
+                except Exception as e:  # noqa: BLE001 — report and continue
+                    failures.append((arch, shape, multi, repr(e)))
+                    print(f"[FAIL] {arch} {shape} multi={multi}: {e}")
+                    traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print("\nall dry-run combos lowered + compiled OK")
+
+
+if __name__ == "__main__":
+    main()

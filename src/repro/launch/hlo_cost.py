@@ -1,0 +1,251 @@
+"""Static cost model over post-optimization HLO text.
+
+``compiled.cost_analysis()`` does NOT multiply while-loop bodies by their
+trip counts, which makes it useless for scan-based models (a 30-period scan
+is under-counted 30x).  This walker parses the HLO module text, builds a
+per-computation cost (flops from dot ops, HBM bytes from fusion/op operand
++output sizes, per-kind collective wire bytes) and rolls them up through
+``while`` ops using the ``known_trip_count`` backend config.
+
+It is the roofline source of truth for this repo; EXPERIMENTS.md records
+both the raw cost_analysis numbers and these trip-corrected ones.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+__all__ = ["parse_hlo_cost", "HloCost"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+# instruction line:  %name = TYPE opcode(...operands...), attrs
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\([^()]*\)|[a-z0-9]+\[[\d,]*\][^\s]*)\s+([\w\-]+)\(")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->\s*.+\{\s*$")
+_CALLS_RE = re.compile(r"(?:calls|body|to_apply)=%?([\w.\-]+)")
+_COND_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP_RE = re.compile(r'known_trip_count[\\"]*:\s*\{[\\"]*n[\\"]*:[\\"]*(\d+)')
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# wire multiplier applied to the op's *output* bytes
+_WIRE_MULT = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+              "all-to-all": 1.0, "collective-permute": 1.0}
+
+# ops that generate no HBM traffic of their own
+_FREE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "bitcast-convert", "reshape", "after-all", "partition-id", "replica-id",
+    "get-dimension-size", "domain", "opt-barrier", "iota",
+}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> tuple[list[int], str] | None:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    return dims, m.group(1)
+
+
+@dataclasses.dataclass
+class _Comp:
+    name: str
+    flops: float = 0.0
+    bytes_: float = 0.0
+    coll: dict | None = None
+    # (callee, multiplier) edges: while bodies get trip, calls get 1
+    edges: list | None = None
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    collective_breakdown: dict
+    unknown_trip_loops: int
+
+
+def parse_hlo_cost(hlo_text: str, entry: str | None = None) -> HloCost:
+    comps: dict[str, _Comp] = {}
+    cur: _Comp | None = None
+    entry_name = None
+    shapes: dict[str, str] = {}
+    unknown_trips = 0
+
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        cm = _COMP_RE.match(line)
+        if cm:
+            cur = _Comp(name=cm.group(1), coll=defaultdict(float), edges=[])
+            comps[cur.name] = cur
+            if line.startswith("ENTRY"):
+                entry_name = cur.name
+            continue
+        if cur is None:
+            continue
+        im = _INSTR_RE.match(line)
+        if not im:
+            continue
+        name, type_str, op = im.group(1), im.group(2), im.group(3)
+        shapes[name] = type_str
+        out_bytes = _shape_bytes(type_str)
+
+        # --- control flow edges -----------------------------------------
+        if op == "while":
+            tm = _TRIP_RE.search(line)
+            trip = int(tm.group(1)) if tm else 1
+            if not tm:
+                unknown_trips += 1
+            bm = re.search(r"body=%?([\w.\-]+)", line)
+            if bm:
+                cur.edges.append((bm.group(1), trip))
+            cm2 = re.search(r"condition=%?([\w.\-]+)", line)
+            if cm2:
+                cur.edges.append((cm2.group(1), trip))
+            continue
+        if op == "conditional":
+            bm = _COND_BRANCHES_RE.search(line)
+            if bm:
+                branches = [b.strip().lstrip("%") for b in bm.group(1).split(",")]
+                # cost of a conditional ~ worst branch; approximate with max
+                # via a synthetic edge to each weighted 1/len is wrong; use 1.0
+                # on the largest later — simple: weight each branch by 1.0/len
+                for b in branches:
+                    cur.edges.append((b, 1.0 / max(len(branches), 1)))
+            continue
+        if op in ("fusion", "call", "custom-call", "reduce", "sort", "map",
+                  "scatter", "reduce-window", "select-and-scatter"):
+            for cal in _CALLS_RE.finditer(line):
+                callee = cal.group(1)
+                if op == "fusion":
+                    # fusion: HBM = operands + outputs at the fusion boundary;
+                    # flops come from dots inside the called computation.
+                    cur.edges.append((callee, ("flops_only", 1)))
+                else:
+                    cur.edges.append((callee, 1))
+
+        # --- HBM traffic ---------------------------------------------------
+        if op not in _FREE_OPS:
+            operand_bytes = 0
+            args = line[line.index("(") + 1:]
+            for om in _OPERAND_RE.finditer(args.split("),")[0]):
+                oname = om.group(1)
+                if oname in shapes:
+                    operand_bytes += _shape_bytes(shapes[oname])
+            cur.bytes_ += out_bytes + operand_bytes
+
+        # --- collectives ------------------------------------------------
+        for kind in _COLLECTIVES:
+            if op == kind or op == kind + "-start":
+                base = out_bytes
+                if kind == "reduce-scatter":
+                    # wire ~ input size: approximate via output * n? keep output
+                    base = out_bytes
+                cur.coll[kind] += base * _WIRE_MULT[kind]
+
+        # --- flops (dot) ---------------------------------------------------
+        if op == "dot":
+            sd = _shape_dims(type_str)
+            if sd is None:
+                continue
+            out_dims, _ = sd
+            k = 1
+            cmatch = _CONTRACT_RE.search(line)
+            ops_m = _OPERAND_RE.findall(line[line.index("("):])
+            if cmatch and ops_m:
+                lhs_shape = shapes.get(ops_m[0])
+                if lhs_shape:
+                    lhs_dims = _shape_dims(lhs_shape)
+                    if lhs_dims:
+                        for ci in cmatch.group(1).split(","):
+                            if ci:
+                                idx = int(ci)
+                                if idx < len(lhs_dims[0]):
+                                    k *= lhs_dims[0][idx]
+            n_out = 1
+            for d in out_dims:
+                n_out *= d
+            cur.flops += 2.0 * n_out * k
+        elif op == "convolution":
+            # rough: 2 * output elements * kernel elements (depthwise convs
+            # in this codebase are tiny)
+            sd = _shape_dims(type_str)
+            if sd:
+                n_out = 1
+                for d in sd[0]:
+                    n_out *= d
+                cur.flops += 2.0 * n_out * 4
+
+    # ---- roll up through the call graph (memoized) ----------------------
+    memo: dict[str, tuple[float, float, dict]] = {}
+    flops_memo: dict[str, float] = {}
+
+    def flops_of(name: str) -> float:
+        if name in flops_memo:
+            return flops_memo[name]
+        c = comps.get(name)
+        if c is None:
+            return 0.0
+        flops_memo[name] = 0.0  # cycle guard
+        total = c.flops
+        for callee, w in c.edges:
+            if isinstance(w, tuple):
+                w = w[1]
+            total += w * flops_of(callee)
+        flops_memo[name] = total
+        return total
+
+    def cost_of(name: str):
+        if name in memo:
+            return memo[name]
+        c = comps.get(name)
+        if c is None:
+            return (0.0, 0.0, {})
+        memo[name] = (0.0, 0.0, {})  # cycle guard
+        fl, by = c.flops, c.bytes_
+        coll = dict(c.coll)
+        for callee, w in c.edges:
+            if isinstance(w, tuple) and w[0] == "flops_only":
+                fl += w[1] * flops_of(callee)
+                continue
+            cf, cb, cc = cost_of(callee)
+            fl += w * cf
+            by += w * cb
+            for k2, v in cc.items():
+                coll[k2] = coll.get(k2, 0.0) + w * v
+        memo[name] = (fl, by, coll)
+        return memo[name]
+
+    root = entry or entry_name
+    if root is None and comps:
+        root = list(comps)[-1]
+    fl, by, coll = cost_of(root) if root else (0.0, 0.0, {})
+    total_coll = sum(coll.values())
+    return HloCost(flops=fl, hbm_bytes=by, collective_bytes=total_coll,
+                   collective_breakdown=dict(coll),
+                   unknown_trip_loops=unknown_trips)

@@ -1,0 +1,316 @@
+"""Distributed train-step builder + CLI training driver.
+
+``build_train_step`` assembles the full decentralized training step:
+
+    shard_map over the production mesh
+      ├─ per-device microbatch forward/backward (FSDP gather inside the
+      │  period scan; tensor-parallel collectives inside the model)
+      ├─ local optimizer step (per consensus node)
+      └─ ADC-DGD compressed consensus exchange (core.distributed)
+
+Storage layout / shardings come from the ParamDef trees (models.params).
+
+CLI:
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \
+      --algorithm adc_dgd --steps 50 --nodes 2 ...
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import functools
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.distributed import ConsensusConfig, ConsensusRuntime
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.models.params import (ParamDef, storage_partition_spec,
+                                 storage_shape_dtype)
+from repro.models.sharding import ParallelContext, make_context
+from repro.optim import by_name as opt_by_name
+from repro.optim.schedules import (constant_schedule, cosine_warmup_schedule,
+                                   inverse_power_schedule)
+
+__all__ = ["TrainSetup", "build_train_setup", "train_state_specs",
+           "batch_partition_spec", "main"]
+
+
+@dataclasses.dataclass
+class TrainSetup:
+    cfg: ModelConfig
+    ctx: ParallelContext
+    defs: T.ModelDefs
+    mesh: jax.sharding.Mesh
+    consensus: ConsensusRuntime
+    optimizer: Any
+    schedule: Any
+    compute_dtype: Any
+    train_step: Any          # jit'd (state, batch) -> (state, metrics)
+    state_shape: Any         # ShapeDtypeStructs of the train state
+    state_sharding: Any
+    batch_sharding: Any
+
+
+def _data_axes(ctx: ParallelContext) -> tuple[str, ...]:
+    return ("pod", "data") if ctx.pod_axis is not None else ("data",)
+
+
+def batch_partition_spec(ctx: ParallelContext, global_batch: int,
+                         extra_dims: int = 1) -> P:
+    """Batch sharded over (pod, data) when divisible, else replicated."""
+    axes = _data_axes(ctx)
+    if global_batch % ctx.dp == 0 and global_batch >= ctx.dp:
+        lead = axes if len(axes) > 1 else axes[0]
+        return P(lead, *([None] * extra_dims))
+    return P(*([None] * (extra_dims + 1)))
+
+
+def _param_specs(defs_tree, ctx: ParallelContext):
+    data_axes = _data_axes(ctx)
+    return jax.tree.map(
+        lambda d: storage_partition_spec(d, data_axes=data_axes),
+        defs_tree, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def _param_shapes(defs_tree, ctx: ParallelContext):
+    return jax.tree.map(
+        lambda d: storage_shape_dtype(d, ctx.tp, ctx.total_consensus_nodes,
+                                      ctx.fsdp),
+        defs_tree, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def train_state_specs(defs: T.ModelDefs, ctx: ParallelContext,
+                      consensus: ConsensusRuntime, optimizer):
+    """(ShapeDtypeStruct tree, PartitionSpec tree) for the full train state."""
+    p_shapes = _param_shapes(defs.storage, ctx)
+    p_specs = _param_specs(defs.storage, ctx)
+    state_shape = {"params": p_shapes, "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    state_spec = {"params": p_specs, "step": P()}
+    # consensus state mirrors params (fp32)
+    if consensus.cfg.algorithm == "adc_dgd":
+        f32 = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), p_shapes)
+        state_shape["consensus"] = {"x_tilde": f32, "m_agg": f32}
+        state_spec["consensus"] = {"x_tilde": p_specs, "m_agg": p_specs}
+    else:
+        state_shape["consensus"] = {}
+        state_spec["consensus"] = {}
+    # optimizer state mirrors params (structurally — see Optimizer.state_spec)
+    state_shape["opt"] = jax.eval_shape(optimizer.init, p_shapes)
+    state_spec["opt"] = optimizer.state_spec(p_specs)
+    return state_shape, state_spec
+
+
+def build_train_setup(
+    cfg: ModelConfig,
+    mesh: jax.sharding.Mesh,
+    *,
+    consensus_nodes: int = 4,
+    algorithm: str = "adc_dgd",
+    gamma: float = 1.0,
+    quant_mode: str = "fixed",
+    fixed_step0: float = 1e-3,
+    optimizer: str = "sgd",
+    schedule: str = "constant",
+    lr: float = 1e-2,
+    eta: float = 0.5,
+    warmup: int = 100,
+    total_steps: int = 1000,
+    compute_dtype=jnp.float32,
+    remat: bool | str = True,           # True | 'dots' | False (see model_apply)
+    use_pallas: bool = False,
+    track_consensus_error: bool = False,
+    global_batch: int | None = None,
+    seq_len: int | None = None,
+    microbatches: int = 1,              # gradient accumulation (activation
+                                        # memory / microbatches per step)
+) -> TrainSetup:
+    ctx = make_context(mesh, consensus_nodes)
+    defs = T.build_defs(cfg, ctx, dtype=compute_dtype)
+    ccfg = ConsensusConfig(
+        algorithm=algorithm, gamma=gamma, quant_mode=quant_mode,
+        fixed_step0=fixed_step0, use_pallas=use_pallas,
+        track_consensus_error=track_consensus_error)
+    consensus = ConsensusRuntime(ccfg, ctx)
+    opt = opt_by_name(optimizer)
+    if schedule == "constant":
+        sched = constant_schedule(lr)
+    elif schedule == "inverse_power":
+        sched = inverse_power_schedule(lr, eta)
+    else:
+        sched = cosine_warmup_schedule(lr, warmup, total_steps)
+
+    state_shape, state_spec = train_state_specs(defs, ctx, consensus, opt)
+    batch_spec = {
+        "tokens": batch_partition_spec(ctx, global_batch or ctx.dp),
+        "labels": batch_partition_spec(ctx, global_batch or ctx.dp),
+    }
+    if cfg.frontend == "audio_frames":
+        batch_spec["enc_frames"] = batch_partition_spec(
+            ctx, global_batch or ctx.dp, extra_dims=2)
+
+    def step_body(state, batch):
+        """Per-device code (inside shard_map)."""
+        k = state["step"] + 1
+
+        def loss_fn(params, mb):
+            return T.train_loss(params, defs, mb, ctx,
+                                compute_dtype=compute_dtype, remat=remat)
+
+        if microbatches > 1:
+            # gradient accumulation: scan over microbatch slices so only one
+            # microbatch's activations are live at a time (the section Perf
+            # memory-term lever for the biggest train combos)
+            def split(x):
+                b = x.shape[0]
+                assert b % microbatches == 0, (b, microbatches)
+                return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+            mbs = jax.tree.map(split, batch)
+
+            def mb_step(acc, mb):
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    state["params"], mb)
+                g_acc, l_acc = acc
+                return (jax.tree.map(jnp.add, g_acc, g), l_acc + l), None
+
+            # first microbatch outside the scan: its (grads, loss) carry the
+            # correct vma types for the scan carry (zeros would be invariant
+            # and fail the carry type check under check_vma=True)
+            (l0, _), g0 = jax.value_and_grad(loss_fn, has_aux=True)(
+                state["params"], jax.tree.map(lambda x: x[0], mbs))
+            (grads, loss), _ = jax.lax.scan(
+                mb_step, (g0, l0), jax.tree.map(lambda x: x[1:], mbs))
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss / microbatches
+            parts = None
+        else:
+            (loss, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                state["params"], batch)
+        # fsdp-transposed grads arrive summed over the node's microbatch
+        # shards; normalize to the node-mean objective f_i.
+        if ctx.fsdp > 1:
+            grads = jax.tree.map(lambda g: g / ctx.fsdp, grads)
+        lr_k = sched(k)
+        x_half, opt_state = opt.step(state["opt"], state["params"], grads, lr_k)
+        key = jax.random.fold_in(jax.random.PRNGKey(0), k)
+        x_next, cons_state, cmetrics = consensus.exchange(
+            state["params"], x_half, state["consensus"], k, key)
+        new_state = {"params": x_next, "opt": opt_state,
+                     "consensus": cons_state, "step": k}
+        # metrics: average over exactly the axes each value varies on
+        metrics = {"loss": ctx.mean_metric(loss), "lr": lr_k}
+        if parts is not None and cfg.router_aux_weight:
+            metrics["aux"] = ctx.mean_metric(parts["aux"])
+        for k2, v in cmetrics.items():
+            metrics[k2] = ctx.mean_metric(v)
+        return new_state, metrics
+
+    in_specs = (state_spec, batch_spec)
+    out_specs = (state_spec, {"loss": P(), "lr": P(),
+                              **({"aux": P()} if cfg.router_aux_weight and microbatches == 1 else {}),
+                              **({"overflow_frac": P()} if algorithm == "adc_dgd" else {}),
+                              **({"consensus_err": P()} if track_consensus_error else {})})
+
+    step_sm = jax.shard_map(step_body, mesh=mesh, in_specs=in_specs,
+                            out_specs=out_specs, check_vma=True)
+    train_step = jax.jit(step_sm, donate_argnums=(0,))
+
+    return TrainSetup(
+        cfg=cfg, ctx=ctx, defs=defs, mesh=mesh, consensus=consensus,
+        optimizer=opt, schedule=sched, compute_dtype=compute_dtype,
+        train_step=train_step, state_shape=state_shape,
+        state_sharding=jax.tree.map(
+            lambda s: NamedSharding(mesh, s), state_spec,
+            is_leaf=lambda x: isinstance(x, P)),
+        batch_sharding=jax.tree.map(
+            lambda s: NamedSharding(mesh, s), batch_spec,
+            is_leaf=lambda x: isinstance(x, P)),
+    )
+
+
+def init_train_state(setup: TrainSetup, key: jax.Array):
+    """Materialize a real train state (small configs / examples / tests)."""
+    from repro.models.params import materialize_storage_host
+    ctx = setup.ctx
+    host_params = materialize_storage_host(
+        setup.defs.storage, key, ctx.tp, ctx.total_consensus_nodes, ctx.fsdp)
+    params = jax.tree.map(jnp.asarray, host_params)
+    state = {
+        "params": params,
+        "opt": setup.optimizer.init(params),
+        "consensus": setup.consensus.init_state(params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    return jax.device_put(state, setup.state_sharding)
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def main(argv=None):
+    from repro.configs import get_config, reduced
+    from repro.data import SyntheticLMDataset
+    from repro.launch.mesh import make_cpu_mesh
+
+    ap = argparse.ArgumentParser(description="decentralized LM training")
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--reduced", action="store_true", help="smoke-size model")
+    ap.add_argument("--algorithm", default="adc_dgd",
+                    choices=["adc_dgd", "dgd", "compressed_dgd", "allreduce", "none"])
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--nodes", type=int, default=1)
+    ap.add_argument("--data", type=int, default=1)
+    ap.add_argument("--model", type=int, default=1)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-2)
+    ap.add_argument("--gamma", type=float, default=1.0)
+    ap.add_argument("--optimizer", default="sgd")
+    ap.add_argument("--schedule", default="constant")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    mesh = make_cpu_mesh(data=args.data, model=args.model)
+    setup = build_train_setup(
+        cfg, mesh, consensus_nodes=args.nodes, algorithm=args.algorithm,
+        optimizer=args.optimizer, schedule=args.schedule, lr=args.lr,
+        gamma=args.gamma, global_batch=args.batch, seq_len=args.seq,
+        microbatches=args.microbatches,
+        track_consensus_error=(args.algorithm != "allreduce"))
+    state = init_train_state(setup, jax.random.PRNGKey(0))
+    ds_kw = {}
+    if cfg.frontend == "audio_frames":
+        ds_kw = dict(enc_frames=cfg.encoder_frames, d_model=cfg.d_model)
+    ds = SyntheticLMDataset(cfg.vocab_size, args.seq, args.batch,
+                            n_shards=setup.ctx.dp, **ds_kw)
+
+    t0 = time.time()
+    for step in range(args.steps):
+        batch = jax.device_put(ds.global_batch_arrays(step), setup.batch_sharding)
+        state, metrics = setup.train_step(state, batch)
+        if step % max(1, args.steps // 10) == 0 or step == args.steps - 1:
+            m = jax.tree.map(float, metrics)
+            extra = " ".join(f"{k}={v:.4g}" for k, v in m.items() if k != "loss")
+            print(f"step {step:5d} loss={m['loss']:.4f} {extra}")
+        if (args.checkpoint_dir and args.checkpoint_every
+                and (step + 1) % args.checkpoint_every == 0):
+            from repro.checkpoint import save_checkpoint
+            save_checkpoint(args.checkpoint_dir, step + 1, jax.device_get(state))
+    print(f"done: {args.steps} steps in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,219 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) block in JAX.
+
+Chunked SSD algorithm for train/prefill (O(S) memory via lax.scan over
+chunks), exact recurrence for single-token decode.  SSM heads are sharded
+over the ``model`` axis (head-parallel); B/C projections use a single group
+(replicated compute, negligible FLOPs); the output projection psums over
+``model`` like any Megatron row-parallel matmul.
+
+State cache for decode:
+  conv  — last (conv_k - 1) inputs of the conv channels (b, k-1, conv_dim)
+  ssm   — (b, h_local, head_dim, N) recurrent state
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .params import ParamDef
+from .sharding import ParallelContext
+
+__all__ = ["mamba_defs", "mamba_forward"]
+
+
+def _dims(cfg: ModelConfig, ctx: ParallelContext):
+    d_in = cfg.d_inner
+    hd = cfg.ssm_head_dim
+    h = cfg.ssm_heads or d_in // hd
+    tp = max(ctx.tp, 1)
+    assert h % tp == 0, (h, tp)
+    return d_in, hd, h, h // tp, cfg.ssm_state
+
+
+def mamba_defs(cfg: ModelConfig, ctx: ParallelContext, dtype) -> dict[str, Any]:
+    d = cfg.d_model
+    d_in, hd, h, h_local, n = _dims(cfg, ctx)
+    k = cfg.ssm_conv
+    return {
+        # separate projections (z gate, x inner, B, C, dt) for clean TP
+        "w_z": ParamDef((d, d_in), tp_dim=1, fsdp_dim=0, dtype=dtype),
+        "w_x": ParamDef((d, d_in), tp_dim=1, fsdp_dim=0, dtype=dtype),
+        "w_b": ParamDef((d, n), tp_dim=None, fsdp_dim=0, dtype=dtype),
+        "w_c": ParamDef((d, n), tp_dim=None, fsdp_dim=0, dtype=dtype),
+        "w_dt": ParamDef((d, h), tp_dim=1, fsdp_dim=0, dtype=dtype),
+        "conv_x": ParamDef((k, d_in), tp_dim=1, fsdp_dim=0, scale=0.5, dtype=dtype),
+        "conv_b": ParamDef((k, n), tp_dim=None, fsdp_dim=0, scale=0.5, dtype=dtype),
+        "conv_c": ParamDef((k, n), tp_dim=None, fsdp_dim=0, scale=0.5, dtype=dtype),
+        "a_log": ParamDef((h,), tp_dim=None, fsdp_dim=0, init="zeros", dtype=jnp.float32),
+        "d_skip": ParamDef((h,), tp_dim=None, fsdp_dim=0, init="ones", dtype=jnp.float32),
+        "dt_bias": ParamDef((h,), tp_dim=None, fsdp_dim=0, init="zeros", dtype=jnp.float32),
+        "norm_w": ParamDef((d_in,), tp_dim=None, fsdp_dim=0, init="zeros", dtype=dtype),
+        "w_out": ParamDef((d_in, d), tp_dim=0, fsdp_dim=1, dtype=dtype),
+    }
+
+
+def _local_head_slice(arr: jax.Array, ctx: ParallelContext, h_local: int):
+    """Slice this rank's heads from a replicated (h,)-indexed array."""
+    if ctx.tp == 1:
+        return arr
+    r = ctx.tp_index()
+    return jax.lax.dynamic_slice_in_dim(arr, r * h_local, h_local, axis=-1)
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, cache: jax.Array | None):
+    """Depthwise causal conv1d.  x: (b, s, c), w: (k, c).
+
+    Returns (y, new_cache) with cache = last (k-1) inputs.
+    """
+    k = w.shape[0]
+    if cache is not None:
+        xc = jnp.concatenate([cache.astype(x.dtype), x], axis=1)
+    else:
+        xc = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    # y[t] = sum_j w[j] * xc[t + j]
+    y = jnp.zeros_like(x)
+    for j in range(k):
+        y = y + xc[:, j:j + x.shape[1], :] * w[j][None, None, :]
+    new_cache = xc[:, -(k - 1):, :] if k > 1 else None
+    return jax.nn.silu(y), new_cache
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """Lower-triangular pairwise sums: out[..., i, j] = sum_{j<k<=i} a[..., k].
+
+    a: (..., q) -> (..., q, q), -inf above diagonal.
+    """
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]          # sum_(j, i]
+    ii = jnp.arange(q)
+    mask = ii[:, None] >= ii[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def mamba_forward(p, x: jax.Array, cfg: ModelConfig, ctx: ParallelContext,
+                  mode: str = "train", cache: dict | None = None,
+                  ) -> tuple[jax.Array, dict | None]:
+    """x: (b, s, d) replicated over model.  Returns (out, new_cache)."""
+    b, s, d = x.shape
+    d_in, hd, h, h_local, n = _dims(cfg, ctx)
+    d_in_local = d_in // max(ctx.tp, 1)
+
+    z = x @ p["w_z"]                                    # (b,s,d_in_local)
+    xi = x @ p["w_x"]
+    bb = x @ p["w_b"]                                   # (b,s,n) replicated
+    cc = x @ p["w_c"]
+    dt = x @ p["w_dt"]                                  # (b,s,h_local)
+
+    dt_bias = _local_head_slice(p["dt_bias"], ctx, h_local)
+    a_log = _local_head_slice(p["a_log"], ctx, h_local)
+    d_skip = _local_head_slice(p["d_skip"], ctx, h_local)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + dt_bias)          # (b,s,hl)
+    a = -jnp.exp(a_log)                                             # (hl,)
+
+    conv_cache = cache.get("conv") if cache else None
+    cx = conv_cache["x"] if conv_cache else None
+    cb = conv_cache["b"] if conv_cache else None
+    ccc = conv_cache["c"] if conv_cache else None
+    xi, ncx = _causal_conv(xi, p["conv_x"], cx)
+    bb, ncb = _causal_conv(bb, p["conv_b"], cb)
+    cc, ncc = _causal_conv(cc, p["conv_c"], ccc)
+    new_conv = {"x": ncx, "b": ncb, "c": ncc}
+
+    xh = xi.reshape(b, s, h_local, hd).astype(jnp.float32)
+    bbf = bb.astype(jnp.float32)
+    ccf = cc.astype(jnp.float32)
+
+    if mode == "decode":
+        assert cache is not None and s == 1
+        ssm = cache["ssm"].astype(jnp.float32)          # (b, hl, hd, n)
+        dt1 = dt[:, 0]                                  # (b, hl)
+        da = jnp.exp(dt1 * a[None, :])                  # (b, hl)
+        dbx = jnp.einsum("bh,bn,bhp->bhpn", dt1, bbf[:, 0], xh[:, 0])
+        ssm_new = ssm * da[..., None, None] + dbx
+        y = jnp.einsum("bn,bhpn->bhp", ccf[:, 0], ssm_new)
+        y = y + d_skip[None, :, None] * xh[:, 0]
+        y = y.reshape(b, 1, d_in_local)
+        out, new_cache = _finish(p, y, z, x, ctx, cfg)
+        new_cache = {"ssm": ssm_new.astype(cache["ssm"].dtype), "conv": new_conv}
+        return out, new_cache
+
+    # ----- chunked SSD scan (train / prefill) --------------------------
+    q = min(cfg.ssm_chunk, s)
+    assert s % q == 0, (s, q)
+    nc = s // q
+    xc = xh.reshape(b, nc, q, h_local, hd)
+    bc = bbf.reshape(b, nc, q, n)
+    cc_ = ccf.reshape(b, nc, q, n)
+    dtc = dt.reshape(b, nc, q, h_local)
+    dac = dtc * a[None, None, None, :]                  # (b,nc,q,hl)
+
+    def chunk_step(ssm, inp):
+        xq, bq, cq, dtq, daq = inp                      # per-chunk slices
+        # within-chunk decay matrix L (b, hl, q, q)
+        L = jnp.exp(_segsum(daq.transpose(0, 2, 1)))    # (b,hl,q,q)
+        scores = jnp.einsum("bqn,bkn->bqk", cq, bq)     # (b,q,q)
+        # EXPLICITLY factorized contractions (section Perf, mamba2 train_4k):
+        # the naive 4-operand einsums let the contraction planner materialize
+        # (b,h,q,k,p)-scale intermediates — ~68 GB per chunk at the production
+        # shape.  Factor into elementwise weights + one k-contraction each.
+        w = L * scores[:, None]                          # (b,hl,q,k)
+        wd = w * dtq.transpose(0, 2, 1)[:, :, None, :]   # weight dt at k-pos
+        y_diag = jnp.einsum("bhqk,bkhp->bqhp", wd, xq)   # contract k only
+        # inter-chunk: contribution of incoming state
+        decay_in = jnp.exp(jnp.cumsum(daq, axis=1))      # (b,q,hl)
+        y_off = jnp.einsum("bqn,bhpn->bqhp", cq, ssm) * decay_in[..., None]
+        # state update: decay old state to end of chunk + new outer products
+        total = jnp.exp(jnp.sum(daq, axis=1))            # (b,hl)
+        decay_out = jnp.exp(jnp.sum(daq, axis=1)[:, None, :]
+                            - jnp.cumsum(daq, axis=1))   # decay from t to end
+        xw = xq * (decay_out * dtq)[..., None]           # (b,k,hl,p)
+        state_new = jnp.einsum("bkn,bkhp->bhpn", bq, xw)
+        ssm_next = ssm * total[..., None, None] + state_new
+        y = y_diag + y_off                               # (b,q,hl,p)
+        return ssm_next, y
+
+    if cache and cache.get("ssm") is not None:
+        ssm0 = cache["ssm"].astype(jnp.float32)
+    else:
+        # derive from inputs so vma/varying types match under check_vma=True
+        ssm0 = (xh[:, 0, :, :, None] * bbf[:, 0, None, None, :]) * 0.0
+    inputs = (
+        xc.transpose(1, 0, 2, 3, 4),
+        bc.transpose(1, 0, 2, 3),
+        cc_.transpose(1, 0, 2, 3),
+        dtc.transpose(1, 0, 2, 3),
+        dac.transpose(1, 0, 2, 3),
+    )
+    ssm_final, ys = jax.lax.scan(chunk_step, ssm0, inputs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h_local, hd)
+    y = y + d_skip[None, None, :, None] * xh
+    y = y.reshape(b, s, d_in_local)
+    out, _ = _finish(p, y, z, x, ctx, cfg)
+    new_cache = None
+    if mode == "prefill":
+        new_cache = {"ssm": ssm_final.astype(x.dtype), "conv": new_conv}
+    return out, new_cache
+
+
+def _finish(p, y, z, x, ctx, cfg):
+    """Gated RMS norm (over the FULL d_inner, tp-distributed) + row-parallel
+    out projection (+psum).  The variance is psum'd over 'model' so the
+    tp-sharded forward is bit-for-bit the single-device computation."""
+    y = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    dloc = y.shape[-1]
+    if ctx.tp > 1:
+        ss = ctx.psum_tp(jnp.sum(y * y, axis=-1, keepdims=True))
+        var = ss / (dloc * ctx.tp)
+        r = ctx.tp_index()
+        norm_w = jax.lax.dynamic_slice_in_dim(p["norm_w"], r * dloc, dloc, axis=0)
+    else:
+        var = jnp.mean(y * y, axis=-1, keepdims=True)
+        norm_w = p["norm_w"]
+    y = y * jax.lax.rsqrt(var + cfg.norm_eps) * (1.0 + norm_w.astype(jnp.float32))
+    out = ctx.psum_tp(y.astype(x.dtype) @ p["w_out"])
+    return out, None

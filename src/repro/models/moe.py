@@ -1,0 +1,126 @@
+"""Mixture-of-Experts FFN with expert parallelism over the ``model`` axis.
+
+Design (DESIGN.md):
+  * router is replicated (small);
+  * routed experts are sharded over ``model`` (E_pad/tp local experts each);
+    expert counts that don't divide tp are padded with router-masked dead
+    experts (granite 40 -> 48);
+  * dispatch is GShard-style capacity-limited gather/scatter per local
+    expert (no giant one-hot einsum); token overflow is dropped and counted;
+  * expert outputs are combined with a single psum over ``model`` — every
+    token's routed contribution lives on exactly one rank.  (All-to-all
+    dispatch is a recorded §Perf alternative.)
+  * shared experts (deepseek) run as a dense tp-sharded MLP.
+
+Auxiliary load-balance loss follows Switch/GShard: E * sum_e f_e * P_e,
+computed per consensus node (it is part of each node's local objective f_i —
+see DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import _act
+from .params import ParamDef
+from .sharding import ParallelContext
+
+__all__ = ["moe_defs", "moe_forward", "padded_experts"]
+
+
+def padded_experts(cfg: ModelConfig, tp: int) -> int:
+    return int(math.ceil(cfg.n_experts / max(tp, 1)) * max(tp, 1))
+
+
+def moe_defs(cfg: ModelConfig, ctx: ParallelContext, dtype) -> dict[str, Any]:
+    d, ffe = cfg.d_model, cfg.moe_d_ff
+    e_pad = padded_experts(cfg, ctx.tp)
+    assert ffe > 0 and cfg.top_k > 0
+    out: dict[str, Any] = {
+        "router": ParamDef((d, e_pad), tp_dim=None, fsdp_dim=0, dtype=dtype),
+        "w_gate": ParamDef((e_pad, d, ffe), tp_dim=0, fsdp_dim=1, dtype=dtype),
+        "w_up": ParamDef((e_pad, d, ffe), tp_dim=0, fsdp_dim=1, dtype=dtype),
+        "w_down": ParamDef((e_pad, ffe, d), tp_dim=0, fsdp_dim=1, dtype=dtype),
+    }
+    if cfg.n_shared_experts > 0:
+        ffs = cfg.n_shared_experts * ffe
+        assert ffs % max(ctx.tp, 1) == 0
+        out["shared"] = {
+            "w_gate": ParamDef((d, ffs), tp_dim=1, fsdp_dim=0, dtype=dtype),
+            "w_up": ParamDef((d, ffs), tp_dim=1, fsdp_dim=0, dtype=dtype),
+            "w_down": ParamDef((ffs, d), tp_dim=0, fsdp_dim=1, dtype=dtype),
+        }
+    return out
+
+
+def moe_forward(p, x: jax.Array, cfg: ModelConfig, ctx: ParallelContext,
+                ) -> tuple[jax.Array, jax.Array]:
+    """x: (b, s, d) replicated over model.  Returns (out, aux_loss)."""
+    b, s, d = x.shape
+    t = b * s
+    e_pad = p["router"].shape[-1]
+    e_real = cfg.n_experts
+    e_local = p["w_gate"].shape[0]
+    top_k = cfg.top_k
+
+    xf = x.reshape(t, d)
+    router_logits = (xf @ p["router"]).astype(jnp.float32)          # (t, E_pad)
+    if e_pad > e_real:
+        pad_mask = jnp.arange(e_pad) >= e_real
+        router_logits = jnp.where(pad_mask[None, :], -1e30, router_logits)
+    probs = jax.nn.softmax(router_logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, top_k)                      # (t, k)
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, axis=-1, keepdims=True), 1e-9)
+
+    # --- load-balance auxiliary loss (Switch-style) -------------------
+    one_hot_sel = jax.nn.one_hot(top_e, e_pad, dtype=jnp.float32)   # (t,k,E)
+    f_e = jnp.mean(jnp.sum(one_hot_sel, axis=1), axis=0)            # (E,)
+    p_e = jnp.mean(probs, axis=0)
+    aux = e_real * jnp.sum(f_e * p_e)
+
+    # --- capacity-limited dispatch per local expert -------------------
+    capacity = max(1, int(math.ceil(t * top_k / e_real * cfg.capacity_factor)))
+    r = ctx.tp_index()
+    # local expert ids: [r*e_local, (r+1)*e_local)
+    flat_e = top_e.reshape(-1)                                      # (t*k,)
+    flat_w = top_p.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(t), top_k)
+
+    def one_expert(e_off):
+        eid = r * e_local + e_off
+        mask = flat_e == eid                                        # (t*k,)
+        pos = jnp.cumsum(mask) - 1                                  # slot index
+        keep = mask & (pos < capacity)
+        slot = jnp.where(keep, pos, capacity)                       # overflow -> dummy
+        # scatter token ids / weights into capacity slots
+        tok_slots = jnp.zeros((capacity + 1,), jnp.int32).at[slot].set(
+            jnp.where(keep, flat_tok, 0), mode="drop")[:capacity]
+        w_slots = jnp.zeros((capacity + 1,), jnp.float32).at[slot].set(
+            jnp.where(keep, flat_w, 0.0), mode="drop")[:capacity]
+        used = jnp.zeros((capacity + 1,), jnp.bool_).at[slot].set(
+            keep, mode="drop")[:capacity]
+        dropped = jnp.sum(mask) - jnp.sum(keep)
+        return tok_slots, w_slots, used, dropped
+
+    tok_s, w_s, used_s, dropped = jax.vmap(one_expert)(jnp.arange(e_local))
+    # tok_s: (e_local, C) token indices into xf
+    xe = jnp.take(xf, tok_s.reshape(-1), axis=0).reshape(e_local, capacity, d)
+    xe = xe * used_s[..., None].astype(xe.dtype)
+    h = _act(cfg.mlp_act, jnp.einsum("ecd,edf->ecf", xe, p["w_gate"])) * \
+        jnp.einsum("ecd,edf->ecf", xe, p["w_up"])
+    ye = jnp.einsum("ecf,efd->ecd", h, p["w_down"])                 # (e_local,C,d)
+    ye = ye * (w_s * used_s.astype(jnp.float32))[..., None].astype(ye.dtype)
+    out = jnp.zeros((t, d), ye.dtype).at[tok_s.reshape(-1)].add(
+        ye.reshape(-1, d), mode="drop")
+    out = ctx.psum_tp(out)
+
+    if "shared" in p:
+        sp = p["shared"]
+        hs = _act(cfg.mlp_act, xf @ sp["w_gate"]) * (xf @ sp["w_up"])
+        out = out + ctx.psum_tp(hs @ sp["w_down"])
+
+    return out.reshape(b, s, d).astype(x.dtype), aux

@@ -1,0 +1,33 @@
+"""Learning-rate schedules.
+
+``inverse_power_schedule`` is the paper's alpha_k = alpha0 / k^eta (eta=0 ->
+constant; eta=1/2 is Theorem 3's fastest admissible diminishing rate).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["constant_schedule", "inverse_power_schedule", "cosine_warmup_schedule"]
+
+
+def constant_schedule(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def inverse_power_schedule(alpha0: float, eta: float = 0.5):
+    """alpha_k = alpha0 / max(1, k)^eta — paper step-size rule."""
+    def f(step):
+        k = jnp.maximum(1.0, step.astype(jnp.float32))
+        return alpha0 / k**eta
+    return f
+
+
+def cosine_warmup_schedule(peak: float, warmup: int, total: int,
+                           floor_frac: float = 0.1):
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = peak * s / max(warmup, 1)
+        t = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak * (floor_frac + (1 - floor_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(s < warmup, warm, cos)
+    return f

@@ -1,0 +1,10 @@
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see ONE
+# device (the dry-run sets --xla_force_host_platform_device_count=512 itself,
+# and multi-device tests spawn subprocesses with their own XLA_FLAGS).
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

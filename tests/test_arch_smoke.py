@@ -1,0 +1,155 @@
+"""Per-architecture smoke tests (assignment requirement).
+
+For every assigned architecture: instantiate a REDUCED same-family variant
+(<= 2 periods, d_model <= 512, <= 4 experts) and run one forward/train step
+on CPU asserting output shapes + no NaNs; plus a decode step, and a
+prefill->decode consistency check for a representative subset.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, input_specs, reduced, shape_applicable
+from repro.models import transformer as T
+from repro.models.config import INPUT_SHAPES
+from repro.models.layers import padded_vocab
+from repro.models.sharding import local_context
+
+CTX = local_context()
+
+
+def _make(arch):
+    cfg = reduced(get_config(arch))
+    defs = T.build_defs(cfg, CTX)
+    params = T.init_params(defs, jax.random.PRNGKey(0), CTX)
+    return cfg, defs, params
+
+
+def _batch(cfg, b=2, s=64, key=0):
+    k = jax.random.PRNGKey(key)
+    toks = jax.random.randint(k, (b, s), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
+    if cfg.frontend == "audio_frames":
+        batch["enc_frames"] = jax.random.normal(
+            k, (b, cfg.encoder_frames, cfg.d_model)) * 0.02
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_and_train_step(arch):
+    cfg, defs, params = _make(arch)
+    batch = _batch(cfg)
+    logits, _, aux = T.model_apply(params, defs, batch, CTX, mode="train")
+    assert logits.shape == (2, 64, padded_vocab(cfg, 1))
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    (loss, parts), grads = jax.value_and_grad(T.train_loss, has_aux=True)(
+        params, defs, batch, CTX)
+    assert bool(jnp.isfinite(loss))
+    gnorm = jax.tree.reduce(lambda a, g: a + jnp.sum(g * g), grads, 0.0)
+    assert bool(jnp.isfinite(gnorm)) and float(gnorm) > 0
+    if cfg.n_experts:
+        assert float(parts["aux"]) > 0  # load-balance loss active
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_step(arch):
+    cfg, defs, params = _make(arch)
+    b = 2
+    cache = T.init_cache(cfg, CTX, b_local=b, capacity=32, cache_seq_axes=())
+    tok = jnp.zeros((b, 1), jnp.int32)
+    for _ in range(4):
+        tok, cache = T.greedy_decode_step(params, defs, tok, cache, CTX)
+    assert tok.shape == (b, 1)
+    assert bool(jnp.all((tok >= 0) & (tok < padded_vocab(cfg, 1))))
+    assert int(cache["len"]) == 4
+
+
+@pytest.mark.parametrize("arch", ["smollm-135m", "mamba2-1.3b", "gemma2-9b",
+                                  "jamba-v0.1-52b", "deepseek-moe-16b"])
+def test_prefill_decode_consistency(arch):
+    """Greedy decode after prefill must equal the argmax of the prefill
+    logits at the last position (same computation, two code paths)."""
+    cfg, defs, params = _make(arch)
+    b, s = 2, 32
+    batch = _batch(cfg, b=b, s=s, key=3)
+    # full-sequence logits (train mode, no cache)
+    logits, _, _ = T.model_apply(params, defs, batch, CTX, mode="train")
+    expected_next = jnp.argmax(logits[:, -1, :], axis=-1)
+
+    # prefill to build a cache, then compare the sampled token
+    prefill_batch = {k: v for k, v in batch.items() if k != "labels"}
+    logits_p, cache, _ = T.model_apply(params, defs, prefill_batch, CTX,
+                                       mode="prefill")
+    got_next = jnp.argmax(logits_p[:, -1, :], axis=-1)
+    np.testing.assert_array_equal(np.asarray(expected_next), np.asarray(got_next))
+    np.testing.assert_allclose(np.asarray(logits_p[:, -1]),
+                               np.asarray(logits[:, -1]), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("arch", ["smollm-135m", "mamba2-1.3b"])
+def test_decode_matches_teacher_forcing(arch):
+    """Token-by-token decode logits == full-forward logits (same prefix)."""
+    cfg, defs, params = _make(arch)
+    b, s = 1, 16
+    batch = _batch(cfg, b=b, s=s, key=4)
+    full_logits, _, _ = T.model_apply(params, defs, batch, CTX, mode="train")
+
+    cache = T.init_cache(cfg, CTX, b_local=b, capacity=s + 4, cache_seq_axes=(),
+                         dtype=jnp.float32)
+    toks = batch["tokens"]
+    for t in range(s):
+        logits_t, cache, _ = T.model_apply(
+            params, defs, {"tokens": toks[:, t:t + 1]}, CTX, mode="decode",
+            cache=cache, remat=False)
+        np.testing.assert_allclose(
+            np.asarray(logits_t[:, 0]), np.asarray(full_logits[:, t]),
+            rtol=2e-3, atol=2e-3)
+
+
+def test_long_context_applicability_table():
+    """DESIGN.md section 5: exactly 3 archs support long_500k."""
+    shape = INPUT_SHAPES["long_500k"]
+    supported = [a for a in ARCH_IDS
+                 if shape_applicable(get_config(a), shape)[0]]
+    assert sorted(supported) == ["gemma2-9b", "jamba-v0.1-52b", "mamba2-1.3b"]
+    for a in ARCH_IDS:
+        for sname in ("train_4k", "prefill_32k", "decode_32k"):
+            assert shape_applicable(get_config(a), INPUT_SHAPES[sname])[0]
+
+
+def test_param_counts_are_plausible():
+    """Analytic param counts should be near the arch's nameplate size."""
+    expect = {
+        "jamba-v0.1-52b": (45e9, 60e9),
+        "qwen3-0.6b": (0.4e9, 0.9e9),
+        "chameleon-34b": (30e9, 38e9),
+        "yi-9b": (8e9, 10e9),
+        "gemma2-9b": (8e9, 11e9),
+        "deepseek-moe-16b": (15e9, 18.5e9),
+        "whisper-small": (0.2e9, 0.35e9),
+        "granite-moe-3b-a800m": (2.5e9, 3.9e9),
+        "mamba2-1.3b": (1.1e9, 1.6e9),
+        "smollm-135m": (0.12e9, 0.15e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, (arch, n)
+
+
+def test_moe_active_params_less_than_total():
+    for arch in ("deepseek-moe-16b", "granite-moe-3b-a800m", "jamba-v0.1-52b"):
+        cfg = get_config(arch)
+        assert cfg.active_param_count() < 0.6 * cfg.param_count()
+
+
+def test_input_specs_shapes():
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for sname, shape in INPUT_SHAPES.items():
+            specs = input_specs(cfg, shape)
+            assert specs["tokens"].shape[0] == shape.global_batch
+            if shape.kind == "decode":
+                assert specs["tokens"].shape[1] == 1  # ONE new token
+            else:
+                assert specs["tokens"].shape[1] == shape.seq_len

@@ -1,0 +1,96 @@
+"""Unbiasedness + variance-bound properties of every compression operator
+(paper Definition 1) — hypothesis property tests + statistical checks."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compression as C
+
+OPERATORS = [
+    C.IdentityCompressor(),
+    C.RandomizedRounding(delta=1.0),
+    C.RandomizedRounding(delta=0.25),
+    C.QuantizationSparsifier(m_levels=8, big_m=4.0),
+    C.TernaryCompressor(),
+    C.Int8BlockQuantizer(block=64, mode="adaptive"),
+    C.Int8BlockQuantizer(block=64, mode="fixed", step=0.05),
+]
+
+
+@pytest.mark.parametrize("op", OPERATORS, ids=lambda o: type(o).__name__ + getattr(o, "mode", ""))
+def test_unbiasedness_statistical(op):
+    """E[C(z)] == z within 5 sigma of the Monte-Carlo error."""
+    key = jax.random.PRNGKey(0)
+    z = jnp.asarray(np.random.default_rng(1).uniform(-2.0, 2.0, size=(64,)))
+    if isinstance(op, C.Int8BlockQuantizer) and op.mode == "fixed":
+        z = z * 0.05  # stay inside the un-clipped range of the fixed grid
+    n_trials = 4000
+    keys = jax.random.split(key, n_trials)
+    samples = np.asarray(jax.vmap(lambda k: op.apply(k, z))(keys),
+                         dtype=np.float64)  # f64 accumulation for the test
+    mean = samples.mean(axis=0)
+    se = samples.std(axis=0) / np.sqrt(n_trials) + 1e-12
+    np.testing.assert_array_less(np.abs(mean - np.asarray(z, np.float64)),
+                                 5 * se + 5e-7)
+
+
+@pytest.mark.parametrize("op", [C.RandomizedRounding(delta=1.0),
+                                C.RandomizedRounding(delta=0.1)])
+def test_variance_bound(op):
+    key = jax.random.PRNGKey(2)
+    z = jnp.asarray(np.random.default_rng(3).uniform(-3, 3, size=(32,)))
+    keys = jax.random.split(key, 5000)
+    samples = jax.vmap(lambda k: op.apply(k, z))(keys)
+    var = jnp.var(samples, axis=0)
+    assert float(jnp.max(var)) <= op.sigma2() + 1e-3
+
+
+@given(st.lists(st.floats(-100, 100, allow_nan=False), min_size=1, max_size=32),
+       st.integers(0, 2**31 - 1))
+@settings(max_examples=50, deadline=None)
+def test_randomized_rounding_on_grid(values, seed):
+    """Property: output always lies on the grid, within delta of the input."""
+    op = C.RandomizedRounding(delta=1.0)
+    z = jnp.asarray(values, jnp.float32)
+    out = np.asarray(op.apply(jax.random.PRNGKey(seed), z))
+    np.testing.assert_allclose(out, np.round(out), atol=1e-5)
+    assert np.all(np.abs(out - np.asarray(z)) <= 1.0 + 1e-4)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 6))
+@settings(max_examples=30, deadline=None)
+def test_int8_adaptive_never_clips(seed, scale_pow):
+    op = C.Int8BlockQuantizer(block=32, mode="adaptive")
+    key = jax.random.PRNGKey(seed)
+    z = jax.random.normal(key, (64,)) * (10.0 ** scale_pow)
+    codes, scales, meta = op.encode(jax.random.fold_in(key, 1), z)
+    assert float(meta["overflow_frac"]) == 0.0
+    out = op.decode(codes, scales, meta)
+    # max error is one quantization step per element
+    step = np.repeat(np.asarray(scales).ravel(), op.block)[: z.size]
+    assert np.all(np.abs(np.asarray(out) - np.asarray(z)) <= step + 1e-6)
+
+
+def test_sparsifier_produces_zeros():
+    op = C.QuantizationSparsifier(m_levels=8, big_m=1.0)
+    z = jnp.full((1000,), 0.05)
+    out = np.asarray(op.apply(jax.random.PRNGKey(0), z))
+    assert (out == 0).mean() > 0.5  # small values mostly zeroed
+    assert abs(out.mean() - 0.05) < 0.02  # but unbiased
+
+
+def test_wire_bytes_ordering():
+    """Compressors must actually be cheaper on the wire than fp32."""
+    n = 10_000
+    fp32 = 4.0 * n
+    assert C.RandomizedRounding().wire_bytes(n) == 0.5 * fp32
+    assert C.Int8BlockQuantizer().wire_bytes(n) < 0.27 * fp32
+    assert C.TernaryCompressor().wire_bytes(n) < 0.1 * fp32
+
+
+def test_registry():
+    assert isinstance(C.by_name("int8"), C.Int8BlockQuantizer)
+    with pytest.raises(KeyError):
+        C.by_name("nope")

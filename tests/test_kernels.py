@@ -1,0 +1,178 @@
+"""Pallas kernels vs pure-jnp oracles — shape/dtype sweeps in interpret mode,
+plus hypothesis property tests on the quantization wire format."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.dequant_combine import dequant_combine_pallas
+from repro.kernels.quantize import BLOCK, TILE_N, quantize_blocks_pallas
+
+SHAPES = [(32, 128), (32, 512), (64, 512), (96, 256), (320, 128)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("mode", ["adaptive", "fixed"])
+def test_quantize_matches_oracle(shape, dtype, mode):
+    key = jax.random.PRNGKey(hash((shape, str(dtype), mode)) % 2**31)
+    y = (jax.random.normal(key, shape) * 2.0).astype(dtype).astype(jnp.float32)
+    noise = jax.random.uniform(jax.random.fold_in(key, 1), shape)
+    step = jnp.float32(0.05) if mode == "fixed" else None
+    c_p, s_p = quantize_blocks_pallas(y, noise, fixed_step=step, interpret=True)
+    c_r, s_r = ref.quantize_blocks_ref(y, noise, fixed_step=step)
+    np.testing.assert_array_equal(np.asarray(c_p), np.asarray(c_r))
+    np.testing.assert_allclose(np.asarray(s_p), np.asarray(s_r), rtol=1e-6)
+
+
+@pytest.mark.parametrize("shape", SHAPES[:3])
+def test_dequant_combine_matches_oracle(shape):
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 8)
+    y = jax.random.normal(ks[0], shape)
+    noise = jax.random.uniform(ks[1], shape)
+    codes, scales = ref.quantize_blocks_ref(y, noise)
+    xt = jax.random.normal(ks[2], shape)
+    m = jax.random.normal(ks[3], shape)
+    args = (codes, scales, codes, scales, codes, scales, xt, m,
+            0.5, 0.25, jnp.float32(0.37))
+    outs_p = dequant_combine_pallas(*args, interpret=True)
+    outs_r = ref.dequant_combine_ref(*args)
+    for a, b in zip(outs_p, outs_r):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_quantize_roundtrip_error_bound():
+    """Adaptive: |dec - y| <= scale per element (one grid step)."""
+    key = jax.random.PRNGKey(3)
+    y = jax.random.normal(key, (64, BLOCK)) * 10
+    noise = jax.random.uniform(jax.random.fold_in(key, 1), y.shape)
+    codes, scales = ops.quantize_blocks(y, noise)
+    dec = codes.astype(jnp.float32) * scales
+    assert float(jnp.max(jnp.abs(dec - y) / scales)) <= 1.0 + 1e-5
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_quantize_unbiased_property(seed):
+    """Stochastic-rounding identity: E over noise of code*scale == y."""
+    key = jax.random.PRNGKey(seed)
+    y = jax.random.normal(key, (TILE_N, 128))
+    n_trials = 300
+    noise = jax.random.uniform(jax.random.fold_in(key, 1),
+                               (n_trials,) + y.shape)
+    codes, scales = jax.vmap(lambda n: ref.quantize_blocks_ref(y, n))(noise)
+    dec = np.asarray(codes, np.float64) * np.asarray(scales, np.float64)
+    err = dec.mean(axis=0) - np.asarray(y, np.float64)
+    se = dec.std(axis=0) / np.sqrt(n_trials) + 1e-9
+    # rare-event guard: an element whose rounding probability p ~ 1/n can
+    # show zero empirical variance; allow the binomial 3/n * scale slack
+    scale_b = np.asarray(scales[0], np.float64)  # (rows, 1)
+    assert np.all(np.abs(err) < 6 * se + scale_b * (18.0 / n_trials) + 2e-6)
+
+
+def test_blockify_roundtrip():
+    for n in (1, 511, 512, 513, 100_000):
+        flat = jnp.arange(n, dtype=jnp.float32)
+        blocks = ops.blockify(flat)
+        assert blocks.shape[0] % TILE_N == 0
+        np.testing.assert_array_equal(np.asarray(ops.unblockify(blocks, n)),
+                                      np.asarray(flat))
+
+
+@pytest.mark.parametrize("b,s,kvh,g,hd", [(2, 64, 2, 2, 32), (1, 128, 4, 1, 64),
+                                          (3, 96, 1, 8, 16)])
+def test_gqa_decode_ref_matches_dense_softmax(b, s, kvh, g, hd):
+    """The flash-decode oracle must equal a plain softmax attention."""
+    key = jax.random.PRNGKey(1)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, kvh, g, hd))
+    k = jax.random.normal(ks[1], (b, s, kvh, hd))
+    v = jax.random.normal(ks[2], (b, s, kvh, hd))
+    valid = jnp.arange(s) < (s - 7)
+    m, l, acc = ref.gqa_decode_ref(q, k, v, valid)
+    out = acc / l[..., None]
+    # dense reference
+    import math
+    scores = jnp.einsum("bhgd,bkhd->bhgk", q, k) / math.sqrt(hd)
+    scores = jnp.where(valid[None, None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    expected = jnp.einsum("bhgk,bkhd->bhgd", probs, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_gqa_decode_shard_combine():
+    """Partials from two shards combine to the full-cache answer."""
+    from repro.models.layers import combine_decode_partials
+    from repro.models.sharding import local_context
+    key = jax.random.PRNGKey(2)
+    ks = jax.random.split(key, 3)
+    b, s, kvh, g, hd = 2, 128, 2, 2, 32
+    q = jax.random.normal(ks[0], (b, kvh, g, hd))
+    k = jax.random.normal(ks[1], (b, s, kvh, hd))
+    v = jax.random.normal(ks[2], (b, s, kvh, hd))
+    valid = jnp.ones((s,), bool)
+    m_f, l_f, acc_f = ref.gqa_decode_ref(q, k, v, valid)
+    full = acc_f / l_f[..., None]
+    # two halves combined with the log-sum-exp rule
+    h = s // 2
+    m1, l1, a1 = ref.gqa_decode_ref(q, k[:, :h], v[:, :h], valid[:h])
+    m2, l2, a2 = ref.gqa_decode_ref(q, k[:, h:], v[:, h:], valid[h:])
+    mg = jnp.maximum(m1, m2)
+    lg = l1 * jnp.exp(m1 - mg) + l2 * jnp.exp(m2 - mg)
+    ag = a1 * jnp.exp(m1 - mg)[..., None] + a2 * jnp.exp(m2 - mg)[..., None]
+    np.testing.assert_allclose(np.asarray(ag / lg[..., None]),
+                               np.asarray(full), rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# gqa_decode Pallas kernel (interpret) vs jnp oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,kvh,g,hd,S,cap", [
+    (2, 2, 4, 128, 1024, None),      # GQA, 2 S-tiles
+    (1, 4, 1, 64, 512, 30.0),        # MHA-ish + softcap, single tile
+    (2, 1, 7, 128, 2048, None),      # odd group size (pad to 8), 4 tiles
+    (1, 8, 2, 128, 512, None),       # many kv heads
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gqa_decode_pallas_matches_oracle(b, kvh, g, hd, S, cap, dtype):
+    key = jax.random.PRNGKey(42)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, kvh, g, hd), dtype)
+    k = jax.random.normal(ks[1], (b, S, kvh, hd), dtype)
+    v = jax.random.normal(ks[2], (b, S, kvh, hd), dtype)
+    valid = jnp.arange(S) < (S - 37)
+    mp, lp, ap = ops.gqa_decode(q, k, v, valid, softcap=cap, use_pallas=True)
+    mr, lr, ar = ref.gqa_decode_ref(q, k, v, valid, softcap=cap)
+    # partials may differ in m by the blockwise path; the combined outputs
+    # and log-sum-exp values are the invariants
+    outp = np.asarray(ap) / np.maximum(np.asarray(lp), 1e-30)[..., None]
+    outr = np.asarray(ar) / np.maximum(np.asarray(lr), 1e-30)[..., None]
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(outp, outr, atol=tol, rtol=tol)
+    lse_p = np.asarray(mp) + np.log(np.maximum(np.asarray(lp), 1e-30))
+    lse_r = np.asarray(mr) + np.log(np.maximum(np.asarray(lr), 1e-30))
+    np.testing.assert_allclose(lse_p, lse_r, atol=5e-5 if dtype == jnp.float32 else 5e-2)
+
+
+def test_gqa_decode_pallas_all_masked_tile():
+    """Tiles that are fully masked (beyond the causal frontier) must not
+    poison the running accumulator."""
+    b, kvh, g, hd, S = 1, 2, 2, 128, 2048
+    key = jax.random.PRNGKey(7)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, kvh, g, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, S, kvh, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, S, kvh, hd), jnp.float32)
+    valid = jnp.arange(S) < 100            # only the first tile has any valid
+    mp, lp, ap = ops.gqa_decode(q, k, v, valid, use_pallas=True)
+    mr, lr, ar = ref.gqa_decode_ref(q, k, v, valid)
+    outp = np.asarray(ap) / np.asarray(lp)[..., None]
+    outr = np.asarray(ar) / np.asarray(lr)[..., None]
+    np.testing.assert_allclose(outp, outr, atol=1e-5, rtol=1e-5)
+    assert np.all(np.isfinite(outp))

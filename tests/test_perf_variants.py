@@ -1,0 +1,179 @@
+"""Perf-variant correctness: every §Perf optimization must be a pure
+performance change — bit-compatible (or tolerance-equal) with the baseline.
+
+Covered:
+  * microbatch gradient accumulation == single-batch step (same update)
+  * serve param_layout='replicated' decodes the same tokens as 'fsdp'
+  * remat='dots' / remat=False produce the same gradients as full remat
+  * long-context sequence-sharded-cache decode (the long_500k mechanism)
+    == single-device serve oracle, attention (gemma2) and SSM (mamba2)
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_sub(body: str, timeout: int = 1500) -> dict:
+    prelude = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import json
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_config, reduced
+        from repro.launch.mesh import make_cpu_mesh
+        from repro.launch import train as LT
+        from repro.data import SyntheticLMDataset
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", prelude + textwrap.dedent(body)],
+                          capture_output=True, text=True, timeout=timeout,
+                          env=env, cwd=REPO)
+    if proc.returncode != 0:
+        raise AssertionError(f"subprocess failed:\n{proc.stderr[-4000:]}")
+    for line in reversed(proc.stdout.splitlines()):
+        if line.startswith("RESULT "):
+            return json.loads(line[len("RESULT "):])
+    raise AssertionError(f"no RESULT line:\n{proc.stdout[-2000:]}")
+
+
+def test_microbatch_accumulation_matches_single_step():
+    body = """
+cfg = reduced(get_config("smollm-135m"))
+mesh = make_cpu_mesh(data=2, model=2)
+ds = SyntheticLMDataset(cfg.vocab_size, 64, 8, n_shards=2)
+finals = {}
+for micro in (1, 4):
+    setup = LT.build_train_setup(cfg, mesh, consensus_nodes=1,
+                                 algorithm="none", lr=1e-2, global_batch=8,
+                                 microbatches=micro)
+    state = LT.init_train_state(setup, jax.random.PRNGKey(0))
+    for step in range(2):
+        b = jax.device_put(ds.global_batch_arrays(step), setup.batch_sharding)
+        state, m = setup.train_step(state, b)
+    finals[micro] = jax.device_get(jax.tree_util.tree_leaves(state["params"])[0])
+diff = float(np.max(np.abs(finals[1] - finals[4])))
+scale = float(np.max(np.abs(finals[1])))
+print("RESULT", json.dumps({"rel_diff": diff / scale}))
+"""
+    r = run_sub(body)
+    # microbatch means are accumulated in f32; tiny reassociation error only
+    assert r["rel_diff"] < 1e-5
+
+
+def test_serve_replicated_layout_matches_fsdp():
+    body = """
+from repro.launch.serve import build_prefill_setup, build_serve_setup
+from repro.models.params import materialize_storage_host
+cfg = reduced(get_config("smollm-135m"))
+mesh = make_cpu_mesh(data=2, model=2)
+B, P, N = 4, 16, 6
+prompts = np.random.default_rng(0).integers(0, cfg.vocab_size, (B, P)).astype(np.int32)
+
+outs = {}
+for layout in ("fsdp", "replicated"):
+    pre = build_prefill_setup(cfg, mesh, global_batch=B, seq_len=P)
+    host = materialize_storage_host(pre.defs.storage, jax.random.PRNGKey(0),
+                                    pre.ctx.tp, 1, pre.ctx.fsdp)
+    params_fsdp = jax.device_put(jax.tree.map(jnp.asarray, host), pre.params_sharding)
+    first, cache = pre.prefill_step(params_fsdp, {"tokens": jnp.asarray(prompts)})
+    srv = build_serve_setup(cfg, mesh, global_batch=B, capacity=P + N,
+                            param_layout=layout)
+    if layout == "replicated":
+        # single-replica host params (no fsdp padding/tiling)
+        host_r = materialize_storage_host(srv.defs.storage, jax.random.PRNGKey(0),
+                                          srv.ctx.tp, 1, 1)
+        params = jax.device_put(jax.tree.map(jnp.asarray, host_r),
+                                srv.state_sharding["params"])
+    else:
+        params = params_fsdp
+    def pad_to(p, s):
+        if p.shape == s.shape:
+            return p
+        return jnp.pad(p, [(0, b - a) for a, b in zip(p.shape, s.shape)])
+    cache_p = jax.tree.map(pad_to, cache, srv.state_shape["cache"],
+                           is_leaf=lambda x: hasattr(x, "shape") and not isinstance(x, dict))
+    state = jax.device_put({"params": params, "cache": cache_p, "tokens": first},
+                           srv.state_sharding)
+    toks = [np.asarray(first)[:, 0]]
+    for _ in range(N - 1):
+        state = srv.serve_step(state)
+        toks.append(np.asarray(state["tokens"])[:, 0])
+    outs[layout] = np.stack(toks, 1).tolist()
+print("RESULT", json.dumps({"same": outs["fsdp"] == outs["replicated"],
+                            "fsdp": outs["fsdp"], "repl": outs["replicated"]}))
+"""
+    r = run_sub(body)
+    assert r["same"], (r["fsdp"], r["repl"])
+
+
+@pytest.mark.parametrize("remat", ["dots", "none"])
+def test_remat_variants_match_full_remat(remat):
+    body = f"""
+cfg = reduced(get_config("qwen3-0.6b"))
+mesh = make_cpu_mesh(data=2, model=2)
+ds = SyntheticLMDataset(cfg.vocab_size, 64, 4, n_shards=2)
+finals = {{}}
+for tag, rm in (("full", True), ("{remat}", {{"dots": "dots", "none": False}}["{remat}"])):
+    setup = LT.build_train_setup(cfg, mesh, consensus_nodes=1,
+                                 algorithm="none", lr=1e-2, global_batch=4,
+                                 remat=rm)
+    state = LT.init_train_state(setup, jax.random.PRNGKey(0))
+    b = jax.device_put(ds.global_batch_arrays(0), setup.batch_sharding)
+    state, m = setup.train_step(state, b)
+    finals[tag] = jax.device_get(jax.tree_util.tree_leaves(state["params"])[0])
+diff = float(np.max(np.abs(finals["full"] - finals["{remat}"])))
+scale = float(np.max(np.abs(finals["full"])))
+print("RESULT", __import__("json").dumps({{"rel_diff": diff / scale}}))
+"""
+    r = run_sub(body)
+    assert r["rel_diff"] < 1e-5
+
+
+@pytest.mark.parametrize("arch", ["gemma2-9b", "mamba2-1.3b"])
+def test_long_context_seq_sharded_cache_decode_matches_oracle(arch):
+    """long_500k mechanism at reduced scale: batch(1) < dp, so the decode
+    cache is sequence-sharded over 'data' and combined flash-decode style.
+    Tokens must match a single-device serve oracle exactly."""
+    body = f"""
+from repro.launch.serve import build_prefill_setup, build_serve_setup
+from repro.models.params import materialize_storage_host
+cfg = reduced(get_config("{arch}"))
+B, P, N = 1, 32, 6
+prompts = np.random.default_rng(0).integers(0, cfg.vocab_size, (B, P)).astype(np.int32)
+
+outs = {{}}
+for tag, (d, m) in (("dist", (4, 2)), ("oracle", (1, 1))):
+    mesh = make_cpu_mesh(data=d, model=m)
+    pre = build_prefill_setup(cfg, mesh, global_batch=B, seq_len=P)
+    host = materialize_storage_host(pre.defs.storage, jax.random.PRNGKey(0),
+                                    pre.ctx.tp, 1, pre.ctx.fsdp)
+    params = jax.device_put(jax.tree.map(jnp.asarray, host), pre.params_sharding)
+    first, cache = pre.prefill_step(params, {{"tokens": jnp.asarray(prompts)}})
+    srv = build_serve_setup(cfg, mesh, global_batch=B, capacity=P + N,
+                            long_serve=True)
+    def pad_to(p, s):
+        if p.shape == s.shape:
+            return p
+        return jnp.pad(p, [(0, b - a) for a, b in zip(p.shape, s.shape)])
+    cache_p = jax.tree.map(pad_to, cache, srv.state_shape["cache"],
+                           is_leaf=lambda x: hasattr(x, "shape") and not isinstance(x, dict))
+    state = jax.device_put({{"params": params, "cache": cache_p, "tokens": first}},
+                           srv.state_sharding)
+    toks = [np.asarray(first)[:, 0]]
+    for _ in range(N - 1):
+        state = srv.serve_step(state)
+        toks.append(np.asarray(state["tokens"])[:, 0])
+    outs[tag] = np.stack(toks, 1).tolist()
+print("RESULT", json.dumps({{"same": outs["dist"] == outs["oracle"],
+                             "dist": outs["dist"], "oracle": outs["oracle"]}}))
+"""
+    r = run_sub(body)
+    assert r["same"], (r["dist"], r["oracle"])

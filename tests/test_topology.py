@@ -1,0 +1,51 @@
+"""Mixing-matrix properties (paper Section III-A requirements)."""
+import numpy as np
+import pytest
+
+from repro.core import topology as topo
+
+
+@pytest.mark.parametrize("mm", [
+    topo.ring(2), topo.ring(5), topo.ring(16),
+    topo.fully_connected(4), topo.star(6), topo.chain(5),
+    topo.torus(3, 4), topo.expander(12, degree=4),
+    topo.paper_fig3(), topo.paper_circle(10),
+])
+def test_mixing_matrix_valid(mm):
+    mm.validate()
+    assert 0.0 <= mm.beta < 1.0
+
+
+def test_paper_fig3_matches_paper():
+    w = topo.paper_fig3().w
+    np.testing.assert_allclose(w[0], [0.25, 0.25, 0.25, 0.25])
+    np.testing.assert_allclose(np.diag(w), [0.25, 0.75, 0.75, 0.75])
+    assert topo.paper_fig3().beta == pytest.approx(0.75)
+
+
+def test_full_graph_one_shot_consensus():
+    assert topo.fully_connected(8).beta == pytest.approx(0.0, abs=1e-12)
+
+
+def test_ring_beta_increases_with_n():
+    betas = [topo.ring(n).beta for n in (4, 8, 16, 32)]
+    assert all(b2 > b1 for b1, b2 in zip(betas, betas[1:]))
+
+
+def test_expander_beats_ring():
+    n = 32
+    assert topo.expander(n, degree=6).beta < topo.ring(n).beta
+
+
+def test_torus_matches_ici_topology():
+    mm = topo.torus(4, 4)
+    # every node has 4 neighbors on a 2-D torus
+    for i in range(16):
+        assert len(mm.neighbors(i)) == 4
+
+
+def test_registry():
+    assert topo.by_name("ring", n=6).n == 6
+    assert topo.by_name("torus4x4").n == 16
+    with pytest.raises(KeyError):
+        topo.by_name("nope", n=3)
