@@ -18,7 +18,16 @@ from .compression import (  # noqa: F401
     RandomizedRounding,
     TernaryCompressor,
 )
-from .consensus import ADCDGD, DGD, CentralizedGD, CompressedDGD, DGDt, StepSize, run  # noqa: F401
+from .consensus import (  # noqa: F401
+    ADCDGD,
+    CHOCOGossip,
+    CentralizedGD,
+    CompressedDGD,
+    DGD,
+    DGDt,
+    StepSize,
+    run,
+)
 from .problems import (  # noqa: F401
     ConsensusProblem,
     paper_2node,
@@ -26,4 +35,16 @@ from .problems import (  # noqa: F401
     paper_circle_problem,
     quadratic_problem,
 )
-from .topology import MixingMatrix, fully_connected, paper_fig3, ring, torus  # noqa: F401
+from .topology import (  # noqa: F401
+    ErdosRenyiSchedule,
+    MixingMatrix,
+    PeriodicSchedule,
+    RandomGeometricSchedule,
+    StaticSchedule,
+    TopologySchedule,
+    as_schedule,
+    fully_connected,
+    paper_fig3,
+    ring,
+    torus,
+)

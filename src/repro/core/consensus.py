@@ -15,14 +15,23 @@ Implemented algorithms:
   * ``CompressedDGD``   — Eq. (5): DGD with *directly* compressed exchanges.
                           Provably non-convergent; reproduced as the paper's
                           Fig. 1 negative result.
+  * ``CHOCOGossip``     — CHOCO-SGD (Koloskova et al., arXiv:1902.00340):
+                          error-feedback compressed gossip — the strongest
+                          compressed-consensus baseline from related work.
   * ``CentralizedGD``   — single-machine gradient descent on the global f
                           (upper-bound reference).
 
 Every algorithm is a frozen dataclass with ``init(problem)`` and a jittable
-``step(state, problem, key) -> (state, metrics)``; ``run()`` drives them with
-``lax.scan`` and collects the paper's metrics (objective at the mean iterate,
-global gradient norm, consensus error, cumulative wire bytes, max transmitted
-magnitude).
+``step(state, problem, key, w=None) -> (state, metrics)``; ``run()`` drives
+them with ``lax.scan`` and collects the paper's metrics (objective at the mean
+iterate, global gradient norm, consensus error, cumulative wire bytes, max
+transmitted magnitude).
+
+Time-varying topologies: ``mixing`` may be a :class:`~repro.core.topology.
+TopologySchedule` instead of a static :class:`MixingMatrix`.  ``run()`` /
+``run_many()`` then gather the step-indexed ``W^(k)`` from the schedule's
+precomputed stack inside the scan and pass it to ``step(..., w=W_k)``; wire
+bytes are accounted per-step from the edge count of the matrix actually used.
 """
 from __future__ import annotations
 
@@ -36,7 +45,7 @@ import numpy as np
 
 from .compression import Compressor, IdentityCompressor
 from .problems import ConsensusProblem
-from .topology import MixingMatrix
+from .topology import MixingMatrix, TopologySchedule
 
 __all__ = [
     "StepSize",
@@ -44,6 +53,7 @@ __all__ = [
     "DGD",
     "DGDt",
     "CompressedDGD",
+    "CHOCOGossip",
     "CentralizedGD",
     "run",
     "by_name",
@@ -73,16 +83,37 @@ class _Algorithm:
     def init(self, problem: ConsensusProblem) -> dict[str, Any]:
         raise NotImplementedError
 
-    def step(self, state, problem: ConsensusProblem, key: jax.Array):
+    def step(self, state, problem: ConsensusProblem, key: jax.Array,
+             w: jax.Array | None = None):
         raise NotImplementedError
 
     def bytes_per_iteration(self, problem: ConsensusProblem) -> float:
-        """Total wire bytes per iteration over the whole network.
+        """Mean wire bytes per iteration over the whole network.
 
         Each node broadcasts one message per iteration; every undirected
         edge carries it in both directions -> 2*E messages of P elements.
+        (For a TopologySchedule, E is the mean edge count over the stack;
+        ``run()`` refines this to the per-step edge count.)
         """
         raise NotImplementedError
+
+    def _w(self, w: jax.Array | None = None) -> jax.Array:
+        """The mixing matrix for this step: the explicitly passed step-indexed
+        ``w`` (time-varying schedules), else the static ``self.mixing.w``
+        (a schedule passed as ``mixing`` defaults to its first matrix)."""
+        if w is not None:
+            return w
+        m = self.mixing  # type: ignore[attr-defined]
+        if isinstance(m, TopologySchedule):
+            return jnp.asarray(m.matrix_at(0).w)
+        return jnp.asarray(m.w)
+
+    def _compressed_broadcast_bytes(self, problem: ConsensusProblem) -> float:
+        """Shared accounting for compressor-bearing algorithms: one
+        compressed broadcast per node per iteration, carried on both
+        directions of every undirected edge."""
+        msgs = 2 * self.mixing.n_edges  # type: ignore[attr-defined]
+        return msgs * self.compressor.wire_bytes(problem.dim)  # type: ignore[attr-defined]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -100,7 +131,7 @@ class ADCDGD(_Algorithm):
     gamma > 1/2 (paper Eq. (8)): a variance-reduction scheme.
     """
 
-    mixing: MixingMatrix
+    mixing: MixingMatrix | TopologySchedule
     compressor: Compressor
     stepsize: StepSize
     gamma: float = 1.0
@@ -122,8 +153,8 @@ class ADCDGD(_Algorithm):
             "k": jnp.asarray(1, jnp.int32),
         }
 
-    def step(self, state, problem, key):
-        w = jnp.asarray(self.mixing.w)
+    def step(self, state, problem, key, w=None):
+        w = self._w(w)
         k = state["k"].astype(jnp.float32)
         kg = k**self.gamma
         y = state["x"] - state["x_tilde"]                     # (N, P)
@@ -141,15 +172,14 @@ class ADCDGD(_Algorithm):
         return {"x": x_next, "x_tilde": x_tilde, "k": state["k"] + 1}, metrics
 
     def bytes_per_iteration(self, problem):
-        msgs = 2 * self.mixing.n_edges  # one broadcast per node per edge-direction
-        return msgs * self.compressor.wire_bytes(problem.dim)
+        return self._compressed_broadcast_bytes(problem)
 
 
 @dataclasses.dataclass(frozen=True)
 class DGD(_Algorithm):
     """Original DGD (paper Algorithm 1): x <- W x - alpha_k grad f(x)."""
 
-    mixing: MixingMatrix
+    mixing: MixingMatrix | TopologySchedule
     stepsize: StepSize
     name: str = "dgd"
     #: bytes per transmitted element (paper stores uncompressed as double)
@@ -163,9 +193,9 @@ class DGD(_Algorithm):
         x1 = x0 - self.stepsize(jnp.asarray(1.0)) * g0
         return {"x": x1, "k": jnp.asarray(1, jnp.int32)}
 
-    def step(self, state, problem, key):
+    def step(self, state, problem, key, w=None):
         del key
-        w = jnp.asarray(self.mixing.w)
+        w = self._w(w)
         k = state["k"].astype(jnp.float32)
         alpha = self.stepsize(k)
         grads = problem.grad_fn(state["x"])
@@ -186,7 +216,7 @@ class DGDt(_Algorithm):
     Effective mixing matrix W^t (beta^t mixing) at t-fold communication cost.
     """
 
-    mixing: MixingMatrix
+    mixing: MixingMatrix | TopologySchedule
     stepsize: StepSize
     t: int = 3
     name: str = "dgd_t"
@@ -195,9 +225,16 @@ class DGDt(_Algorithm):
     def init(self, problem, x0=None):
         return DGD(self.mixing, self.stepsize).init(problem, x0)
 
-    def step(self, state, problem, key):
+    def step(self, state, problem, key, w=None):
         del key
-        wt = jnp.asarray(np.linalg.matrix_power(self.mixing.w, self.t))
+        if w is None and isinstance(self.mixing, MixingMatrix):
+            wt = jnp.asarray(np.linalg.matrix_power(self.mixing.w, self.t))
+        else:
+            # step-indexed W: all t consensus rounds of iteration k use W^(k)
+            w = self._w(w)
+            wt = w
+            for _ in range(self.t - 1):
+                wt = wt @ w
         k = state["k"].astype(jnp.float32)
         alpha = self.stepsize(k)
         grads = problem.grad_fn(state["x"])
@@ -221,7 +258,7 @@ class CompressedDGD(_Algorithm):
     the baseline the advantage of using its own x_i uncompressed.)
     """
 
-    mixing: MixingMatrix
+    mixing: MixingMatrix | TopologySchedule
     compressor: Compressor
     stepsize: StepSize
     name: str = "compressed_dgd"
@@ -229,8 +266,8 @@ class CompressedDGD(_Algorithm):
     def init(self, problem, x0=None):
         return DGD(self.mixing, self.stepsize).init(problem, x0)
 
-    def step(self, state, problem, key):
-        w = jnp.asarray(self.mixing.w)
+    def step(self, state, problem, key, w=None):
+        w = self._w(w)
         n = self.mixing.n
         k = state["k"].astype(jnp.float32)
         alpha = self.stepsize(k)
@@ -246,7 +283,73 @@ class CompressedDGD(_Algorithm):
         }
 
     def bytes_per_iteration(self, problem):
-        return 2 * self.mixing.n_edges * self.compressor.wire_bytes(problem.dim)
+        return self._compressed_broadcast_bytes(problem)
+
+
+@dataclasses.dataclass(frozen=True)
+class CHOCOGossip(_Algorithm):
+    """CHOCO-SGD (Koloskova et al., arXiv:1902.00340): error-feedback
+    compressed gossip — the strongest compressed-consensus baseline.
+
+    Per iteration t, each node i:
+        x_i^{t+1/2} = x_i^t - alpha_t grad f_i(x_i^t)       (local step)
+        q_i^t       = C(x_i^{t+1/2} - xh_i^t)               (compressed, sent)
+        xh_j^{t+1}  = xh_j^t + q_j^t                        (all replicas of j)
+        x_i^{t+1}   = x_i^{t+1/2}
+                      + lam * sum_j W_ij (xh_j^{t+1} - xh_i^{t+1})
+
+    i.e. gossip runs on shared low-precision estimates ``xh`` that integrate
+    the compressed corrections (error feedback), damped by the consensus
+    step-size ``lam`` (``consensus_lr``).  Where ADC-DGD *amplifies* the
+    differential so a fixed unbiased compressor's noise vanishes as 1/k^g,
+    CHOCO *damps* the gossip update so contraction-compressor noise stays
+    controlled; with this repo's constant-variance unbiased compressors,
+    CHOCO keeps an O(lam * sigma) noise floor that ADC-DGD provably escapes
+    — exactly the head-to-head the ``choco_vs_adc`` benchmark measures.
+
+    Reuses the existing :class:`Compressor` wire-format contract: ``q`` is
+    what travels (same codes+scales wire bytes as ADC-DGD's differential).
+    """
+
+    mixing: MixingMatrix | TopologySchedule
+    compressor: Compressor
+    stepsize: StepSize
+    consensus_lr: float = 0.5
+    name: str = "choco_gossip"
+
+    def init(self, problem, x0: jax.Array | None = None):
+        n, p = self.mixing.n, problem.dim
+        assert n == problem.n_nodes, (n, problem.n_nodes)
+        if x0 is None:
+            x0 = jnp.zeros((n, p))
+        g0 = problem.grad_fn(x0)
+        x1 = x0 - self.stepsize(jnp.asarray(1.0)) * g0
+        # xh_0 = 0 (the CHOCO paper's init); the first q transmits C(x_1).
+        return {
+            "x": x1,
+            "x_hat": jnp.zeros((n, p)),
+            "k": jnp.asarray(1, jnp.int32),
+        }
+
+    def step(self, state, problem, key, w=None):
+        w = self._w(w)
+        k = state["k"].astype(jnp.float32)
+        alpha = self.stepsize(k)
+        grads = problem.grad_fn(state["x"])
+        x_half = state["x"] - alpha * grads
+        keys = _per_node_keys(key, self.mixing.n)
+        q = jax.vmap(self.compressor.apply)(keys, x_half - state["x_hat"])
+        x_hat = state["x_hat"] + q
+        # sum_j W_ij (xh_j - xh_i) = (W - I) xh  since rows of W sum to 1
+        x_next = x_half + self.consensus_lr * (w @ x_hat - x_hat)
+        metrics = {
+            "max_transmitted": jnp.max(jnp.abs(q)),
+            "alpha": alpha,
+        }
+        return {"x": x_next, "x_hat": x_hat, "k": state["k"] + 1}, metrics
+
+    def bytes_per_iteration(self, problem):
+        return self._compressed_broadcast_bytes(problem)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -262,8 +365,8 @@ class CentralizedGD(_Algorithm):
             x0 = jnp.zeros((problem.n_nodes, problem.dim))
         return {"x": x0, "k": jnp.asarray(1, jnp.int32)}
 
-    def step(self, state, problem, key):
-        del key
+    def step(self, state, problem, key, w=None):
+        del key, w
         k = state["k"].astype(jnp.float32)
         alpha = self.stepsize(k)
         x_bar = jnp.mean(state["x"], axis=0)
@@ -282,6 +385,63 @@ class CentralizedGD(_Algorithm):
 # Driver
 # ---------------------------------------------------------------------------
 
+def _active_schedule(algorithm: _Algorithm) -> TopologySchedule | None:
+    """The algorithm's time-varying schedule, or None for static mixing
+    (a period-1 schedule also counts as static: ``_w`` already resolves it)."""
+    mixing = getattr(algorithm, "mixing", None)
+    if isinstance(mixing, TopologySchedule) and mixing.period > 1:
+        return mixing
+    return None
+
+
+def _cumulative_bytes(algorithm: _Algorithm, problem: ConsensusProblem,
+                      n_steps: int) -> np.ndarray:
+    """Cumulative wire bytes after each iteration, schedule-aware: each step
+    is billed for the edges of the matrix actually used at that step."""
+    per_iter = algorithm.bytes_per_iteration(problem)
+    sched = _active_schedule(algorithm)
+    if sched is None or per_iter == 0.0 or sched.n_edges == 0.0:
+        return per_iter * (np.arange(n_steps, dtype=np.float64) + 1)
+    per_directed_msg = per_iter / (2.0 * sched.n_edges)
+    per_step = 2.0 * sched.edges_per_step(n_steps) * per_directed_msg
+    return np.cumsum(per_step)
+
+
+def _make_scan(algorithm: _Algorithm, problem: ConsensusProblem,
+               n_steps: int, include_alpha: bool):
+    """Shared scan body for :func:`run` / :func:`run_many`: dispatches the
+    step-indexed ``W^(k)`` for schedule-bearing algorithms and collects the
+    paper's per-step metrics.  Returns ``(scan_step, pack_xs)`` where
+    ``pack_xs(keys)`` builds the scan inputs for a key sequence."""
+    sched = _active_schedule(algorithm)
+    if sched is not None:
+        w_stack = jnp.asarray(sched.stack, jnp.float32)
+        idx = jnp.asarray(sched.indices_for(n_steps), jnp.int32)
+
+    def scan_step(state, inp):
+        if sched is not None:
+            k_key, i = inp
+            state, metrics = algorithm.step(state, problem, k_key,
+                                            w=w_stack[i])
+        else:
+            state, metrics = algorithm.step(state, problem, inp)
+        x_bar = jnp.mean(state["x"], axis=0)
+        out = {
+            "obj": problem.global_obj(x_bar),
+            "grad_norm": jnp.linalg.norm(problem.global_grad(x_bar)) / problem.n_nodes,
+            "consensus": problem.consensus_error(state["x"]),
+            "max_tx": metrics["max_transmitted"],
+        }
+        if include_alpha:
+            out["alpha"] = metrics["alpha"]
+        return state, out
+
+    def pack_xs(keys):
+        return keys if sched is None else (keys, idx)
+
+    return scan_step, pack_xs
+
+
 def run(
     algorithm: _Algorithm,
     problem: ConsensusProblem,
@@ -291,6 +451,9 @@ def run(
     log_every: int = 1,
 ) -> dict[str, np.ndarray]:
     """Run ``n_steps`` iterations with lax.scan; return stacked metrics.
+
+    When ``algorithm.mixing`` is a :class:`TopologySchedule`, iteration ``i``
+    (0-based) uses ``schedule.stack[i % period]``, gathered inside the scan.
 
     Returned dict (np arrays of length n_steps//log_every):
       obj        — global objective at the mean iterate f(x_bar)
@@ -303,27 +466,14 @@ def run(
     if isinstance(key, int):
         key = jax.random.PRNGKey(key)
     state = algorithm.init(problem, x0=x0)
-    bytes_per_iter = algorithm.bytes_per_iteration(problem)
-
-    def scan_step(carry, k_key):
-        state = carry
-        state, metrics = algorithm.step(state, problem, k_key)
-        x_bar = jnp.mean(state["x"], axis=0)
-        out = {
-            "obj": problem.global_obj(x_bar),
-            "grad_norm": jnp.linalg.norm(problem.global_grad(x_bar)) / problem.n_nodes,
-            "consensus": problem.consensus_error(state["x"]),
-            "max_tx": metrics["max_transmitted"],
-            "alpha": metrics["alpha"],
-        }
-        return state, out
-
+    scan_step, pack_xs = _make_scan(algorithm, problem, n_steps,
+                                    include_alpha=True)
     keys = jax.random.split(key, n_steps)
-    state, traj = jax.lax.scan(scan_step, state, keys)
+    state, traj = jax.lax.scan(scan_step, state, pack_xs(keys))
     traj = jax.tree.map(np.asarray, traj)
     sl = slice(log_every - 1, None, log_every)
     result = {k: v[sl] for k, v in traj.items()}
-    result["bytes"] = bytes_per_iter * (np.arange(n_steps, dtype=np.float64) + 1)[sl]
+    result["bytes"] = _cumulative_bytes(algorithm, problem, n_steps)[sl]
     result["x_final"] = np.asarray(state["x"])
     return result
 
@@ -339,33 +489,26 @@ def run_many(
     """Vectorized multi-trial run: vmap over PRNG keys, one trace total.
 
     Returns metric arrays of shape (n_trials, n_steps) — the 100-trial means
-    of the paper's Figs. 7/8/10 without 100 retraces.
+    of the paper's Figs. 7/8/10 without 100 retraces.  Schedule-aware like
+    :func:`run` (every trial sees the same W sequence, fresh compression
+    noise — matching the paper's Monte-Carlo protocol).
     """
     keys = jax.random.split(jax.random.PRNGKey(seed), n_trials)
+    scan_step, pack_xs = _make_scan(algorithm, problem, n_steps,
+                                    include_alpha=False)
 
     def one(key):
         state = algorithm.init(problem, x0=x0)
-
-        def scan_step(state, k_key):
-            state, metrics = algorithm.step(state, problem, k_key)
-            x_bar = jnp.mean(state["x"], axis=0)
-            out = {
-                "obj": problem.global_obj(x_bar),
-                "grad_norm": jnp.linalg.norm(problem.global_grad(x_bar)) / problem.n_nodes,
-                "consensus": problem.consensus_error(state["x"]),
-                "max_tx": metrics["max_transmitted"],
-            }
-            return state, out
-
         ks = jax.random.split(key, n_steps)
-        _, traj = jax.lax.scan(scan_step, state, ks)
+        _, traj = jax.lax.scan(scan_step, state, pack_xs(ks))
         return traj
 
     traj = jax.jit(jax.vmap(one))(keys)
     return jax.tree.map(np.asarray, traj)
 
 
-def by_name(name: str, mixing: MixingMatrix, stepsize: StepSize,
+def by_name(name: str, mixing: MixingMatrix | TopologySchedule,
+            stepsize: StepSize,
             compressor: Compressor | None = None, **kw) -> _Algorithm:
     if name == "adc_dgd":
         return ADCDGD(mixing, compressor or IdentityCompressor(), stepsize, **kw)
@@ -375,6 +518,9 @@ def by_name(name: str, mixing: MixingMatrix, stepsize: StepSize,
         return DGDt(mixing, stepsize, **kw)
     if name == "compressed_dgd":
         return CompressedDGD(mixing, compressor or IdentityCompressor(), stepsize)
+    if name in ("choco_gossip", "choco"):
+        return CHOCOGossip(mixing, compressor or IdentityCompressor(),
+                           stepsize, **kw)
     if name == "centralized_gd":
         return CentralizedGD(stepsize)
     raise KeyError(f"unknown algorithm {name!r}")

@@ -32,10 +32,18 @@ Algorithms:
   allreduce      — W = (1/N)11^T: psum-mean of the optimizer delta (classic
                    synchronous data parallelism; consensus error == 0)
   none           — isolated nodes (debugging control)
+
+Time-varying topology (DESIGN.md §Topology schedules): ``ring_strides``
+cycles the node ring's neighbor stride every ``schedule_period`` steps —
+the shard_map counterpart of :class:`repro.core.topology.TopologySchedule`.
+Each stride's ring permutation is a static ppermute wiring, so the runtime
+dispatches between stride-specialized exchange traces with ``lax.switch``.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
+from functools import partial
 from typing import Any
 
 import jax
@@ -75,10 +83,27 @@ class ConsensusConfig:
     use_pallas: bool = False       # interpret-mode kernels (tests) vs jnp ref
     wire_dtype: Any = jnp.float32  # uncompressed-exchange dtype (dgd baseline)
     track_consensus_error: bool = False
+    #: time-varying ring schedule (DESIGN.md §Topology schedules): the node
+    #: ring's neighbor stride cycles through ``ring_strides``, holding each
+    #: for ``schedule_period`` steps.  stride s connects node i with i±s —
+    #: every stride keeps W symmetric doubly stochastic with the same
+    #: (self_weight, side_weight), so each epoch is a valid Section III-A
+    #: matrix.  Individual epochs may be disconnected (gcd(s, n) > 1); the
+    #: union over one cycle is jointly connected iff gcd(strides..., n) == 1,
+    #: which ConsensusRuntime enforces.  (1,) == the static paper ring.
+    ring_strides: tuple[int, ...] = (1,)
+    schedule_period: int = 1       # steps between ring re-wirings
 
     @property
     def side_weight(self) -> float:
         return (1.0 - self.self_weight) / 2.0
+
+    def __post_init__(self):
+        if not self.ring_strides:
+            raise ValueError("ring_strides must be non-empty")
+        if self.schedule_period < 1:
+            raise ValueError(f"schedule_period must be >= 1, got "
+                             f"{self.schedule_period}")
 
 
 def _flat_ring_perm(ctx: ParallelContext, shift: int):
@@ -106,6 +131,26 @@ class ConsensusRuntime:
     def __init__(self, config: ConsensusConfig, ctx: ParallelContext):
         self.cfg = config
         self.ctx = ctx
+        n = ctx.total_consensus_nodes
+        if n > 1 and config.algorithm in ("adc_dgd", "dgd", "compressed_dgd"):
+            for s in config.ring_strides:
+                if s % n == 0:
+                    raise ValueError(
+                        f"ring stride {s} is a self-loop on {n} consensus "
+                        "nodes — the exchange would silently carry no "
+                        "communication; drop it from ring_strides")
+            # joint connectivity: the union graph over one schedule cycle is
+            # the circulant with connection set {±s}; it is connected iff
+            # gcd(s_1, ..., s_k, n) == 1.
+            g = n
+            for s in config.ring_strides:
+                g = math.gcd(g, s)
+            if g != 1:
+                raise ValueError(
+                    f"ring_strides {config.ring_strides} on {n} consensus "
+                    f"nodes share the common factor {g}: the union of all "
+                    "schedule epochs splits the network into disjoint "
+                    "components and consensus can never be reached")
 
     # -- state ---------------------------------------------------------
     def init_state(self, params: Any) -> Any:
@@ -126,7 +171,13 @@ class ConsensusRuntime:
         if self.cfg.algorithm == "adc_dgd":
             rows = kops.padded_block_rows(n_params_local)
             per_dir = rows * kops.BLOCK * 1 + rows * 4          # int8 + scales
-            return 2 * per_dir                                   # two ring dirs
+            total = 2 * per_dir                                  # two ring dirs
+            if len(self.cfg.ring_strides) > 1:
+                # amortized epoch-boundary resync: one fp32 x_tilde exchange
+                # per re-wiring (both ring directions)
+                total += (2 * rows * kops.BLOCK * 4
+                          / self.cfg.schedule_period)
+            return total
         if self.cfg.algorithm in ("dgd", "compressed_dgd"):
             itemsize = jnp.dtype(self.cfg.wire_dtype).itemsize
             return 2 * n_params_local * itemsize
@@ -148,17 +199,45 @@ class ConsensusRuntime:
             x_next = _allreduce_mean_delta(x_prev, x_half, ctx)
             return x_next, state, {}
         if alg == "dgd":
-            return self._dgd_exchange(x_prev, x_half, state, compress=False,
-                                      step=step, key=key)
-        if alg == "compressed_dgd":
-            return self._dgd_exchange(x_prev, x_half, state, compress=True,
-                                      step=step, key=key)
-        assert alg == "adc_dgd", alg
-        return self._adc_exchange(x_prev, x_half, state, step, key)
+            impl = lambda s: self._dgd_exchange(  # noqa: E731
+                x_prev, x_half, state, compress=False, step=step, key=key,
+                stride=s)
+        elif alg == "compressed_dgd":
+            impl = lambda s: self._dgd_exchange(  # noqa: E731
+                x_prev, x_half, state, compress=True, step=step, key=key,
+                stride=s)
+        else:
+            assert alg == "adc_dgd", alg
+            impl = lambda s: self._adc_exchange(  # noqa: E731
+                x_prev, x_half, state, step, key, stride=s)
+        return self._dispatch_stride(impl, step)
 
     # ------------------------------------------------------------------
-    def _adc_exchange(self, x_prev, x_half, state, step, key):
+    def _dispatch_stride(self, impl, step):
+        """Run ``impl(stride)`` for the ring stride of this step's schedule
+        epoch.  ppermute permutations are static per trace, so the
+        time-varying ring is a ``lax.switch`` over one stride-specialized
+        branch per entry of ``ring_strides`` (all branches return the same
+        state/metric pytree; XLA traces each wiring once)."""
+        strides = self.cfg.ring_strides
+        if len(strides) == 1:
+            return impl(strides[0])
+        epoch = (jnp.asarray(step, jnp.int32) - 1) // self.cfg.schedule_period
+        branches = [partial(impl, s) for s in strides]
+        return jax.lax.switch(epoch % len(strides), branches)
+
+    # ------------------------------------------------------------------
+    def _adc_exchange(self, x_prev, x_half, state, step, key, stride=1):
         cfg, ctx = self.cfg, self.ctx
+        # Epoch-boundary m_agg resync for time-varying rings: the
+        # incremental aggregate m_agg = sum_j W_ij x_tilde_j is only valid
+        # for a fixed neighbor set, so on the first step of every schedule
+        # epoch the NEW neighbors exchange their fp32 x_tilde once and
+        # m_agg is rebuilt exactly (amortized in wire_bytes_per_step).
+        step_i32 = jnp.asarray(step, jnp.int32)
+        resync = (jnp.logical_and((step_i32 - 1) % cfg.schedule_period == 0,
+                                  step_i32 > 1)
+                  if len(cfg.ring_strides) > 1 else None)
         k = jnp.maximum(1.0, step.astype(jnp.float32))
         # fixed mode: effective grid step Delta_k = Delta_0 / k^gamma — this IS
         # the amplified-differential trick with amplification folded into the
@@ -189,12 +268,18 @@ class ConsensusRuntime:
                                    .astype(jnp.float32))
                 overflow_acc = overflow_acc + clipped
             # ring exchange of the wire payload (int8 codes + scales)
-            c_l = _ppermute_ring(codes, ctx, +1)
-            s_l = _ppermute_ring(scales, ctx, +1)
-            c_r = _ppermute_ring(codes, ctx, -1)
-            s_r = _ppermute_ring(scales, ctx, -1)
+            c_l = _ppermute_ring(codes, ctx, +stride)
+            s_l = _ppermute_ring(scales, ctx, +stride)
+            c_r = _ppermute_ring(codes, ctx, -stride)
+            s_r = _ppermute_ring(scales, ctx, -stride)
             xtb = kops.blockify(xt.reshape(-1))
             mb = kops.blockify(m.reshape(-1))
+            if resync is not None:
+                def _rebuild(xtb=xtb):
+                    xt_l = _ppermute_ring(xtb, ctx, +stride)
+                    xt_r = _ppermute_ring(xtb, ctx, -stride)
+                    return jnp.float32(cfg.side_weight) * (xt_l + xt_r)
+                mb = jax.lax.cond(resync, _rebuild, lambda mb=mb: mb)
             xt_new_b, m_new_b, comb_b = kops.dequant_combine(
                 codes, scales, c_l, s_l, c_r, s_r, xtb, mb,
                 cfg.self_weight, cfg.side_weight, jnp.float32(1.0),
@@ -215,7 +300,8 @@ class ConsensusRuntime:
         return x_next, new_state, metrics
 
     # ------------------------------------------------------------------
-    def _dgd_exchange(self, x_prev, x_half, state, compress, step, key):
+    def _dgd_exchange(self, x_prev, x_half, state, compress, step, key,
+                      stride=1):
         """DGD / direct-compression DGD: mix the raw parameters each step."""
         cfg, ctx = self.cfg, self.ctx
         w_self, w_side = cfg.self_weight, cfg.side_weight
@@ -236,15 +322,15 @@ class ConsensusRuntime:
                     codes.astype(jnp.float32) * scales, leaf_prev.size
                 ).reshape(leaf_prev.shape)
                 wire = codes  # what actually travels
-                left = _ppermute_ring(codes, ctx, +1).astype(jnp.float32) * \
-                    _ppermute_ring(scales, ctx, +1)
-                right = _ppermute_ring(codes, ctx, -1).astype(jnp.float32) * \
-                    _ppermute_ring(scales, ctx, -1)
+                left = _ppermute_ring(codes, ctx, +stride).astype(jnp.float32) * \
+                    _ppermute_ring(scales, ctx, +stride)
+                right = _ppermute_ring(codes, ctx, -stride).astype(jnp.float32) * \
+                    _ppermute_ring(scales, ctx, -stride)
                 left = kops.unblockify(left, leaf_prev.size).reshape(leaf_prev.shape)
                 right = kops.unblockify(right, leaf_prev.size).reshape(leaf_prev.shape)
             else:
-                left = _ppermute_ring(send, ctx, +1).astype(jnp.float32)
-                right = _ppermute_ring(send, ctx, -1).astype(jnp.float32)
+                left = _ppermute_ring(send, ctx, +stride).astype(jnp.float32)
+                right = _ppermute_ring(send, ctx, -stride).astype(jnp.float32)
             mixed = (w_self * leaf_prev.astype(jnp.float32)
                      + w_side * (left + right))
             grad_step = (leaf_half.astype(jnp.float32)

@@ -130,13 +130,16 @@ def build_train_setup(
     seq_len: int | None = None,
     microbatches: int = 1,              # gradient accumulation (activation
                                         # memory / microbatches per step)
+    ring_strides: tuple[int, ...] = (1,),  # time-varying node-ring schedule
+    schedule_period: int = 1,              # steps between ring re-wirings
 ) -> TrainSetup:
     ctx = make_context(mesh, consensus_nodes)
     defs = T.build_defs(cfg, ctx, dtype=compute_dtype)
     ccfg = ConsensusConfig(
         algorithm=algorithm, gamma=gamma, quant_mode=quant_mode,
         fixed_step0=fixed_step0, use_pallas=use_pallas,
-        track_consensus_error=track_consensus_error)
+        track_consensus_error=track_consensus_error,
+        ring_strides=tuple(ring_strides), schedule_period=schedule_period)
     consensus = ConsensusRuntime(ccfg, ctx)
     opt = opt_by_name(optimizer)
     if schedule == "constant":
@@ -273,6 +276,11 @@ def main(argv=None):
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=3e-2)
     ap.add_argument("--gamma", type=float, default=1.0)
+    ap.add_argument("--ring-strides", default="1",
+                    help="comma-separated node-ring strides cycled per "
+                         "schedule epoch (time-varying topology), e.g. 1,2")
+    ap.add_argument("--schedule-period", type=int, default=1,
+                    help="steps between ring re-wirings")
     ap.add_argument("--optimizer", default="sgd")
     ap.add_argument("--schedule", default="constant")
     ap.add_argument("--microbatches", type=int, default=1)
@@ -289,6 +297,8 @@ def main(argv=None):
         optimizer=args.optimizer, schedule=args.schedule, lr=args.lr,
         gamma=args.gamma, global_batch=args.batch, seq_len=args.seq,
         microbatches=args.microbatches,
+        ring_strides=tuple(int(s) for s in args.ring_strides.split(",")),
+        schedule_period=args.schedule_period,
         track_consensus_error=(args.algorithm != "allreduce"))
     state = init_train_state(setup, jax.random.PRNGKey(0))
     ds_kw = {}

@@ -1,10 +1,10 @@
 """Unbiasedness + variance-bound properties of every compression operator
-(paper Definition 1) — hypothesis property tests + statistical checks."""
+(paper Definition 1) — statistical checks.  The hypothesis property tests
+live in test_property_based.py (importorskip-guarded for bare envs)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import compression as C
 
@@ -47,30 +47,28 @@ def test_variance_bound(op):
     assert float(jnp.max(var)) <= op.sigma2() + 1e-3
 
 
-@given(st.lists(st.floats(-100, 100, allow_nan=False), min_size=1, max_size=32),
-       st.integers(0, 2**31 - 1))
-@settings(max_examples=50, deadline=None)
-def test_randomized_rounding_on_grid(values, seed):
-    """Property: output always lies on the grid, within delta of the input."""
+def test_randomized_rounding_on_grid_fixed_vectors():
+    """Output always lies on the grid, within delta of the input (fixed-seed
+    spot check; the exhaustive property test is in test_property_based.py)."""
     op = C.RandomizedRounding(delta=1.0)
-    z = jnp.asarray(values, jnp.float32)
-    out = np.asarray(op.apply(jax.random.PRNGKey(seed), z))
+    z = jnp.asarray(np.random.default_rng(9).uniform(-100, 100, size=(64,)),
+                    jnp.float32)
+    out = np.asarray(op.apply(jax.random.PRNGKey(11), z))
     np.testing.assert_allclose(out, np.round(out), atol=1e-5)
     assert np.all(np.abs(out - np.asarray(z)) <= 1.0 + 1e-4)
 
 
-@given(st.integers(0, 2**31 - 1), st.integers(1, 6))
-@settings(max_examples=30, deadline=None)
-def test_int8_adaptive_never_clips(seed, scale_pow):
+def test_int8_adaptive_never_clips_fixed_vectors():
     op = C.Int8BlockQuantizer(block=32, mode="adaptive")
-    key = jax.random.PRNGKey(seed)
-    z = jax.random.normal(key, (64,)) * (10.0 ** scale_pow)
-    codes, scales, meta = op.encode(jax.random.fold_in(key, 1), z)
-    assert float(meta["overflow_frac"]) == 0.0
-    out = op.decode(codes, scales, meta)
-    # max error is one quantization step per element
-    step = np.repeat(np.asarray(scales).ravel(), op.block)[: z.size]
-    assert np.all(np.abs(np.asarray(out) - np.asarray(z)) <= step + 1e-6)
+    for seed, scale_pow in ((0, 1), (1, 3), (2, 6)):
+        key = jax.random.PRNGKey(seed)
+        z = jax.random.normal(key, (64,)) * (10.0 ** scale_pow)
+        codes, scales, meta = op.encode(jax.random.fold_in(key, 1), z)
+        assert float(meta["overflow_frac"]) == 0.0
+        out = op.decode(codes, scales, meta)
+        # max error is one quantization step per element
+        step = np.repeat(np.asarray(scales).ravel(), op.block)[: z.size]
+        assert np.all(np.abs(np.asarray(out) - np.asarray(z)) <= step + 1e-6)
 
 
 def test_sparsifier_produces_zeros():

@@ -1,10 +1,10 @@
-"""Pallas kernels vs pure-jnp oracles — shape/dtype sweeps in interpret mode,
-plus hypothesis property tests on the quantization wire format."""
+"""Pallas kernels vs pure-jnp oracles — shape/dtype sweeps in interpret mode.
+The hypothesis property tests on the quantization wire format live in
+test_property_based.py (importorskip-guarded for bare envs)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ops, ref
 from repro.kernels.dequant_combine import dequant_combine_pallas
@@ -13,7 +13,14 @@ from repro.kernels.quantize import BLOCK, TILE_N, quantize_blocks_pallas
 SHAPES = [(32, 128), (32, 512), (64, 512), (96, 256), (320, 128)]
 DTYPES = [jnp.float32, jnp.bfloat16]
 
+# The interpret-mode Pallas path needs the newer jax API (jax.typeof etc.);
+# on older jax only the jnp reference-oracle tests run.
+needs_pallas = pytest.mark.skipif(
+    not hasattr(jax, "typeof"),
+    reason="pallas interpret path requires jax.typeof (newer jax)")
 
+
+@needs_pallas
 @pytest.mark.parametrize("shape", SHAPES)
 @pytest.mark.parametrize("dtype", DTYPES)
 @pytest.mark.parametrize("mode", ["adaptive", "fixed"])
@@ -28,6 +35,7 @@ def test_quantize_matches_oracle(shape, dtype, mode):
     np.testing.assert_allclose(np.asarray(s_p), np.asarray(s_r), rtol=1e-6)
 
 
+@needs_pallas
 @pytest.mark.parametrize("shape", SHAPES[:3])
 def test_dequant_combine_matches_oracle(shape):
     key = jax.random.PRNGKey(0)
@@ -53,25 +61,6 @@ def test_quantize_roundtrip_error_bound():
     codes, scales = ops.quantize_blocks(y, noise)
     dec = codes.astype(jnp.float32) * scales
     assert float(jnp.max(jnp.abs(dec - y) / scales)) <= 1.0 + 1e-5
-
-
-@given(st.integers(0, 2**31 - 1))
-@settings(max_examples=20, deadline=None)
-def test_quantize_unbiased_property(seed):
-    """Stochastic-rounding identity: E over noise of code*scale == y."""
-    key = jax.random.PRNGKey(seed)
-    y = jax.random.normal(key, (TILE_N, 128))
-    n_trials = 300
-    noise = jax.random.uniform(jax.random.fold_in(key, 1),
-                               (n_trials,) + y.shape)
-    codes, scales = jax.vmap(lambda n: ref.quantize_blocks_ref(y, n))(noise)
-    dec = np.asarray(codes, np.float64) * np.asarray(scales, np.float64)
-    err = dec.mean(axis=0) - np.asarray(y, np.float64)
-    se = dec.std(axis=0) / np.sqrt(n_trials) + 1e-9
-    # rare-event guard: an element whose rounding probability p ~ 1/n can
-    # show zero empirical variance; allow the binomial 3/n * scale slack
-    scale_b = np.asarray(scales[0], np.float64)  # (rows, 1)
-    assert np.all(np.abs(err) < 6 * se + scale_b * (18.0 / n_trials) + 2e-6)
 
 
 def test_blockify_roundtrip():
@@ -133,6 +122,7 @@ def test_gqa_decode_shard_combine():
 # gqa_decode Pallas kernel (interpret) vs jnp oracle
 # ---------------------------------------------------------------------------
 
+@needs_pallas
 @pytest.mark.parametrize("b,kvh,g,hd,S,cap", [
     (2, 2, 4, 128, 1024, None),      # GQA, 2 S-tiles
     (1, 4, 1, 64, 512, 30.0),        # MHA-ish + softcap, single tile
@@ -160,6 +150,7 @@ def test_gqa_decode_pallas_matches_oracle(b, kvh, g, hd, S, cap, dtype):
     np.testing.assert_allclose(lse_p, lse_r, atol=5e-5 if dtype == jnp.float32 else 5e-2)
 
 
+@needs_pallas
 def test_gqa_decode_pallas_all_masked_tile():
     """Tiles that are fully masked (beyond the causal frontier) must not
     poison the running accumulator."""

@@ -1,0 +1,59 @@
+"""Hypothesis property tests (compression operators + quantization wire
+format), split out of test_compression.py / test_kernels.py so a bare env
+without ``hypothesis`` still collects and runs the rest of the suite."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import compression as C  # noqa: E402
+from repro.kernels import ref  # noqa: E402
+from repro.kernels.quantize import TILE_N  # noqa: E402
+
+
+@given(st.lists(st.floats(-100, 100, allow_nan=False), min_size=1, max_size=32),
+       st.integers(0, 2**31 - 1))
+@settings(max_examples=50, deadline=None)
+def test_randomized_rounding_on_grid(values, seed):
+    """Property: output always lies on the grid, within delta of the input."""
+    op = C.RandomizedRounding(delta=1.0)
+    z = jnp.asarray(values, jnp.float32)
+    out = np.asarray(op.apply(jax.random.PRNGKey(seed), z))
+    np.testing.assert_allclose(out, np.round(out), atol=1e-5)
+    assert np.all(np.abs(out - np.asarray(z)) <= 1.0 + 1e-4)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 6))
+@settings(max_examples=30, deadline=None)
+def test_int8_adaptive_never_clips(seed, scale_pow):
+    op = C.Int8BlockQuantizer(block=32, mode="adaptive")
+    key = jax.random.PRNGKey(seed)
+    z = jax.random.normal(key, (64,)) * (10.0 ** scale_pow)
+    codes, scales, meta = op.encode(jax.random.fold_in(key, 1), z)
+    assert float(meta["overflow_frac"]) == 0.0
+    out = op.decode(codes, scales, meta)
+    # max error is one quantization step per element
+    step = np.repeat(np.asarray(scales).ravel(), op.block)[: z.size]
+    assert np.all(np.abs(np.asarray(out) - np.asarray(z)) <= step + 1e-6)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_quantize_unbiased_property(seed):
+    """Stochastic-rounding identity: E over noise of code*scale == y."""
+    key = jax.random.PRNGKey(seed)
+    y = jax.random.normal(key, (TILE_N, 128))
+    n_trials = 300
+    noise = jax.random.uniform(jax.random.fold_in(key, 1),
+                               (n_trials,) + y.shape)
+    codes, scales = jax.vmap(lambda n: ref.quantize_blocks_ref(y, n))(noise)
+    dec = np.asarray(codes, np.float64) * np.asarray(scales, np.float64)
+    err = dec.mean(axis=0) - np.asarray(y, np.float64)
+    se = dec.std(axis=0) / np.sqrt(n_trials) + 1e-9
+    # rare-event guard: an element whose rounding probability p ~ 1/n can
+    # show zero empirical variance; allow the binomial 3/n * scale slack
+    scale_b = np.asarray(scales[0], np.float64)  # (rows, 1)
+    assert np.all(np.abs(err) < 6 * se + scale_b * (18.0 / n_trials) + 2e-6)
