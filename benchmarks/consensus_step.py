@@ -1,0 +1,227 @@
+"""consensus_step_latency: packed vs per-leaf wire path on real leaf trees.
+
+Times one jit'd ADC-DGD consensus exchange (no model forward/backward — the
+consensus step IS the system under test) on a >=4-device host-platform mesh
+for the ``smollm_135m`` and ``qwen3_0_6b`` parameter trees, using each
+device's *local* shard shapes from the production 16x16 (fsdp x tp) mesh
+factored into 4 consensus nodes — exactly the per-device tree the trainer's
+hot loop exchanges every step.
+
+The trees are the **per-layer logical trees** (every transformer layer its
+own set of leaves, i.e. ``ModelDefs.period`` repeated ``n_periods`` times
+plus embed/final norm) — what any non-layer-scanned runtime exchanges, and
+the leaf count that makes the per-leaf tax visible: O(100) leaves ->
+4 x O(100) ring collectives per step on the per-leaf path vs exactly 2 on
+the packed path.
+
+Measured per arch and per wire path (``ConsensusConfig.wire_packing``):
+  * steps/s under ``jax.jit`` (best-of-repeats wall clock; quantization
+    noise is pre-generated and injected so the PRNG — identical in both
+    paths — is excluded and the measurement isolates the wire path),
+  * ring collectives per step (counted as ``ppermute`` eqns in the traced
+    jaxpr — not hand-derived),
+  * wire bytes per step (``ConsensusRuntime.wire_bytes_per_step``),
+  * trace+compile seconds (the per-leaf path also pays an O(leaves)
+    compile tax).
+
+Writes ``BENCH_consensus_step.json`` at the repo root (the perf-trajectory
+artifact tracked from PR 2 onward) plus a copy under
+``benchmarks/artifacts/``.  Exits non-zero if the packed path is slower
+than the per-leaf path — the CI smoke gate.
+
+Run standalone (sets up its own host devices):
+
+    PYTHONPATH=src python -m benchmarks.consensus_step
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+N_DEVICES = 4
+
+if "jax" not in sys.modules:
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count={N_DEVICES}"
+        ).strip()
+
+import jax                                                   # noqa: E402
+import jax.numpy as jnp                                      # noqa: E402
+import numpy as np                                           # noqa: E402
+from jax.sharding import Mesh, PartitionSpec as P            # noqa: E402
+
+from repro.configs import get_config                         # noqa: E402
+from repro.core import wire                                  # noqa: E402
+from repro.core.distributed import (ConsensusConfig,         # noqa: E402
+                                    ConsensusRuntime)
+from repro.models import transformer as T                    # noqa: E402
+from repro.models.params import ParamDef, local_block_shape  # noqa: E402
+from repro.models.sharding import (ParallelContext,          # noqa: E402
+                                   shard_map_compat)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ARCHS = ("smollm-135m", "qwen3-0.6b")
+PROD_TP, PROD_FSDP, NODES = 16, 16, 4
+STEPS_TIMED = 3
+REPEATS = 2
+
+
+def count_eqns(jaxpr, prim_name: str) -> int:
+    """Recursively count equations of one primitive in a (Closed)Jaxpr."""
+    inner = getattr(jaxpr, "jaxpr", jaxpr)
+    n = 0
+    for eqn in inner.eqns:
+        if eqn.primitive.name == prim_name:
+            n += 1
+        for v in eqn.params.values():
+            vs = v if isinstance(v, (list, tuple)) else (v,)
+            for vi in vs:
+                if hasattr(vi, "eqns") or hasattr(vi, "jaxpr"):
+                    n += count_eqns(vi, prim_name)
+    return n
+
+
+def local_leaf_tree(arch: str, key) -> dict:
+    """One device's per-layer parameter shard tree (production layout).
+
+    Per-layer leaves (``defs.period`` repeated ``n_periods`` times) rather
+    than the trainer's scan-stacked storage leaves: the logical tree any
+    non-scanned runtime exchanges, and the leaf count the per-leaf wire
+    path actually pays for."""
+    cfg = get_config(arch)
+    prod_ctx = ParallelContext(tp=PROD_TP, data_size=NODES * PROD_FSDP,
+                               n_nodes=NODES)
+    defs = T.build_defs(cfg, prod_ctx)
+    def_tree = {
+        "embed": defs.storage["embed"],
+        "layers": tuple(defs.period) * cfg.n_periods,
+        "final_norm": defs.storage["final_norm"],
+    }
+    if defs.prelude:
+        def_tree["prelude"] = defs.prelude
+    leaves, treedef = jax.tree_util.tree_flatten(
+        def_tree, is_leaf=lambda x: isinstance(x, ParamDef))
+    ks = jax.random.split(key, len(leaves))
+    vals = [
+        jax.random.normal(k, local_block_shape(d, PROD_TP, PROD_FSDP),
+                          jnp.float32).astype(d.dtype)
+        for k, d in zip(ks, leaves)
+    ]
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def build_step(rt: ConsensusRuntime, mesh, tree):
+    """jit'd (x_prev, x_half, state, noise, k) -> (x_next, state').
+
+    The bench trees carry a leading device dim of ``N_DEVICES`` (each
+    consensus node holds its own copy of the local shard shapes).
+    Quantization noise is injected (pre-generated once outside the timed
+    loop): PRNG cost is identical in both wire paths and excluding it
+    isolates exactly the per-leaf wire tax the packed path removes."""
+    pspec = jax.tree.map(lambda _: P("data"), tree)
+    cons_spec = {"x_tilde": P("data", None, None),
+                 "m_agg": P("data", None, None)}
+    noise_spec = P("data", None, None)
+
+    def init(p):
+        return jax.tree.map(lambda a: a[None], rt.init_state(p))
+
+    init_f = jax.jit(shard_map_compat(init, mesh, in_specs=(pspec,),
+                                      out_specs=cons_spec, check=False))
+
+    def step(xp, xh, st, noise, k):
+        st = jax.tree.map(lambda a: a[0], st)
+        x_next, st2, _ = rt.exchange(xp, xh, st, k, jax.random.PRNGKey(3),
+                                     noise=noise[0])
+        return x_next, jax.tree.map(lambda a: a[None], st2)
+
+    step_f = jax.jit(shard_map_compat(
+        step, mesh, in_specs=(pspec, pspec, cons_spec, noise_spec, P()),
+        out_specs=(pspec, cons_spec), check=False))
+    return init_f, step_f
+
+
+def time_path(rt, mesh, xp, xh, noise, label: str) -> dict:
+    init_f, step_f = build_step(rt, mesh, xp)
+    st = jax.tree.map(lambda a: a.block_until_ready(), init_f(xp))
+    k = jnp.asarray(2, jnp.int32)
+    jaxpr = jax.make_jaxpr(step_f)(xp, xh, st, noise, k)
+    collectives = count_eqns(jaxpr, "ppermute")
+    # warmup (compile) then best-of-repeats timed loops (robust to CI load)
+    t0 = time.perf_counter()
+    x, s = step_f(xp, xh, st, noise, k)
+    jax.tree.map(lambda a: a.block_until_ready(), (x, s))
+    compile_s = time.perf_counter() - t0
+    times = []
+    for _ in range(REPEATS):
+        t0 = time.perf_counter()
+        for _ in range(STEPS_TIMED):
+            x, s = step_f(x, xh, s, noise, k)
+        jax.tree.map(lambda a: a.block_until_ready(), (x, s))
+        times.append((time.perf_counter() - t0) / STEPS_TIMED)
+    sec = float(np.min(times))
+    print(f"  {label}: {1.0 / sec:8.2f} steps/s   {collectives} "
+          f"ppermutes/step   (compile {compile_s:.0f}s)", flush=True)
+    return {"steps_per_s": 1.0 / sec, "seconds_per_step": sec,
+            "collectives_per_step": collectives, "compile_s": compile_s}
+
+
+def main() -> int:
+    if jax.device_count() < N_DEVICES:
+        print(f"SKIP: need >= {N_DEVICES} devices, have {jax.device_count()} "
+              "(set XLA_FLAGS=--xla_force_host_platform_device_count=4)")
+        return 0
+    mesh = Mesh(np.array(jax.devices()[:N_DEVICES]), ("data",))
+    ctx = ParallelContext(tp=1, data_size=N_DEVICES, n_nodes=N_DEVICES,
+                          in_shard_map=True)
+    out, ok = {}, True
+    for arch in ARCHS:
+        key = jax.random.PRNGKey(hash(arch) % 2**31)
+        local = local_leaf_tree(arch, key)
+        layout = wire.WireLayout.for_tree(local)
+        # leading device dim: every node gets its own (identical-shape) shard
+        xp = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (N_DEVICES, *a.shape)), local)
+        xh = jax.tree.map(
+            lambda a: (a.astype(jnp.float32) + 1e-3).astype(a.dtype), xp)
+        print(f"{arch}: {layout.n_leaves} leaves, "
+              f"{layout.n_elements:,} local params, {layout.n_rows} rows",
+              flush=True)
+        noise = jnp.asarray(
+            np.random.default_rng(0).random(
+                (N_DEVICES, layout.n_rows, layout.block), np.float32))
+        res = {"leaves": layout.n_leaves, "local_params": layout.n_elements,
+               "rows": layout.n_rows}
+        for mode in ("per_leaf", "packed"):
+            rt = ConsensusRuntime(
+                ConsensusConfig(algorithm="adc_dgd", quant_mode="adaptive",
+                                wire_packing=mode), ctx)
+            res[mode] = time_path(rt, mesh, xp, xh, noise, f"{arch}/{mode}")
+            res[mode]["wire_bytes_per_step"] = rt.wire_bytes_per_step(
+                layout.n_elements, layout=layout)
+        res["speedup"] = (res["packed"]["steps_per_s"]
+                         / res["per_leaf"]["steps_per_s"])
+        print(f"  speedup: {res['speedup']:.2f}x", flush=True)
+        ok &= res["speedup"] >= 1.0
+        out[arch.replace("-", "_").replace(".", "_")] = res
+    payload = {"n_devices": N_DEVICES, "nodes": NODES,
+               "prod_mesh": f"{PROD_FSDP}x{PROD_TP}",
+               "steps_timed": STEPS_TIMED, "archs": out}
+    with open(os.path.join(REPO, "BENCH_consensus_step.json"), "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    art = os.path.join(REPO, "benchmarks", "artifacts")
+    os.makedirs(art, exist_ok=True)
+    with open(os.path.join(art, "consensus_step_latency.json"), "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    if not ok:
+        print("FAIL: packed wire path slower than per-leaf reference")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

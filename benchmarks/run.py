@@ -492,11 +492,16 @@ def bench_kernel_gqa_decode() -> None:
 
 
 def bench_llm_wire_bytes() -> None:
-    """Wire bytes per training step on the LLM trainer: ADC int8 vs DGD fp32
-    (static accounting via ConsensusRuntime.wire_bytes_per_step)."""
+    """Wire traffic per training step on the LLM trainer: ADC int8 payload
+    vs DGD fp32, bytes AND ring collectives, straight from the runtime's
+    static accounting (ConsensusRuntime.wire_bytes_per_step /
+    .collectives_per_step — no hand-derived constants)."""
+    import jax
     import jax.numpy as jnp
     from repro.configs import get_config
     from repro.core.distributed import ConsensusConfig, ConsensusRuntime
+    from repro.models import transformer as T
+    from repro.models.params import ParamDef, local_block_shape
     from repro.models.sharding import ParallelContext
     t0 = time.time()
     out = {}
@@ -504,19 +509,71 @@ def bench_llm_wire_bytes() -> None:
         cfg = get_config(arch)
         n_params = cfg.param_count()
         # production mesh: params sharded over 16 fsdp x 16 tp per pod
-        n_local = int(math.ceil(n_params / 256))
-        ctx = ParallelContext(tp=16, data_size=16, n_nodes=4)
+        ctx = ParallelContext(tp=16, data_size=64, n_nodes=4)
+        defs = T.build_defs(cfg, ctx)
+        leaves = jax.tree_util.tree_flatten(
+            defs.storage, is_leaf=lambda x: isinstance(x, ParamDef))[0]
+        local = [jax.ShapeDtypeStruct(
+            local_block_shape(d, ctx.tp, ctx.fsdp), d.dtype)
+            for d in leaves]
+        from repro.core import wire
+        layout = wire.WireLayout.for_tree(local)
         adc = ConsensusRuntime(ConsensusConfig(algorithm="adc_dgd"), ctx)
+        adc_pl = ConsensusRuntime(ConsensusConfig(
+            algorithm="adc_dgd", wire_packing="per_leaf"), ctx)
         dgd = ConsensusRuntime(ConsensusConfig(algorithm="dgd",
                                                wire_dtype=jnp.float32), ctx)
-        b_adc = adc.wire_bytes_per_step(n_local)
-        b_dgd = dgd.wire_bytes_per_step(n_local)
-        out[arch] = {"params": n_params, "adc_bytes_per_dev": b_adc,
-                     "dgd_fp32_bytes_per_dev": b_dgd,
-                     "compression_x": b_dgd / b_adc}
+        b_adc = adc.wire_bytes_per_step(layout.n_elements, layout=layout)
+        b_dgd = dgd.wire_bytes_per_step(layout.n_elements)
+        out[arch] = {
+            "params": n_params, "leaves": layout.n_leaves,
+            "local_params": layout.n_elements,
+            "adc_bytes_per_dev": b_adc, "dgd_fp32_bytes_per_dev": b_dgd,
+            "compression_x": b_dgd / b_adc,
+            "adc_collectives": adc.collectives_per_step(layout.n_leaves),
+            "adc_per_leaf_collectives":
+                adc_pl.collectives_per_step(layout.n_leaves),
+            "dgd_collectives": dgd.collectives_per_step(layout.n_leaves),
+        }
     _save("llm_wire_bytes", out)
     _row("llm_wire_bytes", time.time() - t0,
-         " ".join(f"{a}:{v['compression_x']:.2f}x" for a, v in out.items()))
+         " ".join(f"{a}:{v['compression_x']:.2f}x,"
+                  f"{int(v['adc_per_leaf_collectives'])}->"
+                  f"{int(v['adc_collectives'])}coll"
+                  for a, v in out.items()))
+
+
+def bench_consensus_step_latency() -> None:
+    """Packed vs per-leaf consensus exchange on real LLM leaf trees (see
+    benchmarks/consensus_step.py).  Runs in a subprocess so the >=4-device
+    host platform does not clash with this process's jax device state;
+    fails (raises) if the packed path is slower than the per-leaf path."""
+    import subprocess
+    import sys
+    t0 = time.time()
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(repo, "src")
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    proc = subprocess.run([sys.executable, "-m", "benchmarks.consensus_step"],
+                          capture_output=True, text=True, cwd=repo, env=env,
+                          timeout=3000)
+    if proc.returncode != 0:
+        raise RuntimeError(f"consensus_step failed:\n{proc.stdout[-2000:]}\n"
+                           f"{proc.stderr[-2000:]}")
+    first_line = proc.stdout.splitlines()[0] if proc.stdout else ""
+    if first_line.startswith("SKIP"):
+        # the subprocess could not create the >=4-device host mesh (e.g. a
+        # non-CPU jax backend); it writes no JSON — do not read a stale one
+        _row("consensus_step_latency", time.time() - t0, first_line)
+        return
+    with open(os.path.join(repo, "BENCH_consensus_step.json")) as f:
+        payload = json.load(f)
+    derived = " ".join(
+        f"{a}:{v['speedup']:.1f}x({int(v['per_leaf']['collectives_per_step'])}"
+        f"->{int(v['packed']['collectives_per_step'])}coll)"
+        for a, v in payload["archs"].items())
+    _row("consensus_step_latency", time.time() - t0, derived)
 
 
 def bench_roofline_summary() -> None:
@@ -539,7 +596,13 @@ def bench_roofline_summary() -> None:
                 "arch", "shape", "chips", "compute_s", "memory_s",
                 "collective_s", "dominant", "useful_flops_ratio")}
                 | {"variant": r.get("variant", "adc_int8")})
-    _save("roofline_summary", {"rows": rows})
+    # wire columns from the runtime's static accounting (written by
+    # llm_wire_bytes; collectives/bytes per step, packed vs per-leaf) —
+    # the roofline reports the packed-wire reduction without hand-derived
+    # constants.
+    wire_path = os.path.join(ART, "llm_wire_bytes.json")
+    wire_cols = json.load(open(wire_path)) if os.path.exists(wire_path) else {}
+    _save("roofline_summary", {"rows": rows, "wire": wire_cols})
     doms: dict[str, int] = {}
     for r in rows:
         doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
@@ -563,6 +626,7 @@ BENCHES = {
     "kernel_dequant": bench_kernel_dequant,
     "kernel_gqa_decode": bench_kernel_gqa_decode,
     "llm_wire_bytes": bench_llm_wire_bytes,
+    "consensus_step_latency": bench_consensus_step_latency,
     "roofline": bench_roofline_summary,
 }
 

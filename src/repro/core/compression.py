@@ -86,25 +86,45 @@ class RandomizedRounding(Compressor):
     [C(z)] = floor(z/d)*d + d * Bernoulli(frac(z/d));  E[C(z)] = z and
     Var <= delta^2/4 per element (worst case at frac = 1/2).
     Paper Examples 1 and 2 (Example 2 is delta = 1).
+
+    Wire format: the paper (Section V) stores codes as **int16**, so the
+    grid index is clamped to the int16 code range and the clamp fraction is
+    exposed for monitoring, mirroring :class:`Int8BlockQuantizer` — a code
+    outside [-32767, 32767] cannot travel in 16 bits, and silently emitting
+    int32 would misreport ``wire_bits``.
     """
 
     delta: float = 1.0
     wire_bits: float = 16.0  # paper Section V stores codes as int16
+    #: symmetric int16 code range (+-32767; -32768 unused, like int8's -128)
+    CODE_MAX = 32767
 
-    def apply(self, key, z):
+    def _grid_codes(self, key, z):
         s = z / self.delta
         lo = jnp.floor(s)
         p_up = s - lo  # P[round up]
         up = jax.random.bernoulli(key, p_up.astype(jnp.float32), shape=s.shape)
-        return (lo + up.astype(s.dtype)) * jnp.asarray(self.delta, z.dtype)
+        return (lo + up.astype(s.dtype)).astype(jnp.float32)
+
+    def apply(self, key, z):
+        q = jnp.clip(self._grid_codes(key, z), -self.CODE_MAX, self.CODE_MAX)
+        return (q * jnp.float32(self.delta)).astype(z.dtype)
 
     def codes(self, key, z):
-        """Integer wire codes (what actually gets transmitted)."""
-        s = z / self.delta
-        lo = jnp.floor(s)
-        p_up = s - lo
-        up = jax.random.bernoulli(key, p_up.astype(jnp.float32), shape=s.shape)
-        return (lo + up.astype(s.dtype)).astype(jnp.int32)
+        """int16 wire codes (what actually gets transmitted), clamped to
+        the representable range; consistent with ``apply`` by construction
+        (``decode(codes(k, z)) == apply(k, z)`` given the same key)."""
+        q = self._grid_codes(key, z)
+        return jnp.clip(q, -self.CODE_MAX, self.CODE_MAX).astype(jnp.int16)
+
+    def encode(self, key, z):
+        """(codes int16, meta) with the overflow guard of the int8 wire
+        format: ``meta['overflow_frac']`` is the fraction of grid indices
+        that fell outside the int16 range and were clamped."""
+        q = self._grid_codes(key, z)
+        overflow = jnp.mean((jnp.abs(q) > self.CODE_MAX).astype(jnp.float32))
+        codes = jnp.clip(q, -self.CODE_MAX, self.CODE_MAX).astype(jnp.int16)
+        return codes, {"overflow_frac": overflow}
 
     def decode(self, codes):
         return codes.astype(jnp.float32) * self.delta

@@ -222,13 +222,24 @@ class DGDt(_Algorithm):
     name: str = "dgd_t"
     elem_bytes: float = 8.0
 
+    def __post_init__(self):
+        # Cache the effective matrix W^t for the static case ONCE at
+        # construction: recomputing np.linalg.matrix_power (or a t-fold
+        # matmul chain) inside step() re-runs it on every trace/retrace.
+        if isinstance(self.mixing, MixingMatrix):
+            object.__setattr__(
+                self, "_w_eff",
+                np.linalg.matrix_power(np.asarray(self.mixing.w), self.t))
+        else:
+            object.__setattr__(self, "_w_eff", None)
+
     def init(self, problem, x0=None):
         return DGD(self.mixing, self.stepsize).init(problem, x0)
 
     def step(self, state, problem, key, w=None):
         del key
-        if w is None and isinstance(self.mixing, MixingMatrix):
-            wt = jnp.asarray(np.linalg.matrix_power(self.mixing.w, self.t))
+        if w is None and self._w_eff is not None:
+            wt = jnp.asarray(self._w_eff)
         else:
             # step-indexed W: all t consensus rounds of iteration k use W^(k)
             w = self._w(w)

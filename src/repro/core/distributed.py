@@ -22,8 +22,17 @@ DESIGN.md §Hardware adaptation):
     x_i^{k+1}  = w_self * x_tilde_i + m_i + (x^{k+1/2} - x_i^k)  [gradient step
                  applied on top of the consensus combine, cf. Eq. (6)]
 
-State per leaf: x_tilde (self estimate) and m_agg (incremental
-sum_{j!=i} W_ij x_tilde_j) — O(1) memory in node degree (DESIGN.md).
+State: x_tilde (self estimate) and m_agg (incremental
+sum_{j!=i} W_ij x_tilde_j) — O(1) memory in node degree (DESIGN.md) — held
+**persistently in packed wire form**: one ``(n_rows, BLOCK)`` fp32 buffer
+spanning every leaf of the parameter tree (:class:`repro.core.wire.
+WireLayout`).  The default ``wire_packing="packed"`` hot path therefore
+runs ONE quantize launch, ONE byte-payload ``ppermute`` per ring direction
+(two collectives per step total, independent of leaf count), and ONE fused
+dequant-combine launch per step.  ``wire_packing="per_leaf"`` keeps the
+historical per-leaf wire path (4 x n_leaves collectives per step) as a
+bit-identical reference for tests and the ``consensus_step_latency``
+benchmark (DESIGN.md §Hardware adaptation).
 
 Algorithms:
   adc_dgd        — the paper's contribution (wire = int8 codes + scales)
@@ -49,6 +58,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.core import wire
 from repro.kernels import ops as kops
 from repro.models.sharding import ParallelContext
 
@@ -93,6 +103,13 @@ class ConsensusConfig:
     #: which ConsensusRuntime enforces.  (1,) == the static paper ring.
     ring_strides: tuple[int, ...] = (1,)
     schedule_period: int = 1       # steps between ring re-wirings
+    #: wire strategy for the compressed exchanges (DESIGN.md §Hardware
+    #: adaptation): "packed" flat-packs the whole parameter tree into one
+    #: lane-aligned buffer — one quantize launch + one byte-payload
+    #: ppermute per ring direction per step; "per_leaf" is the historical
+    #: bit-identical per-leaf reference (4 x n_leaves collectives/step),
+    #: kept for equivalence tests and the consensus_step_latency benchmark.
+    wire_packing: str = "packed"   # packed | per_leaf
 
     @property
     def side_weight(self) -> float:
@@ -104,6 +121,9 @@ class ConsensusConfig:
         if self.schedule_period < 1:
             raise ValueError(f"schedule_period must be >= 1, got "
                              f"{self.schedule_period}")
+        if self.wire_packing not in ("packed", "per_leaf"):
+            raise ValueError(f"wire_packing must be 'packed' or 'per_leaf', "
+                             f"got {self.wire_packing!r}")
 
 
 def _flat_ring_perm(ctx: ParallelContext, shift: int):
@@ -154,62 +174,142 @@ class ConsensusRuntime:
 
     # -- state ---------------------------------------------------------
     def init_state(self, params: Any) -> Any:
+        """Consensus shadows for the *local* parameter shard tree.
+
+        For ``adc_dgd`` the shadows are returned **packed**: one
+        ``(n_rows, BLOCK)`` fp32 buffer per shadow spanning all leaves
+        (:class:`repro.core.wire.WireLayout`), so no per-step blockify of
+        the state ever appears in the exchange trace.  Must be called on
+        per-device leaves (inside shard_map, or on the logical tree in
+        single-process use) — the packing is a device-local layout.
+        """
         if self.cfg.algorithm in ("allreduce", "none", "compressed_dgd", "dgd"):
             return {}
         # All nodes start from the same x0 (shared init seed), so every
         # neighbor estimate x_tilde_j,0 = x0 and the incremental aggregate
         # m_0 = sum_{j != i} W_ij x_tilde_j,0 = (1 - W_ii) * x0.
         side_total = 1.0 - self.cfg.self_weight
-        return {
-            "x_tilde": jax.tree.map(lambda p: p.astype(jnp.float32), params),
-            "m_agg": jax.tree.map(
-                lambda p: side_total * p.astype(jnp.float32), params),
-        }
+        layout = wire.WireLayout.for_tree(params)
+        x_tilde = layout.pack(params)
+        return {"x_tilde": x_tilde, "m_agg": side_total * x_tilde}
 
-    # -- wire-bytes accounting (static; used by rooflines & benchmarks) --
-    def wire_bytes_per_step(self, n_params_local: int) -> float:
-        if self.cfg.algorithm == "adc_dgd":
+    def state_layout(self, params: Any) -> wire.WireLayout:
+        """The static packing plan for a (local) parameter tree."""
+        return wire.WireLayout.for_tree(params)
+
+    # -- wire accounting (static; used by rooflines & benchmarks) --------
+    def wire_bytes_per_step(self, n_params_local: int,
+                            layout: wire.WireLayout | None = None) -> float:
+        """Bytes this device puts on the ring per step.
+
+        ``layout`` (when available) gives the exact padded row count;
+        otherwise rows are estimated from the contiguous element count
+        (exact when the tree packs as one leaf).  The per-leaf wire path
+        ships each leaf padded to the historical TILE_N-aligned blockify
+        height, so it puts MORE rows on the wire than the row-granular
+        packed payload for the same tree.
+        """
+        if layout is not None:
+            if self.cfg.wire_packing == "per_leaf":
+                rows = sum(kops.padded_block_rows(s.size)
+                           for s in layout.slots)
+            else:
+                rows = layout.n_rows
+        else:
             rows = kops.padded_block_rows(n_params_local)
-            per_dir = rows * kops.BLOCK * 1 + rows * 4          # int8 + scales
-            total = 2 * per_dir                                  # two ring dirs
-            if len(self.cfg.ring_strides) > 1:
+        if self.cfg.algorithm in ("adc_dgd", "compressed_dgd"):
+            # one byte payload per ring direction: int8 codes + fp32 scale
+            total = 2.0 * rows * kops.payload_width()
+            if self.cfg.algorithm == "adc_dgd" and len(self.cfg.ring_strides) > 1:
                 # amortized epoch-boundary resync: one fp32 x_tilde exchange
                 # per re-wiring (both ring directions)
-                total += (2 * rows * kops.BLOCK * 4
+                total += (2.0 * rows * kops.BLOCK * 4
                           / self.cfg.schedule_period)
             return total
-        if self.cfg.algorithm in ("dgd", "compressed_dgd"):
+        if self.cfg.algorithm == "dgd":
             itemsize = jnp.dtype(self.cfg.wire_dtype).itemsize
-            return 2 * n_params_local * itemsize
+            return 2.0 * n_params_local * itemsize
         return 0.0
 
+    def collectives_per_step(self, n_leaves: int = 1) -> float:
+        """Ring collectives this device issues per training step (static).
+
+        The packed wire path is leaf-count independent: exactly one
+        payload ``ppermute`` per ring direction (+ the amortized fp32
+        resync exchange for time-varying rings).  The per-leaf reference
+        pays 4 collectives per leaf (codes/scales x two directions).
+        """
+        cfg = self.cfg
+        n = self.ctx.total_consensus_nodes
+        if cfg.algorithm == "none" or (n <= 1 and cfg.algorithm != "allreduce"):
+            return 0.0
+        resync_amort = (1.0 / cfg.schedule_period
+                        if len(cfg.ring_strides) > 1 else 0.0)
+        if cfg.algorithm == "adc_dgd":
+            if cfg.wire_packing == "packed":
+                return 2.0 + 2.0 * resync_amort
+            return 4.0 * n_leaves + 2.0 * n_leaves * resync_amort
+        if cfg.algorithm == "compressed_dgd":
+            return 2.0 if cfg.wire_packing == "packed" else 4.0 * n_leaves
+        if cfg.algorithm == "dgd":
+            return 2.0 * n_leaves
+        assert cfg.algorithm == "allreduce", cfg.algorithm
+        return float(n - 1) * n_leaves        # ppermute-rotation all-reduce
+
     # -- the exchange ----------------------------------------------------
-    def exchange(self, x_prev: Any, x_half: Any, state: Any, step, key):
+    def exchange(self, x_prev: Any, x_half: Any, state: Any, step, key,
+                 noise: Any = None):
         """x_prev: params at step k; x_half: after the local optimizer step.
+
+        ``noise``: optional pre-generated uniform noise buffer of shape
+        ``(layout.n_rows, BLOCK)`` consumed row-for-row by the quantizer.
+        When ``None`` (production) each wire path generates its own stream:
+        packed draws ONE buffer from the device-folded key; per_leaf draws
+        per-leaf buffers from split keys (the historical path's cost and
+        stream).  Tests inject one shared buffer into both paths to assert
+        bit-for-bit equivalence of the wire transformation itself.
 
         Returns (x_next, new_state, metrics).
         """
         alg = self.cfg.algorithm
         ctx = self.ctx
+        layout = wire.WireLayout.for_tree(x_half)
+
+        def base_metrics(x_out):
+            # every key train.py's out_specs declares for this config must
+            # be present on every return path (shard_map pytree contract)
+            m = self._wire_metrics(layout)
+            if alg == "adc_dgd":
+                m["overflow_frac"] = jnp.zeros((), jnp.float32)
+            if self.cfg.track_consensus_error:
+                m["consensus_err"] = _consensus_error(x_out, ctx)
+            return m
+
         if alg == "none" or ctx.total_consensus_nodes <= 1 and alg != "allreduce":
-            return x_half, state, {}
+            return x_half, state, base_metrics(x_half)
         if alg == "allreduce":
             # W = (1/N)11^T via psum over node subgroups (same fsdp rank
             # across nodes & pods) — classic synchronous data parallelism.
             x_next = _allreduce_mean_delta(x_prev, x_half, ctx)
-            return x_next, state, {}
+            return x_next, state, base_metrics(x_next)
+        packed = self.cfg.wire_packing == "packed"
         if alg == "dgd":
             impl = lambda s: self._dgd_exchange(  # noqa: E731
-                x_prev, x_half, state, compress=False, step=step, key=key,
-                stride=s)
+                x_prev, x_half, state, step=step, key=key, stride=s,
+                layout=layout)
         elif alg == "compressed_dgd":
-            impl = lambda s: self._dgd_exchange(  # noqa: E731
-                x_prev, x_half, state, compress=True, step=step, key=key,
-                stride=s)
+            fn = (self._cdgd_exchange_packed if packed
+                  else self._cdgd_exchange_per_leaf)
+            impl = lambda s: fn(  # noqa: E731
+                x_prev, x_half, state, step=step, key=key, stride=s,
+                noise=noise, layout=layout)
         else:
             assert alg == "adc_dgd", alg
-            impl = lambda s: self._adc_exchange(  # noqa: E731
-                x_prev, x_half, state, step, key, stride=s)
+            fn = (self._adc_exchange if packed
+                  else self._adc_exchange_per_leaf)
+            impl = lambda s: fn(  # noqa: E731
+                x_prev, x_half, state, step, key, stride=s, noise=noise,
+                layout=layout)
         return self._dispatch_stride(impl, step)
 
     # ------------------------------------------------------------------
@@ -227,53 +327,150 @@ class ConsensusRuntime:
         return jax.lax.switch(epoch % len(strides), branches)
 
     # ------------------------------------------------------------------
-    def _adc_exchange(self, x_prev, x_half, state, step, key, stride=1):
-        cfg, ctx = self.cfg, self.ctx
-        # Epoch-boundary m_agg resync for time-varying rings: the
-        # incremental aggregate m_agg = sum_j W_ij x_tilde_j is only valid
-        # for a fixed neighbor set, so on the first step of every schedule
-        # epoch the NEW neighbors exchange their fp32 x_tilde once and
-        # m_agg is rebuilt exactly (amortized in wire_bytes_per_step).
+    def _resync_flag(self, step):
+        """Epoch-boundary m_agg resync predicate for time-varying rings: the
+        incremental aggregate m_agg = sum_j W_ij x_tilde_j is only valid
+        for a fixed neighbor set, so on the first step of every schedule
+        epoch the NEW neighbors exchange their fp32 x_tilde once and
+        m_agg is rebuilt exactly (amortized in wire_bytes_per_step)."""
+        if len(self.cfg.ring_strides) <= 1:
+            return None
         step_i32 = jnp.asarray(step, jnp.int32)
-        resync = (jnp.logical_and((step_i32 - 1) % cfg.schedule_period == 0,
-                                  step_i32 > 1)
-                  if len(cfg.ring_strides) > 1 else None)
-        k = jnp.maximum(1.0, step.astype(jnp.float32))
-        # fixed mode: effective grid step Delta_k = Delta_0 / k^gamma — this IS
-        # the amplified-differential trick with amplification folded into the
-        # quantizer (transmit C(k^g y)/k^g == round-to-grid(Delta_0/k^g)).
-        step_k = (jnp.asarray(cfg.fixed_step0, jnp.float32) / k**cfg.gamma
-                  if cfg.quant_mode == "fixed" else None)
+        return jnp.logical_and(
+            (step_i32 - 1) % self.cfg.schedule_period == 0, step_i32 > 1)
 
+    def _step_k(self, step):
+        """fixed mode: effective grid step Delta_k = Delta_0 / k^gamma — this
+        IS the amplified-differential trick with amplification folded into
+        the quantizer (transmit C(k^g y)/k^g == round-to-grid(Delta_0/k^g))."""
+        if self.cfg.quant_mode != "fixed":
+            return None
+        k = jnp.maximum(1.0, step.astype(jnp.float32))
+        return jnp.asarray(self.cfg.fixed_step0, jnp.float32) / k**self.cfg.gamma
+
+    def _wire_metrics(self, layout: wire.WireLayout) -> dict:
+        """Static per-step wire accounting, surfaced so benchmarks and
+        rooflines report the packed-path reduction without hand-derived
+        constants."""
+        return {
+            "collectives_per_step": jnp.asarray(
+                self.collectives_per_step(layout.n_leaves), jnp.float32),
+            "wire_bytes_per_step": jnp.asarray(
+                self.wire_bytes_per_step(layout.n_elements, layout=layout),
+                jnp.float32),
+        }
+
+    # ------------------------------------------------------------------
+    def _adc_exchange(self, x_prev, x_half, state, step, key, stride=1,
+                      noise=None, layout=None):
+        """Packed ADC-DGD exchange: the whole parameter tree as ONE wire
+        problem.  One quantize launch over the packed differential, one
+        byte payload ``ppermute`` per ring direction, one fused
+        dequant-combine launch; leaves are materialized only for the
+        returned ``x_next``.  Bit-identical to ``_adc_exchange_per_leaf``
+        given the same noise buffer.
+        """
+        cfg, ctx = self.cfg, self.ctx
+        if layout is None:
+            layout = wire.WireLayout.for_tree(x_half)
+        resync = self._resync_flag(step)
+        step_k = self._step_k(step)
+        key = _device_key(key, ctx)
+
+        xt = state["x_tilde"]                       # (n_rows, BLOCK) packed
+        mb = state["m_agg"]
+        xh_p = layout.pack(x_half)
+        y = xh_p - xt                               # packed differential
+        if noise is None:
+            noise = jax.random.uniform(key, y.shape, jnp.float32)
+        payload = kops.quantize_payload(y, noise, fixed_step=step_k,
+                                        use_pallas=cfg.use_pallas)
+        if cfg.quant_mode == "fixed":
+            # overflow monitoring (paper §IV-D: bounded transmitted values)
+            codes = kops.unpack_payload(payload, layout.block)[0]
+            overflow = jnp.mean((jnp.abs(codes.astype(jnp.float32)) >= 127)
+                                .astype(jnp.float32))
+        else:
+            overflow = jnp.zeros((), jnp.float32)
+        # the ring exchange: exactly one collective per direction, carrying
+        # codes AND scales for every leaf in a single byte buffer
+        p_l = _ppermute_ring(payload, ctx, +stride)
+        p_r = _ppermute_ring(payload, ctx, -stride)
+        if resync is not None:
+            def _rebuild(xt=xt):
+                xt_l = _ppermute_ring(xt, ctx, +stride)
+                xt_r = _ppermute_ring(xt, ctx, -stride)
+                return jnp.float32(cfg.side_weight) * (xt_l + xt_r)
+            mb = jax.lax.cond(resync, _rebuild, lambda mb=mb: mb)
+        xt_new, m_new, comb = kops.dequant_combine_payload(
+            payload, p_l, p_r, xt, mb, cfg.self_weight, cfg.side_weight,
+            jnp.float32(1.0), use_pallas=cfg.use_pallas)
+        # gradient step applied per leaf while unpacking (x_prev never
+        # needs packing; identical elementwise ops to the per-leaf path)
+        comb_leaves = layout.unpack(comb, cast=False)
+        x_next = jax.tree.map(
+            lambda c, h, p: (c + (h.astype(jnp.float32)
+                                  - p.astype(jnp.float32))).astype(h.dtype),
+            comb_leaves, x_half, x_prev)
+        new_state = {"x_tilde": xt_new, "m_agg": m_new}
+        metrics = {"overflow_frac": overflow, **self._wire_metrics(layout)}
+        if cfg.track_consensus_error:
+            metrics["consensus_err"] = _consensus_error(x_next, self.ctx)
+        return x_next, new_state, metrics
+
+    # ------------------------------------------------------------------
+    def _adc_exchange_per_leaf(self, x_prev, x_half, state, step, key,
+                               stride=1, noise=None, layout=None):
+        """Per-leaf reference wire path (the historical hot loop): per leaf
+        a noise draw, a quantize launch, FOUR ring collectives (codes/
+        scales x both directions) and a dequant-combine launch.  Shares
+        the packed shadow state with :meth:`_adc_exchange`; given the same
+        injected ``noise`` buffer the two paths are bit-for-bit
+        interchangeable (tests/test_wire.py).  Kept for equivalence
+        testing and the consensus_step_latency benchmark.
+        """
+        cfg, ctx = self.cfg, self.ctx
+        if layout is None:
+            layout = wire.WireLayout.for_tree(x_half)
+        resync = self._resync_flag(step)
+        step_k = self._step_k(step)
         key = _device_key(key, ctx)
         leaves, treedef = jax.tree_util.tree_flatten(x_half)
         prev_leaves = jax.tree_util.tree_flatten(x_prev)[0]
-        xt_leaves = jax.tree_util.tree_flatten(state["x_tilde"])[0]
-        m_leaves = jax.tree_util.tree_flatten(state["m_agg"])[0]
-        keys = jax.random.split(key, len(leaves))
+        leaf_keys = (jax.random.split(key, len(leaves))
+                     if noise is None else None)
 
-        new_x, new_xt, new_m = [], [], []
-        overflow_acc = jnp.zeros((), jnp.float32)
-        for leaf_half, leaf_prev, xt, m, kk in zip(
-                leaves, prev_leaves, xt_leaves, m_leaves, keys):
-            n_el = leaf_half.size
-            y = (leaf_half.astype(jnp.float32) - xt).reshape(-1)
-            yb = kops.blockify(y)
-            noise = jax.random.uniform(kk, yb.shape, jnp.float32)
+        def rowpad(a, rows):
+            # per-leaf buffers padded to the historical TILE_N-aligned
+            # blockify height (zero rows quantize to code 0, so padding is
+            # inert); the packed layout itself is row-granular
+            return jnp.pad(a, ((0, rows - a.shape[0]), (0, 0)))
+
+        new_x, new_xt_rows, new_m_rows = [], [], []
+        clipped_acc = jnp.zeros((), jnp.float32)
+        for i, (leaf_half, leaf_prev) in enumerate(zip(leaves, prev_leaves)):
+            slot = layout.slots[i]
+            full = kops.padded_block_rows(slot.size)
+            xh_b = kops.blockify(leaf_half.astype(jnp.float32).reshape(-1))
+            xtb = rowpad(layout.leaf_rows(state["x_tilde"], i), full)
+            mb = rowpad(layout.leaf_rows(state["m_agg"], i), full)
+            yb = xh_b - xtb
+            if noise is None:       # historical per-leaf noise stream
+                noise_b = jax.random.uniform(leaf_keys[i], yb.shape,
+                                             jnp.float32)
+            else:                   # injected shared stream (equivalence)
+                noise_b = rowpad(layout.leaf_rows(noise, i), full)
             codes, scales = kops.quantize_blocks(
-                yb, noise, fixed_step=step_k, use_pallas=cfg.use_pallas)
+                yb, noise_b, fixed_step=step_k, use_pallas=cfg.use_pallas)
             if cfg.quant_mode == "fixed":
-                # overflow monitoring (paper §IV-D: bounded transmitted values)
-                clipped = jnp.mean((jnp.abs(codes.astype(jnp.float32)) >= 127)
-                                   .astype(jnp.float32))
-                overflow_acc = overflow_acc + clipped
-            # ring exchange of the wire payload (int8 codes + scales)
+                clipped_acc = clipped_acc + jnp.sum(
+                    (jnp.abs(codes.astype(jnp.float32)) >= 127)
+                    .astype(jnp.float32))
+            # per-leaf ring exchange (the 4 x n_leaves collective tax)
             c_l = _ppermute_ring(codes, ctx, +stride)
             s_l = _ppermute_ring(scales, ctx, +stride)
             c_r = _ppermute_ring(codes, ctx, -stride)
             s_r = _ppermute_ring(scales, ctx, -stride)
-            xtb = kops.blockify(xt.reshape(-1))
-            mb = kops.blockify(m.reshape(-1))
             if resync is not None:
                 def _rebuild(xtb=xtb):
                     xt_l = _ppermute_ring(xtb, ctx, +stride)
@@ -284,60 +481,123 @@ class ConsensusRuntime:
                 codes, scales, c_l, s_l, c_r, s_r, xtb, mb,
                 cfg.self_weight, cfg.side_weight, jnp.float32(1.0),
                 use_pallas=cfg.use_pallas)
-            combined = kops.unblockify(comb_b, n_el).reshape(leaf_half.shape)
-            grad_step = leaf_half.astype(jnp.float32) - leaf_prev.astype(jnp.float32)
-            x_next = (combined + grad_step).astype(leaf_half.dtype)
-            new_x.append(x_next)
-            new_xt.append(kops.unblockify(xt_new_b, n_el).reshape(xt.shape))
-            new_m.append(kops.unblockify(m_new_b, n_el).reshape(m.shape))
+            grad_step = (leaf_half.astype(jnp.float32)
+                         - leaf_prev.astype(jnp.float32))
+            combined = kops.unblockify(comb_b, slot.size).reshape(slot.shape)
+            new_x.append((combined + grad_step).astype(leaf_half.dtype))
+            new_xt_rows.append(xt_new_b[: slot.n_rows])
+            new_m_rows.append(m_new_b[: slot.n_rows])
 
-        unf = lambda ls: jax.tree_util.tree_unflatten(treedef, ls)
-        x_next = unf(new_x)
-        new_state = {"x_tilde": unf(new_xt), "m_agg": unf(new_m)}
-        metrics = {"overflow_frac": overflow_acc / max(len(leaves), 1)}
+        x_next = jax.tree_util.tree_unflatten(treedef, new_x)
+        new_state = {"x_tilde": layout.from_leaf_rows(new_xt_rows),
+                     "m_agg": layout.from_leaf_rows(new_m_rows)}
+        overflow = clipped_acc / float(layout.n_rows * layout.block)
+        metrics = {"overflow_frac": overflow, **self._wire_metrics(layout)}
         if cfg.track_consensus_error:
             metrics["consensus_err"] = _consensus_error(x_next, self.ctx)
         return x_next, new_state, metrics
 
     # ------------------------------------------------------------------
-    def _dgd_exchange(self, x_prev, x_half, state, compress, step, key,
-                      stride=1):
-        """DGD / direct-compression DGD: mix the raw parameters each step."""
+    def _cdgd_exchange_packed(self, x_prev, x_half, state, step, key,
+                              stride=1, noise=None, layout=None):
+        """Direct-compression DGD (Eq. (5), negative control), packed wire:
+        one quantize launch over the packed x and one payload ppermute per
+        ring direction.  The node's own x enters the mix uncompressed
+        (matching :class:`repro.core.consensus.CompressedDGD`).  The wire
+        is the int8 payload; ``cfg.wire_dtype`` applies only to the
+        uncompressed ``dgd`` baseline."""
         cfg, ctx = self.cfg, self.ctx
-        w_self, w_side = cfg.self_weight, cfg.side_weight
+        if layout is None:
+            layout = wire.WireLayout.for_tree(x_half)
+        key = _device_key(key, ctx)
+        xp_p = layout.pack(x_prev)
+        if noise is None:
+            noise = jax.random.uniform(key, xp_p.shape, jnp.float32)
+        payload = kops.quantize_payload(
+            xp_p, noise, fixed_step=jnp.float32(cfg.fixed_step0),
+            use_pallas=cfg.use_pallas)
+        p_l = _ppermute_ring(payload, ctx, +stride)
+        p_r = _ppermute_ring(payload, ctx, -stride)
+        c_l, s_l = kops.unpack_payload(p_l, layout.block)
+        c_r, s_r = kops.unpack_payload(p_r, layout.block)
+        left = c_l.astype(jnp.float32) * s_l
+        right = c_r.astype(jnp.float32) * s_r
+        mixed = (cfg.self_weight * xp_p + cfg.side_weight * (left + right))
+        mixed_leaves = layout.unpack(mixed, cast=False)
+        x_next = jax.tree.map(
+            lambda m, h, p: (m + (h.astype(jnp.float32)
+                                  - p.astype(jnp.float32))).astype(h.dtype),
+            mixed_leaves, x_half, x_prev)
+        metrics = self._wire_metrics(layout)
+        if cfg.track_consensus_error:
+            metrics["consensus_err"] = _consensus_error(x_next, self.ctx)
+        return x_next, state, metrics
+
+    def _cdgd_exchange_per_leaf(self, x_prev, x_half, state, step, key,
+                                stride=1, noise=None, layout=None):
+        """Per-leaf reference of :meth:`_cdgd_exchange_packed` (4 ring
+        collectives per leaf); bit-identical given the same injected
+        noise buffer."""
+        cfg, ctx = self.cfg, self.ctx
+        if layout is None:
+            layout = wire.WireLayout.for_tree(x_half)
         key = _device_key(key, ctx)
         leaves, treedef = jax.tree_util.tree_flatten(x_half)
         prev_leaves = jax.tree_util.tree_flatten(x_prev)[0]
-        keys = jax.random.split(key, len(leaves))
+        leaf_keys = (jax.random.split(key, len(leaves))
+                     if noise is None else None)
         out = []
-        for leaf_half, leaf_prev, kk in zip(leaves, prev_leaves, keys):
-            send = leaf_prev.astype(cfg.wire_dtype)
-            if compress:
-                yb = kops.blockify(send.astype(jnp.float32).reshape(-1))
-                noise = jax.random.uniform(kk, yb.shape, jnp.float32)
-                codes, scales = kops.quantize_blocks(
-                    yb, noise, fixed_step=jnp.float32(cfg.fixed_step0),
-                    use_pallas=cfg.use_pallas)
-                send_dec = kops.unblockify(
-                    codes.astype(jnp.float32) * scales, leaf_prev.size
-                ).reshape(leaf_prev.shape)
-                wire = codes  # what actually travels
-                left = _ppermute_ring(codes, ctx, +stride).astype(jnp.float32) * \
-                    _ppermute_ring(scales, ctx, +stride)
-                right = _ppermute_ring(codes, ctx, -stride).astype(jnp.float32) * \
-                    _ppermute_ring(scales, ctx, -stride)
-                left = kops.unblockify(left, leaf_prev.size).reshape(leaf_prev.shape)
-                right = kops.unblockify(right, leaf_prev.size).reshape(leaf_prev.shape)
+        for i, (leaf_half, leaf_prev) in enumerate(zip(leaves, prev_leaves)):
+            slot = layout.slots[i]
+            xb = kops.blockify(leaf_prev.astype(jnp.float32).reshape(-1))
+            if noise is None:
+                noise_i = jax.random.uniform(leaf_keys[i], xb.shape,
+                                             jnp.float32)
             else:
-                left = _ppermute_ring(send, ctx, +stride).astype(jnp.float32)
-                right = _ppermute_ring(send, ctx, -stride).astype(jnp.float32)
+                noise_i = jnp.pad(layout.leaf_rows(noise, i),
+                                  ((0, xb.shape[0] - slot.n_rows), (0, 0)))
+            codes, scales = kops.quantize_blocks(
+                xb, noise_i, fixed_step=jnp.float32(cfg.fixed_step0),
+                use_pallas=cfg.use_pallas)
+            left = _ppermute_ring(codes, ctx, +stride).astype(jnp.float32) * \
+                _ppermute_ring(scales, ctx, +stride)
+            right = _ppermute_ring(codes, ctx, -stride).astype(jnp.float32) * \
+                _ppermute_ring(scales, ctx, -stride)
+            mixed = (cfg.self_weight * xb + cfg.side_weight * (left + right))
+            mixed = kops.unblockify(mixed, slot.size).reshape(slot.shape)
+            grad_step = (leaf_half.astype(jnp.float32)
+                         - leaf_prev.astype(jnp.float32))
+            out.append((mixed + grad_step).astype(leaf_half.dtype))
+        x_next = jax.tree_util.tree_unflatten(treedef, out)
+        metrics = self._wire_metrics(layout)
+        if cfg.track_consensus_error:
+            metrics["consensus_err"] = _consensus_error(x_next, self.ctx)
+        return x_next, state, metrics
+
+    # ------------------------------------------------------------------
+    def _dgd_exchange(self, x_prev, x_half, state, step, key, stride=1,
+                      layout=None):
+        """Uncompressed DGD: mix the raw fp32/wire_dtype parameters each
+        step (per leaf — the wire_dtype cast is the whole wire format)."""
+        cfg, ctx = self.cfg, self.ctx
+        del step, key
+        w_self, w_side = cfg.self_weight, cfg.side_weight
+        if layout is None:
+            layout = wire.WireLayout.for_tree(x_half)
+        leaves, treedef = jax.tree_util.tree_flatten(x_half)
+        prev_leaves = jax.tree_util.tree_flatten(x_prev)[0]
+        out = []
+        for leaf_half, leaf_prev in zip(leaves, prev_leaves):
+            send = leaf_prev.astype(cfg.wire_dtype)
+            left = _ppermute_ring(send, ctx, +stride).astype(jnp.float32)
+            right = _ppermute_ring(send, ctx, -stride).astype(jnp.float32)
             mixed = (w_self * leaf_prev.astype(jnp.float32)
                      + w_side * (left + right))
             grad_step = (leaf_half.astype(jnp.float32)
                          - leaf_prev.astype(jnp.float32))
             out.append((mixed + grad_step).astype(leaf_half.dtype))
         x_next = jax.tree_util.tree_unflatten(treedef, out)
-        metrics = {}
+        metrics = self._wire_metrics(layout)
         if cfg.track_consensus_error:
             metrics["consensus_err"] = _consensus_error(x_next, self.ctx)
         return x_next, state, metrics

@@ -1,0 +1,207 @@
+"""Flat wire packing: one lane-aligned buffer for the whole parameter tree.
+
+The per-leaf consensus exchange pays a per-leaf tax on the hottest path we
+have: every parameter leaf costs a blockify reshape, a quantize launch,
+four ``ppermute`` collectives (codes/scales x two ring directions) and a
+dequant-combine launch — O(leaf count) small collectives per training step.
+This module makes the whole tree look like ONE quantization problem:
+
+* :class:`WireLayout` — a **static** map from every fp32-consensus leaf to a
+  row range of a single lane-aligned ``(n_rows, BLOCK)`` buffer.  Each leaf
+  is padded to whole ``BLOCK`` rows only (row-granular: quantization blocks
+  never span leaves, so per-block scales/codes are **identical** to
+  quantizing each leaf separately — tests/test_wire.py asserts this); the
+  buffer tail is padded to a ``TILE_N``-row multiple once for the Pallas
+  grid.  Row granularity keeps padding overhead at < BLOCK elements per
+  leaf — per-leaf ``TILE_N`` padding would inflate leaf-rich trees
+  (hundreds of per-layer leaves) by 2-3x.
+* ``pack`` / ``unpack`` — the only per-leaf work left on the hot path:
+  reshape+pad+concat into the packed buffer (fuses into one copy, no
+  collectives) and the inverse slice-out for the returned parameter tree.
+
+The consensus shadows ``x_tilde`` / ``m_agg`` live **persistently** in
+packed form (``ConsensusRuntime.init_state``), so the per-step
+blockify/unblockify reshapes of the shadows disappear from the trace
+entirely; the ring then exchanges one byte payload per direction
+(``repro.kernels.ops.pack_payload``) regardless of leaf count.
+
+Padding invariant: padding rows quantize to code 0 (stochastic rounding of
+an exact 0 differential never rounds away from 0), so the zero padding of
+``x_tilde`` / ``m_agg`` is preserved by every exchange step and resync —
+no re-zeroing pass is needed (asserted in tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as kops
+
+__all__ = ["LeafSlot", "WireLayout", "pvary_to"]
+
+
+def pvary_to(x, axes):
+    """Mark ``x`` vma-varying over ``axes`` (no-op semantically; required so
+    shard_map(check_vma=True) out_specs naming those axes type-check even
+    when no leaf of the packed tree happened to vary on one of them).
+    No-op on jax versions without the vma system."""
+    typeof = getattr(jax, "typeof", None)
+    if typeof is None:
+        return x
+    have = getattr(typeof(x), "vma", frozenset()) or frozenset()
+    missing = tuple(a for a in axes if a is not None and a not in have)
+    return jax.lax.pcast(x, missing, to="varying") if missing else x
+
+
+def _lift_common_vma(arrays):
+    """pcast every array to the union vma of the group before concatenation
+    (shard_map check_vma=True requires concat operands uniformly typed; a
+    no-op outside shard_map and on jax versions without the vma system)."""
+    typeof = getattr(jax, "typeof", None)
+    if typeof is None:
+        return list(arrays)
+    union: frozenset = frozenset()
+    for a in arrays:
+        union |= getattr(typeof(a), "vma", frozenset()) or frozenset()
+    if not union:
+        return list(arrays)
+    out = []
+    for a in arrays:
+        have = getattr(typeof(a), "vma", frozenset()) or frozenset()
+        missing = tuple(union - have)
+        out.append(jax.lax.pcast(a, missing, to="varying") if missing else a)
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSlot:
+    """Where one leaf lives inside the packed buffer (all static)."""
+
+    shape: tuple[int, ...]
+    dtype: Any                 # original leaf dtype (unpack casts back)
+    size: int                  # number of real elements
+    row_start: int             # first block row of this leaf
+    n_rows: int                # whole BLOCK-rows owned by this leaf (ceil)
+
+    @property
+    def row_end(self) -> int:
+        return self.row_start + self.n_rows
+
+
+@dataclasses.dataclass(frozen=True)
+class WireLayout:
+    """Static packing plan for a parameter tree (hashable; trace-constant).
+
+    Built once from shapes/dtypes (arrays or ShapeDtypeStructs both work);
+    ``pack``/``unpack`` are pure jittable functions of the tree/buffer.
+    ``n_rows`` (the buffer height) = ``n_data_rows`` (leaf-owned rows)
+    rounded up to a ``TILE_N`` multiple; the tail rows belong to no leaf.
+    """
+
+    slots: tuple[LeafSlot, ...]
+    treedef: Any
+    n_rows: int
+    n_data_rows: int
+    block: int = kops.BLOCK
+
+    # -- construction ---------------------------------------------------
+    @classmethod
+    def for_tree(cls, tree: Any, block: int = kops.BLOCK) -> "WireLayout":
+        import math
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        slots = []
+        row = 0
+        for leaf in leaves:
+            shape = tuple(int(s) for s in leaf.shape)
+            size = int(np.prod(shape, dtype=np.int64)) if shape else 1
+            n_rows = int(math.ceil(max(size, 1) / block))
+            slots.append(LeafSlot(shape=shape, dtype=jnp.dtype(leaf.dtype),
+                                  size=size, row_start=row, n_rows=n_rows))
+            row += n_rows
+        total = int(math.ceil(max(row, 1) / kops.TILE_N) * kops.TILE_N)
+        return cls(slots=tuple(slots), treedef=treedef, n_rows=total,
+                   n_data_rows=row, block=block)
+
+    # -- derived sizes ---------------------------------------------------
+    @property
+    def n_leaves(self) -> int:
+        return len(self.slots)
+
+    @property
+    def n_elements(self) -> int:
+        """Real (un-padded) element count across the tree."""
+        return sum(s.size for s in self.slots)
+
+    def buffer_struct(self) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct((self.n_rows, self.block), jnp.float32)
+
+    # -- pack / unpack ---------------------------------------------------
+    def check_tree(self, tree: Any) -> list:
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        if treedef != self.treedef or len(leaves) != len(self.slots):
+            raise ValueError(
+                f"tree structure does not match layout: {treedef} vs "
+                f"{self.treedef}")
+        for leaf, slot in zip(leaves, self.slots):
+            if tuple(leaf.shape) != slot.shape:
+                raise ValueError(
+                    f"leaf shape {tuple(leaf.shape)} != layout slot "
+                    f"{slot.shape}")
+        return leaves
+
+    def pack(self, tree: Any) -> jax.Array:
+        """Tree -> one (n_rows, block) fp32 buffer, zero padded per leaf to
+        whole rows (quantization blocks never span leaves) plus the
+        TILE_N-alignment tail."""
+        leaves = self.check_tree(tree)
+        flats = []
+        for leaf, slot in zip(leaves, self.slots):
+            flat = leaf.astype(jnp.float32).reshape(-1)
+            pad = slot.n_rows * self.block - slot.size
+            flats.append(jnp.pad(flat, (0, pad)))
+        tail = (self.n_rows - self.n_data_rows) * self.block
+        if tail:
+            flats.append(jnp.zeros((tail,), jnp.float32))
+        flats = _lift_common_vma(flats)
+        out = flats[0] if len(flats) == 1 else jnp.concatenate(flats)
+        return out.reshape(self.n_rows, self.block)
+
+    def unpack(self, packed: jax.Array, cast: bool = True) -> Any:
+        """Packed buffer -> tree (casting back to each leaf's dtype)."""
+        if packed.shape != (self.n_rows, self.block):
+            raise ValueError(f"packed shape {packed.shape} != "
+                             f"{(self.n_rows, self.block)}")
+        flat = packed.reshape(-1)
+        leaves = []
+        for slot in self.slots:
+            start = slot.row_start * self.block
+            seg = jax.lax.slice_in_dim(flat, start, start + slot.size)
+            seg = seg.reshape(slot.shape)
+            leaves.append(seg.astype(slot.dtype) if cast else seg)
+        return jax.tree_util.tree_unflatten(self.treedef, leaves)
+
+    # -- per-leaf views (reference path / tests) -------------------------
+    def leaf_rows(self, packed: jax.Array, i: int) -> jax.Array:
+        """The (n_rows_i, block) row range of leaf ``i`` — exactly what the
+        per-leaf path would have produced with ``kops.blockify``."""
+        slot = self.slots[i]
+        return jax.lax.slice_in_dim(packed, slot.row_start, slot.row_end,
+                                    axis=0)
+
+    def from_leaf_rows(self, rows: list) -> jax.Array:
+        """Reassemble a packed buffer from per-leaf row blocks (the
+        TILE_N-alignment tail is re-zeroed)."""
+        if len(rows) != len(self.slots):
+            raise ValueError(f"{len(rows)} row blocks != {len(self.slots)}")
+        rows = list(rows)
+        tail = self.n_rows - self.n_data_rows
+        if tail:
+            rows.append(jnp.zeros((tail, self.block), jnp.float32))
+        rows = _lift_common_vma(rows)
+        out = rows[0] if len(rows) == 1 else jnp.concatenate(rows, axis=0)
+        assert out.shape == (self.n_rows, self.block), out.shape
+        return out

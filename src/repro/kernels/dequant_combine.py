@@ -22,9 +22,10 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .quantize import BLOCK, TILE_N, _align_vma, _out_vma
+from .quantize import (BLOCK, SCALE_BYTES, TILE_N, _align_vma,
+                       _bytes_to_scale, _out_vma)
 
-__all__ = ["dequant_combine_pallas"]
+__all__ = ["dequant_combine_pallas", "dequant_combine_payload_pallas"]
 
 
 def _kernel(w_ref, cs_ref, ss_ref, cl_ref, sl_ref, cr_ref, sr_ref,
@@ -75,3 +76,65 @@ def dequant_combine_pallas(codes_self, scale_self, codes_left, scale_left,
         interpret=interpret,
     )(w, codes_self, scale_self, codes_left, scale_left, codes_right,
       scale_right, x_tilde, m_agg)
+
+
+def _decode_payload_tile(p, block):
+    """(TILE_N, block+4) uint8 wire tile -> dequantized (TILE_N, block) f32.
+
+    Codes are a same-width bitcast view; the fp32 scale is reassembled from
+    its byte image in-kernel (no separate scales operand on the wire)."""
+    codes = jax.lax.bitcast_convert_type(p[:, :block], jnp.int8)
+    scale = _bytes_to_scale(p[:, block:])
+    return codes.astype(jnp.float32) * scale
+
+
+def _payload_kernel(w_ref, ps_ref, pl_ref, pr_ref, xt_ref, m_ref,
+                    xt_out_ref, m_out_ref, comb_ref):
+    w_self = w_ref[0]
+    w_side = w_ref[1]
+    deamp = w_ref[2]
+    block = xt_ref.shape[1]
+    d_self = _decode_payload_tile(ps_ref[...], block)
+    d_l = _decode_payload_tile(pl_ref[...], block)
+    d_r = _decode_payload_tile(pr_ref[...], block)
+    x_t = xt_ref[...] + deamp * d_self
+    m = m_ref[...] + w_side * deamp * (d_l + d_r)
+    xt_out_ref[...] = x_t
+    m_out_ref[...] = m
+    comb_ref[...] = w_self * x_t + m
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dequant_combine_payload_pallas(payload_self, payload_left, payload_right,
+                                   x_tilde, m_agg, w_self, w_side, deamp,
+                                   interpret: bool = True):
+    """Payload-view receive side: three (n_blocks, BLOCK+4) uint8 wire
+    buffers (self / left / right), packed shadows (n_blocks, BLOCK) f32.
+
+    One fused launch decodes all three payloads (scales region decoded
+    in-kernel) and applies the shadow update + ring combine for the whole
+    parameter tree.  Returns (x_tilde', m_agg', combined).
+    """
+    n, b = x_tilde.shape
+    assert n % TILE_N == 0 and b % 128 == 0, (n, b)
+    assert payload_self.shape == (n, b + SCALE_BYTES), payload_self.shape
+    grid = (n // TILE_N,)
+    row = pl.BlockSpec((TILE_N, b), lambda i: (i, 0))
+    pay = pl.BlockSpec((TILE_N, b + SCALE_BYTES), lambda i: (i, 0))
+    w = jnp.stack([jnp.asarray(w_self, jnp.float32),
+                   jnp.asarray(w_side, jnp.float32),
+                   jnp.asarray(deamp, jnp.float32)])
+    (w, payload_self, payload_left, payload_right, x_tilde, m_agg) = \
+        _align_vma(w, payload_self, payload_left, payload_right, x_tilde,
+                   m_agg)
+    vma_kw = _out_vma(w, payload_self, x_tilde)
+    out_shape = tuple(jax.ShapeDtypeStruct((n, b), jnp.float32, **vma_kw)
+                      for _ in range(3))
+    return pl.pallas_call(
+        _payload_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY), pay, pay, pay, row, row],
+        out_specs=(row, row, row),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(w, payload_self, payload_left, payload_right, x_tilde, m_agg)

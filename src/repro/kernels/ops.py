@@ -13,12 +13,16 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
-from .dequant_combine import dequant_combine_pallas
+from .dequant_combine import (dequant_combine_pallas,
+                              dequant_combine_payload_pallas)
 from .gqa_decode import gqa_decode_pallas
-from .quantize import BLOCK, TILE_N, quantize_blocks_pallas
+from .quantize import (BLOCK, SCALE_BYTES, TILE_N, quantize_blocks_pallas,
+                       quantize_payload_pallas)
 
 __all__ = ["blockify", "unblockify", "quantize_blocks", "dequant_combine",
-           "gqa_decode", "BLOCK", "padded_block_rows"]
+           "gqa_decode", "BLOCK", "SCALE_BYTES", "padded_block_rows",
+           "payload_width", "pack_payload", "unpack_payload",
+           "quantize_payload", "dequant_combine_payload"]
 
 
 def padded_block_rows(n_elements: int, block: int = BLOCK,
@@ -58,6 +62,51 @@ def quantize_blocks(y_blocks: jax.Array, noise: jax.Array,
     return ref.quantize_blocks_ref(y_blocks, noise, fixed_step=fixed_step)
 
 
+# ---------------------------------------------------------------------------
+# Flat wire payload (codes + scales in ONE byte buffer per ring direction)
+# ---------------------------------------------------------------------------
+
+def payload_width(block: int = BLOCK) -> int:
+    """Bytes per payload row: BLOCK int8 codes + one fp32 scale."""
+    return block + SCALE_BYTES
+
+
+def pack_payload(codes: jax.Array, scales: jax.Array) -> jax.Array:
+    """(rows, B) int8 codes + (rows, 1) f32 scales -> (rows, B+4) uint8.
+
+    The single wire buffer the ring exchanges: one ``ppermute`` per ring
+    direction moves the codes AND the scales for the whole parameter tree.
+    Scale bytes are the host-endian fp32 image (least-significant byte
+    first under XLA's bitcast; the Pallas kernels decode with the same
+    order — pinned by ``test_payload_byte_order``).
+    """
+    rows = codes.shape[0]
+    cu = jax.lax.bitcast_convert_type(codes, jnp.uint8)
+    su = jax.lax.bitcast_convert_type(scales, jnp.uint8)
+    return jnp.concatenate([cu, su.reshape(rows, SCALE_BYTES)], axis=1)
+
+
+def unpack_payload(payload: jax.Array, block: int = BLOCK):
+    """(rows, B+4) uint8 -> (codes int8 (rows, B), scales f32 (rows, 1))."""
+    rows = payload.shape[0]
+    assert payload.shape[1] == payload_width(block), payload.shape
+    codes = jax.lax.bitcast_convert_type(payload[:, :block], jnp.int8)
+    scales = jax.lax.bitcast_convert_type(
+        payload[:, block:].reshape(rows, 1, SCALE_BYTES), jnp.float32)
+    return codes, scales
+
+
+def quantize_payload(y_blocks: jax.Array, noise: jax.Array,
+                     fixed_step=None, use_pallas: bool = False) -> jax.Array:
+    """One quantize launch for the whole packed shard, emitting the wire
+    payload directly: (rows, BLOCK) f32 -> (rows, BLOCK+4) uint8."""
+    if use_pallas and not _vma_carrying(y_blocks, noise):
+        return quantize_payload_pallas(y_blocks, noise, fixed_step=fixed_step)
+    codes, scales = ref.quantize_blocks_ref(y_blocks, noise,
+                                            fixed_step=fixed_step)
+    return pack_payload(codes, scales)
+
+
 def gqa_decode(q, k, v, valid, softcap=None, use_pallas: bool = False):
     """Flash-decode partials (m, l, acc) over a KV-cache shard.
 
@@ -79,3 +128,22 @@ def dequant_combine(codes_self, scale_self, codes_left, scale_left,
     return ref.dequant_combine_ref(
         codes_self, scale_self, codes_left, scale_left, codes_right,
         scale_right, x_tilde, m_agg, w_self, w_side, deamp)
+
+
+def dequant_combine_payload(payload_self, payload_left, payload_right,
+                            x_tilde, m_agg, w_self, w_side, deamp,
+                            use_pallas: bool = False):
+    """Payload-view dequant+combine: the three (rows, BLOCK+4) uint8 wire
+    buffers are decoded (scales region decoded in-kernel on the Pallas
+    path) and fused with the packed shadow update — ONE launch for the
+    whole parameter tree.  Returns (x_tilde', m_agg', combined)."""
+    if use_pallas and not _vma_carrying(payload_self, x_tilde, m_agg):
+        return dequant_combine_payload_pallas(
+            payload_self, payload_left, payload_right, x_tilde, m_agg,
+            w_self, w_side, deamp)
+    block = x_tilde.shape[1]
+    cs, ss = unpack_payload(payload_self, block)
+    cl, sl = unpack_payload(payload_left, block)
+    cr, sr = unpack_payload(payload_right, block)
+    return ref.dequant_combine_ref(cs, ss, cl, sl, cr, sr, x_tilde, m_agg,
+                                   w_self, w_side, deamp)

@@ -26,10 +26,12 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["quantize_blocks_pallas", "TILE_N", "BLOCK"]
+__all__ = ["quantize_blocks_pallas", "quantize_payload_pallas", "TILE_N",
+           "BLOCK", "SCALE_BYTES"]
 
 TILE_N = 32     # rows per grid step (int8 sublane tile)
 BLOCK = 512     # quantization block = lane-dim multiple of 128
+SCALE_BYTES = 4  # one fp32 scale per row, appended to the wire payload
 
 
 def _match_vma(x, like):
@@ -76,6 +78,52 @@ def _fixed_kernel(y_ref, noise_ref, step_ref, codes_ref, scales_ref):
     s = y / scale
     codes_ref[...] = _stochastic_round_clip(s, noise, y).astype(jnp.int8)
     scales_ref[...] = scale
+
+
+def _scale_to_bytes(scale_col):
+    """(T, 1) f32 -> (T, SCALE_BYTES) uint8, least-significant byte first.
+
+    Same-width bitcast + byte extraction only (shape-changing bitcasts are
+    not portable inside kernels); matches XLA's f32->uint8 bitcast order
+    used by ``ops.pack_payload`` (pinned by ``test_payload_byte_order``).
+    """
+    u = jax.lax.bitcast_convert_type(scale_col, jnp.uint32)        # (T, 1)
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (1, SCALE_BYTES), 1)
+    shifts = _match_vma(shifts * jnp.uint32(8), u)
+    return ((u >> shifts) & jnp.uint32(0xFF)).astype(jnp.uint8)    # (T, 4)
+
+
+def _bytes_to_scale(scale_bytes):
+    """(T, SCALE_BYTES) uint8 -> (T, 1) f32 (inverse of _scale_to_bytes)."""
+    b = scale_bytes.astype(jnp.uint32)
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (1, SCALE_BYTES), 1)
+    shifts = _match_vma(shifts * jnp.uint32(8), b)
+    u = jnp.sum(b << shifts, axis=1, keepdims=True)                # (T, 1)
+    u = _match_vma(u, scale_bytes)       # reductions strip vma (see above)
+    return jax.lax.bitcast_convert_type(u, jnp.float32)
+
+
+def _payload_adaptive_kernel(y_ref, noise_ref, payload_ref):
+    y = y_ref[...].astype(jnp.float32)                     # (TILE_N, BLOCK)
+    noise = noise_ref[...]
+    absmax = jnp.max(jnp.abs(y), axis=-1, keepdims=True)
+    absmax = _match_vma(absmax, y)
+    scale = jnp.maximum(absmax, _lit(1e-30, y)) * _lit(1.0 / 127.0, y)
+    q = _stochastic_round_clip(y / scale, noise, y)
+    payload_ref[:, : y.shape[1]] = jax.lax.bitcast_convert_type(
+        q.astype(jnp.int8), jnp.uint8)
+    payload_ref[:, y.shape[1]:] = _scale_to_bytes(scale)
+
+
+def _payload_fixed_kernel(y_ref, noise_ref, step_ref, payload_ref):
+    y = y_ref[...].astype(jnp.float32)
+    noise = noise_ref[...]
+    step = _match_vma(step_ref[0], y)
+    scale = jnp.broadcast_to(step, (y.shape[0], 1))
+    q = _stochastic_round_clip(y / scale, noise, y)
+    payload_ref[:, : y.shape[1]] = jax.lax.bitcast_convert_type(
+        q.astype(jnp.int8), jnp.uint8)
+    payload_ref[:, y.shape[1]:] = _scale_to_bytes(scale)
 
 
 def _out_vma(*args):
@@ -147,5 +195,48 @@ def quantize_blocks_pallas(y: jax.Array, noise: jax.Array,
                   pl.BlockSpec(memory_space=pl.ANY)],
         out_specs=(row_spec, scale_spec),
         out_shape=out_shape,
+        interpret=interpret,
+    )(y, noise, step_arr)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def quantize_payload_pallas(y: jax.Array, noise: jax.Array,
+                            fixed_step: jax.Array | None = None,
+                            interpret: bool = True):
+    """Fused quantize-to-wire: (n_blocks, BLOCK) f32 -> (n_blocks,
+    BLOCK + SCALE_BYTES) uint8 payload (int8 codes || fp32 scale bytes).
+
+    One launch emits the exact byte buffer the ring ``ppermute`` moves —
+    no separate codes/scales materialization or concat pass.  Bit-identical
+    to ``pack_payload(*quantize_blocks_ref(y, noise, fixed_step))``.
+    """
+    n, b = y.shape
+    assert b % 128 == 0, f"block {b} must be lane-aligned (x128)"
+    assert n % TILE_N == 0, f"n_blocks {n} must be a multiple of {TILE_N}"
+    grid = (n // TILE_N,)
+    row_spec = pl.BlockSpec((TILE_N, b), lambda i: (i, 0))
+    payload_spec = pl.BlockSpec((TILE_N, b + SCALE_BYTES), lambda i: (i, 0))
+    if fixed_step is None:
+        y, noise = _align_vma(y, noise)
+        vma_kw = _out_vma(y, noise)
+        return pl.pallas_call(
+            _payload_adaptive_kernel,
+            grid=grid,
+            in_specs=[row_spec, row_spec],
+            out_specs=payload_spec,
+            out_shape=jax.ShapeDtypeStruct((n, b + SCALE_BYTES), jnp.uint8,
+                                           **vma_kw),
+            interpret=interpret,
+        )(y, noise)
+    step_arr = jnp.reshape(jnp.asarray(fixed_step, jnp.float32), (1,))
+    y, noise, step_arr = _align_vma(y, noise, step_arr)
+    vma_kw = _out_vma(y, noise, step_arr)
+    return pl.pallas_call(
+        _payload_fixed_kernel,
+        grid=grid,
+        in_specs=[row_spec, row_spec, pl.BlockSpec(memory_space=pl.ANY)],
+        out_specs=payload_spec,
+        out_shape=jax.ShapeDtypeStruct((n, b + SCALE_BYTES), jnp.uint8,
+                                       **vma_kw),
         interpret=interpret,
     )(y, noise, step_arr)

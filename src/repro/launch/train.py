@@ -27,12 +27,14 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core import wire
 from repro.core.distributed import ConsensusConfig, ConsensusRuntime
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
-from repro.models.params import (ParamDef, storage_partition_spec,
-                                 storage_shape_dtype)
-from repro.models.sharding import ParallelContext, make_context
+from repro.models.params import (ParamDef, local_block_shape,
+                                 storage_partition_spec, storage_shape_dtype)
+from repro.models.sharding import (ParallelContext, make_context,
+                                   shard_map_compat)
 from repro.optim import by_name as opt_by_name
 from repro.optim.schedules import (constant_schedule, cosine_warmup_schedule,
                                    inverse_power_schedule)
@@ -85,6 +87,23 @@ def _param_shapes(defs_tree, ctx: ParallelContext):
         defs_tree, is_leaf=lambda x: isinstance(x, ParamDef))
 
 
+def _mesh_lead_axes(ctx: ParallelContext) -> tuple[str, ...]:
+    """Every mesh axis, pod-major — the leading dim of the packed consensus
+    buffers is sharded over ALL of them (each device owns its own packing
+    of its local parameter shard)."""
+    return (*_data_axes(ctx), "model")
+
+
+def consensus_wire_layout(defs: T.ModelDefs, ctx: ParallelContext
+                          ) -> wire.WireLayout:
+    """The static packing plan for one device's local parameter shard."""
+    local = jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(
+            local_block_shape(d, ctx.tp, ctx.fsdp), d.dtype),
+        defs.storage, is_leaf=lambda x: isinstance(x, ParamDef))
+    return wire.WireLayout.for_tree(local)
+
+
 def train_state_specs(defs: T.ModelDefs, ctx: ParallelContext,
                       consensus: ConsensusRuntime, optimizer):
     """(ShapeDtypeStruct tree, PartitionSpec tree) for the full train state."""
@@ -92,12 +111,19 @@ def train_state_specs(defs: T.ModelDefs, ctx: ParallelContext,
     p_specs = _param_specs(defs.storage, ctx)
     state_shape = {"params": p_shapes, "step": jax.ShapeDtypeStruct((), jnp.int32)}
     state_spec = {"params": p_specs, "step": P()}
-    # consensus state mirrors params (fp32)
+    # consensus shadows live PACKED (core.wire): per device one
+    # (n_rows, BLOCK) fp32 buffer per shadow; globally a leading device
+    # dim sharded over every mesh axis.
     if consensus.cfg.algorithm == "adc_dgd":
-        f32 = jax.tree.map(
-            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), p_shapes)
-        state_shape["consensus"] = {"x_tilde": f32, "m_agg": f32}
-        state_spec["consensus"] = {"x_tilde": p_specs, "m_agg": p_specs}
+        layout = consensus_wire_layout(defs, ctx)
+        lead = _mesh_lead_axes(ctx)
+        n_dev = ctx.pods * ctx.data_size * ctx.tp
+        packed = jax.ShapeDtypeStruct((n_dev, layout.n_rows, layout.block),
+                                      jnp.float32)
+        packed_spec = P(lead, None, None)
+        state_shape["consensus"] = {"x_tilde": packed, "m_agg": packed}
+        state_spec["consensus"] = {"x_tilde": packed_spec,
+                                   "m_agg": packed_spec}
     else:
         state_shape["consensus"] = {}
         state_spec["consensus"] = {}
@@ -203,8 +229,14 @@ def build_train_setup(
         lr_k = sched(k)
         x_half, opt_state = opt.step(state["opt"], state["params"], grads, lr_k)
         key = jax.random.fold_in(jax.random.PRNGKey(0), k)
+        # packed consensus shadows carry a leading per-device dim of 1
+        # inside shard_map (the global buffers are device-major)
+        cons_in = jax.tree.map(lambda a: a[0], state["consensus"])
         x_next, cons_state, cmetrics = consensus.exchange(
-            state["params"], x_half, state["consensus"], k, key)
+            state["params"], x_half, cons_in, k, key)
+        cons_state = jax.tree.map(
+            lambda a: wire.pvary_to(a, _mesh_lead_axes(ctx))[None],
+            cons_state)
         new_state = {"params": x_next, "opt": opt_state,
                      "consensus": cons_state, "step": k}
         # metrics: average over exactly the axes each value varies on
@@ -217,12 +249,14 @@ def build_train_setup(
 
     in_specs = (state_spec, batch_spec)
     out_specs = (state_spec, {"loss": P(), "lr": P(),
+                              "collectives_per_step": P(),
+                              "wire_bytes_per_step": P(),
                               **({"aux": P()} if cfg.router_aux_weight and microbatches == 1 else {}),
                               **({"overflow_frac": P()} if algorithm == "adc_dgd" else {}),
                               **({"consensus_err": P()} if track_consensus_error else {})})
 
-    step_sm = jax.shard_map(step_body, mesh=mesh, in_specs=in_specs,
-                            out_specs=out_specs, check_vma=True)
+    step_sm = shard_map_compat(step_body, mesh, in_specs=in_specs,
+                               out_specs=out_specs, check=True)
     train_step = jax.jit(step_sm, donate_argnums=(0,))
 
     return TrainSetup(
@@ -238,6 +272,26 @@ def build_train_setup(
     )
 
 
+def init_consensus_state(setup: TrainSetup, params) -> Any:
+    """Packed consensus shadows for global storage params: pack each
+    device's local shard inside shard_map (the layout is device-local)."""
+    if setup.consensus.cfg.algorithm != "adc_dgd":
+        return {}
+    ctx = setup.ctx
+    _, state_spec = train_state_specs(setup.defs, ctx, setup.consensus,
+                                      setup.optimizer)
+    lead = _mesh_lead_axes(ctx)
+
+    def pack_local(p):
+        st = setup.consensus.init_state(p)
+        return jax.tree.map(lambda a: wire.pvary_to(a, lead)[None], st)
+
+    init_sm = shard_map_compat(pack_local, setup.mesh,
+                               in_specs=(state_spec["params"],),
+                               out_specs=state_spec["consensus"])
+    return jax.jit(init_sm)(params)
+
+
 def init_train_state(setup: TrainSetup, key: jax.Array):
     """Materialize a real train state (small configs / examples / tests)."""
     from repro.models.params import materialize_storage_host
@@ -248,7 +302,7 @@ def init_train_state(setup: TrainSetup, key: jax.Array):
     state = {
         "params": params,
         "opt": setup.optimizer.init(params),
-        "consensus": setup.consensus.init_state(params),
+        "consensus": init_consensus_state(setup, params),
         "step": jnp.zeros((), jnp.int32),
     }
     return jax.device_put(state, setup.state_sharding)

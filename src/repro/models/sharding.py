@@ -22,7 +22,23 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-__all__ = ["ParallelContext", "local_context", "make_context"]
+__all__ = ["ParallelContext", "local_context", "make_context",
+           "shard_map_compat"]
+
+
+def shard_map_compat(f, mesh, in_specs, out_specs, check: bool = True):
+    """``jax.shard_map`` across jax versions.
+
+    Newer jax exposes ``jax.shard_map(check_vma=...)``; older versions only
+    have ``jax.experimental.shard_map.shard_map(check_rep=...)`` (and no vma
+    type system — ``check`` is dropped to False there, since replication
+    checking without vma rejects the runtime's collectives)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
 
 
 @dataclasses.dataclass(frozen=True)

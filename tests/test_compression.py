@@ -71,6 +71,39 @@ def test_int8_adaptive_never_clips_fixed_vectors():
         assert np.all(np.abs(np.asarray(out) - np.asarray(z)) <= step + 1e-6)
 
 
+def test_randomized_rounding_int16_wire_format():
+    """wire_bits = 16 must be honest: codes are int16, clamped to the
+    representable range, with the same overflow guard as the int8 wire."""
+    op = C.RandomizedRounding(delta=1.0)
+    key = jax.random.PRNGKey(4)
+    z = jnp.asarray(np.random.default_rng(5).uniform(-50, 50, size=(128,)),
+                    jnp.float32)
+    codes = op.codes(key, z)
+    assert codes.dtype == jnp.int16
+    # decode(codes) must equal apply() under the same key (wire consistency)
+    np.testing.assert_allclose(np.asarray(op.decode(codes)),
+                               np.asarray(op.apply(key, z)), rtol=1e-6)
+    # in-range values never clamp and carry no overflow
+    codes2, meta = op.encode(key, z)
+    np.testing.assert_array_equal(np.asarray(codes2), np.asarray(codes))
+    assert float(meta["overflow_frac"]) == 0.0
+
+
+def test_randomized_rounding_int16_overflow_guard():
+    """Out-of-range grid indices are clamped to +-32767 and reported."""
+    op = C.RandomizedRounding(delta=1.0)
+    key = jax.random.PRNGKey(6)
+    z = jnp.asarray([1e6, -1e6, 40000.0, 100.0], jnp.float32)
+    codes, meta = op.encode(key, z)
+    assert codes.dtype == jnp.int16
+    assert int(np.max(np.asarray(codes))) == op.CODE_MAX
+    assert int(np.min(np.asarray(codes))) == -op.CODE_MAX
+    assert float(meta["overflow_frac"]) == pytest.approx(0.75)
+    # apply() clamps identically (no silent int32-only wire value)
+    out = np.asarray(op.apply(key, z))
+    assert np.max(np.abs(out)) <= op.CODE_MAX * op.delta + 1e-6
+
+
 def test_sparsifier_produces_zeros():
     op = C.QuantizationSparsifier(m_levels=8, big_m=1.0)
     z = jnp.full((1000,), 0.05)

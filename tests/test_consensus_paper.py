@@ -126,6 +126,29 @@ def test_dgdt_larger_error_ball(four_node):
     assert d3["grad_norm"][-100:].mean() > d1["grad_norm"][-100:].mean()
 
 
+def test_dgdt_effective_matrix_cached(four_node):
+    """DGD^t precomputes W^t once at construction (not inside every trace):
+    the cache equals matrix_power and one step applies exactly W^t."""
+    prob, mix = four_node
+    alg = DGDt(mix, StepSize(ALPHA), t=3)
+    expected = np.linalg.matrix_power(np.asarray(mix.w), 3)
+    np.testing.assert_allclose(np.asarray(alg._w_eff), expected, rtol=1e-12)
+    state = alg.init(prob)
+    new_state, _ = alg.step(state, prob, jax.random.PRNGKey(0))
+    grads = prob.grad_fn(state["x"])
+    manual = expected @ np.asarray(state["x"]) - ALPHA * np.asarray(grads)
+    np.testing.assert_allclose(np.asarray(new_state["x"]), manual,
+                               rtol=1e-5, atol=1e-6)
+    # step-indexed W (schedules) bypasses the static cache
+    w_k = np.asarray(mix.w, np.float32)
+    st2, _ = alg.step(state, prob, jax.random.PRNGKey(0),
+                      w=jax.numpy.asarray(w_k))
+    manual2 = (w_k @ w_k @ w_k) @ np.asarray(state["x"], np.float32) \
+        - ALPHA * np.asarray(grads, np.float32)
+    np.testing.assert_allclose(np.asarray(st2["x"]), manual2, rtol=1e-4,
+                               atol=1e-5)
+
+
 def test_network_size_scaling():
     """Paper Fig. 10: the circle system converges for n = 3, 5, 10, 20."""
     for n in (3, 5, 10, 20):

@@ -53,6 +53,115 @@ def test_dequant_combine_matches_oracle(shape):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
 
 
+# ---------------------------------------------------------------------------
+# Flat wire payload (codes + scales in one byte buffer)
+# ---------------------------------------------------------------------------
+
+def test_payload_roundtrip():
+    """pack_payload -> unpack_payload is the identity on (codes, scales)."""
+    key = jax.random.PRNGKey(5)
+    y = jax.random.normal(key, (64, BLOCK)) * 3.0
+    noise = jax.random.uniform(jax.random.fold_in(key, 1), y.shape)
+    codes, scales = ref.quantize_blocks_ref(y, noise)
+    payload = ops.pack_payload(codes, scales)
+    assert payload.shape == (64, ops.payload_width())
+    assert payload.dtype == jnp.uint8
+    c2, s2 = ops.unpack_payload(payload)
+    np.testing.assert_array_equal(np.asarray(c2), np.asarray(codes))
+    np.testing.assert_array_equal(np.asarray(s2), np.asarray(scales))
+
+
+def test_quantize_payload_matches_quantize_then_pack():
+    """The fused payload emitter is bit-identical to quantize + pack, in
+    both scale modes (the jnp dispatch path; the pallas kernel is covered
+    by test_quantize_payload_pallas_matches_oracle)."""
+    key = jax.random.PRNGKey(6)
+    y = jax.random.normal(key, (96, BLOCK))
+    noise = jax.random.uniform(jax.random.fold_in(key, 1), y.shape)
+    for step in (None, jnp.float32(0.05)):
+        pl = ops.quantize_payload(y, noise, fixed_step=step)
+        ref_pl = ops.pack_payload(*ref.quantize_blocks_ref(y, noise,
+                                                           fixed_step=step))
+        np.testing.assert_array_equal(np.asarray(pl), np.asarray(ref_pl))
+
+
+def test_payload_byte_order():
+    """Pin the scale-byte order: the shift-based in-kernel decode must agree
+    with XLA's bitcast (least-significant byte first) — the contract that
+    keeps the Pallas payload kernels bit-identical to the jnp oracle."""
+    scales = jnp.asarray([[1.5], [-2.25], [3e-7], [1e30]], jnp.float32)
+    codes = jnp.zeros((4, BLOCK), jnp.int8)
+    payload = ops.pack_payload(codes, scales)
+    sb = payload[:, BLOCK:].astype(jnp.uint32)
+    shifts = (jnp.arange(4, dtype=jnp.uint32) * 8)[None, :]
+    u = jnp.sum(sb << shifts, axis=1, keepdims=True)
+    decoded = jax.lax.bitcast_convert_type(u, jnp.float32)
+    np.testing.assert_array_equal(np.asarray(decoded), np.asarray(scales))
+
+
+def test_dequant_combine_payload_matches_unpacked():
+    key = jax.random.PRNGKey(7)
+    ks = jax.random.split(key, 4)
+    y = jax.random.normal(ks[0], (64, BLOCK))
+    noise = jax.random.uniform(ks[1], y.shape)
+    codes, scales = ref.quantize_blocks_ref(y, noise)
+    payload = ops.pack_payload(codes, scales)
+    xt = jax.random.normal(ks[2], y.shape)
+    m = jax.random.normal(ks[3], y.shape)
+    outs_p = ops.dequant_combine_payload(payload, payload, payload, xt, m,
+                                         0.5, 0.25, jnp.float32(1.0))
+    outs_r = ref.dequant_combine_ref(codes, scales, codes, scales, codes,
+                                     scales, xt, m, 0.5, 0.25,
+                                     jnp.float32(1.0))
+    for a, b in zip(outs_p, outs_r):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@needs_pallas
+@pytest.mark.parametrize("shape", SHAPES[:3])
+@pytest.mark.parametrize("mode", ["adaptive", "fixed"])
+def test_quantize_payload_pallas_matches_oracle(shape, mode):
+    """The fused payload-emitting kernel: byte-exact vs quantize + pack."""
+    key = jax.random.PRNGKey(hash((shape, mode)) % 2**31)
+    y = jax.random.normal(key, shape) * 2.0
+    noise = jax.random.uniform(jax.random.fold_in(key, 1), shape)
+    step = jnp.float32(0.05) if mode == "fixed" else None
+    from repro.kernels.quantize import quantize_payload_pallas
+    pl_k = quantize_payload_pallas(y, noise, fixed_step=step, interpret=True)
+    pl_r = ops.pack_payload(*ref.quantize_blocks_ref(y, noise,
+                                                     fixed_step=step))
+    np.testing.assert_array_equal(np.asarray(pl_k), np.asarray(pl_r))
+
+
+@needs_pallas
+@pytest.mark.parametrize("shape", SHAPES[:3])
+def test_dequant_combine_payload_pallas_matches_oracle(shape):
+    """In-kernel scale decode: byte payload in, bit-exact combine out."""
+    from repro.kernels.dequant_combine import dequant_combine_payload_pallas
+    key = jax.random.PRNGKey(9)
+    ks = jax.random.split(key, 6)
+    y = jax.random.normal(ks[0], shape)
+    noise = jax.random.uniform(ks[1], shape)
+    pls = []
+    for i in (2, 3):
+        c, s = ref.quantize_blocks_ref(
+            jax.random.normal(ks[i], shape), noise)
+        pls.append(ops.pack_payload(c, s))
+    codes, scales = ref.quantize_blocks_ref(y, noise)
+    p_self = ops.pack_payload(codes, scales)
+    xt = jax.random.normal(ks[4], shape)
+    m = jax.random.normal(ks[5], shape)
+    outs_k = dequant_combine_payload_pallas(p_self, pls[0], pls[1], xt, m,
+                                            0.5, 0.25, jnp.float32(0.37),
+                                            interpret=True)
+    c_l, s_l = ops.unpack_payload(pls[0], shape[1])
+    c_r, s_r = ops.unpack_payload(pls[1], shape[1])
+    outs_r = ref.dequant_combine_ref(codes, scales, c_l, s_l, c_r, s_r,
+                                     xt, m, 0.5, 0.25, jnp.float32(0.37))
+    for a, b in zip(outs_k, outs_r):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
 def test_quantize_roundtrip_error_bound():
     """Adaptive: |dec - y| <= scale per element (one grid step)."""
     key = jax.random.PRNGKey(3)

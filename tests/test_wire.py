@@ -1,0 +1,364 @@
+"""Flat wire-packing subsystem (core.wire + the packed consensus exchange).
+
+Covered invariants:
+  * WireLayout pack -> unpack == identity for every config's parameter tree
+    (reduced sizes) and for synthetic odd-shaped mixed-dtype trees
+  * the packed buffer is bit-for-bit the concatenation of the per-leaf
+    blockified buffers (the foundation of packed/per-leaf equivalence)
+  * packed `_adc_exchange` == per-leaf reference bit-for-bit over a
+    multi-leaf, oddly-shaped, mixed-dtype tree, on all compressor modes,
+    including the stride-schedule m_agg resync step (subprocess, 4 devices)
+  * the packed exchange issues EXACTLY 2 ring ppermute collectives per step
+    regardless of leaf count (counted in the traced jaxpr)
+  * packed compressed-DGD == per-leaf reference bit-for-bit
+
+Multi-device tests spawn a fresh python with XLA_FLAGS (jax locks the device
+count at first init; the main pytest process must keep seeing ONE device).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import wire
+from repro.kernels import ops as kops
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+ODD_TREE_SPECS = {
+    "w": ((3, 37), jnp.float32),
+    "b": ((513,), jnp.bfloat16),
+    "scalar": ((), jnp.float32),
+    "deep": {"m": ((7, 11, 2), jnp.float32), "n": ((1, 129), jnp.bfloat16)},
+}
+
+
+def _make_tree(specs, key):
+    leaves, treedef = jax.tree_util.tree_flatten(
+        specs, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+        and isinstance(x[0], tuple))
+    ks = jax.random.split(key, len(leaves))
+    vals = [jax.random.normal(k, shape, jnp.float32).astype(dt)
+            for k, (shape, dt) in zip(ks, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+# ---------------------------------------------------------------------------
+# WireLayout: layout algebra + round trips
+# ---------------------------------------------------------------------------
+
+def test_layout_roundtrip_odd_tree():
+    tree = _make_tree(ODD_TREE_SPECS, jax.random.PRNGKey(0))
+    layout = wire.WireLayout.for_tree(tree)
+    assert layout.n_leaves == 5
+    assert layout.n_rows % 32 == 0        # lane/tile aligned overall
+    packed = layout.pack(tree)
+    assert packed.shape == (layout.n_rows, kops.BLOCK)
+    assert packed.dtype == jnp.float32
+    back = layout.unpack(packed)
+    for (pa, a), (pb, b) in zip(
+            jax.tree_util.tree_leaves_with_path(tree),
+            jax.tree_util.tree_leaves_with_path(back)):
+        assert a.dtype == b.dtype, pa
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32), err_msg=str(pa))
+
+
+def test_pack_matches_per_leaf_blockify_rows():
+    """The bit-identity foundation: every leaf's row range in the packed
+    buffer equals the leading rows of its standalone ``kops.blockify``
+    (quantization blocks never span leaves), and the only extra content is
+    zero padding (row-granular per leaf + the TILE_N tail)."""
+    tree = _make_tree(ODD_TREE_SPECS, jax.random.PRNGKey(1))
+    layout = wire.WireLayout.for_tree(tree)
+    packed = layout.pack(tree)
+    for i, leaf in enumerate(jax.tree_util.tree_leaves(tree)):
+        slot = layout.slots[i]
+        blockified = kops.blockify(leaf.astype(jnp.float32).reshape(-1))
+        np.testing.assert_array_equal(
+            np.asarray(layout.leaf_rows(packed, i)),
+            np.asarray(blockified[: slot.n_rows]))
+        # the rows blockify adds beyond the layout's are pure zero padding
+        assert not np.any(np.asarray(blockified[slot.n_rows:]))
+    # TILE_N alignment lives in the buffer tail, not inside leaves
+    assert layout.n_rows % kops.TILE_N == 0
+    assert layout.n_rows - layout.n_data_rows < kops.TILE_N
+    assert not np.any(np.asarray(packed[layout.n_data_rows:]))
+
+
+def test_layout_rejects_mismatched_tree():
+    tree = _make_tree(ODD_TREE_SPECS, jax.random.PRNGKey(2))
+    layout = wire.WireLayout.for_tree(tree)
+    bad = dict(tree)
+    bad["w"] = jnp.zeros((4, 37))
+    with pytest.raises(ValueError, match="leaf shape"):
+        layout.pack(bad)
+    with pytest.raises(ValueError, match="packed shape"):
+        layout.unpack(jnp.zeros((layout.n_rows + 32, kops.BLOCK)))
+
+
+@pytest.mark.parametrize("arch", [
+    "smollm-135m", "qwen3-0.6b", "yi-9b", "gemma2-9b", "mamba2-1.3b",
+    "deepseek-moe-16b", "granite-moe-3b-a800m", "jamba-v0.1-52b",
+    "chameleon-34b", "whisper-small",
+])
+def test_layout_roundtrip_every_config_tree(arch):
+    """pack -> unpack == identity on every config's (reduced) storage tree."""
+    from repro.configs import get_config, reduced
+    from repro.models import transformer as T
+    from repro.models.params import ParamDef, materialize_logical
+    from repro.models.sharding import local_context
+    cfg = reduced(get_config(arch))
+    defs = T.build_defs(cfg, local_context())
+    params = materialize_logical(defs.storage, jax.random.PRNGKey(3))
+    layout = wire.WireLayout.for_tree(params)
+    assert layout.n_leaves == len(jax.tree_util.tree_leaves(params))
+    back = layout.unpack(layout.pack(params))
+    for a, b in zip(jax.tree_util.tree_leaves(params),
+                    jax.tree_util.tree_leaves(back)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_wire_bytes_and_collectives_accounting():
+    """collectives_per_step / wire_bytes_per_step: packed is leaf-count
+    independent, per-leaf pays 4/leaf; payload bytes identical."""
+    from repro.core.distributed import ConsensusConfig, ConsensusRuntime
+    from repro.models.sharding import ParallelContext
+    ctx = ParallelContext(tp=1, data_size=4, n_nodes=4)
+    tree = _make_tree(ODD_TREE_SPECS, jax.random.PRNGKey(4))
+    layout = wire.WireLayout.for_tree(tree)
+    packed = ConsensusRuntime(ConsensusConfig(algorithm="adc_dgd"), ctx)
+    per_leaf = ConsensusRuntime(
+        ConsensusConfig(algorithm="adc_dgd", wire_packing="per_leaf"), ctx)
+    assert packed.collectives_per_step(layout.n_leaves) == 2.0
+    assert packed.collectives_per_step(1000) == 2.0
+    assert per_leaf.collectives_per_step(layout.n_leaves) == 4.0 * 5
+    b = packed.wire_bytes_per_step(layout.n_elements, layout=layout)
+    assert b == 2 * layout.n_rows * kops.payload_width()
+    # the per-leaf path ships TILE_N-padded per-leaf buffers -> more bytes
+    b_pl = per_leaf.wire_bytes_per_step(layout.n_elements, layout=layout)
+    rows_pl = sum(kops.padded_block_rows(s.size) for s in layout.slots)
+    assert b_pl == 2 * rows_pl * kops.payload_width()
+    assert b_pl > b
+    # multi-stride schedules amortize the fp32 resync exchange
+    sched = ConsensusRuntime(ConsensusConfig(
+        algorithm="adc_dgd", ring_strides=(1, 2), schedule_period=4), ctx)
+    assert sched.collectives_per_step(layout.n_leaves) == 2.0 + 2.0 / 4
+    assert sched.wire_bytes_per_step(layout.n_elements, layout=layout) > b
+
+
+def test_config_rejects_bad_wire_packing():
+    from repro.core.distributed import ConsensusConfig
+    with pytest.raises(ValueError, match="wire_packing"):
+        ConsensusConfig(wire_packing="flat")
+
+
+# ---------------------------------------------------------------------------
+# Multi-device: packed exchange vs per-leaf reference (subprocess)
+# ---------------------------------------------------------------------------
+
+def run_sub(body: str, timeout: int = 1500) -> dict:
+    prelude = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import json
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh, PartitionSpec as P
+        from repro.core import wire
+        from repro.core.distributed import ConsensusConfig, ConsensusRuntime
+        from repro.models.sharding import ParallelContext, shard_map_compat
+
+        mesh = Mesh(np.array(jax.devices()[:4]), ("data",))
+        ctx = ParallelContext(tp=1, data_size=4, n_nodes=4, in_shard_map=True)
+
+        def make_tree(key, n_extra=0):
+            ks = jax.random.split(key, 5 + n_extra)
+            tree = {
+                "w": jax.random.normal(ks[0], (4, 3, 37), jnp.float32),
+                "b": jax.random.normal(ks[1], (4, 513), jnp.bfloat16),
+                "scalar": jax.random.normal(ks[2], (4, 1), jnp.float32),
+                "deep": {"m": jax.random.normal(ks[3], (4, 7, 11, 2),
+                                                jnp.float32)},
+            }
+            for i in range(n_extra):
+                tree[f"x{i}"] = jax.random.normal(ks[5 + i], (4, 64 + i),
+                                                  jnp.float32)
+            return tree
+
+        from repro.core.distributed import _device_key
+
+        def shared_noise(rt, xh, k):
+            # one uniform buffer from the device-folded key, injected into
+            # BOTH wire paths so the transformation is compared bit-for-bit
+            layout = wire.WireLayout.for_tree(xh)
+            dk = _device_key(jax.random.fold_in(jax.random.PRNGKey(7), k),
+                             rt.ctx)
+            return jax.random.uniform(dk, (layout.n_rows, layout.block),
+                                      jnp.float32)
+
+        def build(rt, tree):
+            pspec = jax.tree.map(lambda a: P("data"), tree)
+            cons_spec = {"x_tilde": P("data", None, None),
+                         "m_agg": P("data", None, None)}
+            init = lambda p: jax.tree.map(lambda a: a[None], rt.init_state(p))
+            init_f = jax.jit(shard_map_compat(
+                init, mesh, in_specs=(pspec,), out_specs=cons_spec,
+                check=False))
+            def step(xp, xh, s, k):
+                s = jax.tree.map(lambda a: a[0], s)
+                xn, s2, m = rt.exchange(xp, xh, s, k, jax.random.PRNGKey(7),
+                                        noise=shared_noise(rt, xh, k))
+                return xn, jax.tree.map(lambda a: a[None], s2)
+            step_f = jax.jit(shard_map_compat(
+                step, mesh,
+                in_specs=(pspec, pspec, cons_spec, P()),
+                out_specs=(pspec, cons_spec), check=False))
+            return init_f, step_f
+
+        def trajectory(cfg_kw, tree, steps=5):
+            rt = ConsensusRuntime(ConsensusConfig(**cfg_kw), ctx)
+            init_f, step_f = build(rt, tree)
+            st = init_f(tree) if cfg_kw["algorithm"] == "adc_dgd" else {}
+            if cfg_kw["algorithm"] != "adc_dgd":
+                pspec = jax.tree.map(lambda a: P("data"), tree)
+                def step(xp, xh, s, k):
+                    xn, s2, m = rt.exchange(xp, xh, s, k,
+                                            jax.random.PRNGKey(7),
+                                            noise=shared_noise(rt, xh, k))
+                    return xn, s2
+                step_f = jax.jit(shard_map_compat(
+                    step, mesh, in_specs=(pspec, pspec, P(), P()),
+                    out_specs=(pspec, P()), check=False))
+                st = 0.0
+            x = tree
+            for k in range(1, steps + 1):
+                xh = jax.tree.map(
+                    lambda a: (a.astype(jnp.float32)
+                               + 0.01 * k).astype(a.dtype), x)
+                x, st = step_f(x, xh, st, jnp.asarray(k, jnp.int32))
+            return jax.device_get((x, st))
+
+        def max_diff(a, b):
+            la = jax.tree_util.tree_leaves(a)
+            lb = jax.tree_util.tree_leaves(b)
+            assert len(la) == len(lb)
+            return max(float(np.max(np.abs(
+                np.asarray(x, np.float64) - np.asarray(y, np.float64))))
+                if np.asarray(x).size else 0.0
+                for x, y in zip(la, lb))
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-c", prelude + textwrap.dedent(body)],
+        capture_output=True, text=True, timeout=timeout, env=env, cwd=REPO)
+    if proc.returncode != 0:
+        raise AssertionError(f"subprocess failed:\n{proc.stderr[-4000:]}")
+    for line in reversed(proc.stdout.splitlines()):
+        if line.startswith("RESULT "):
+            return json.loads(line[len("RESULT "):])
+    raise AssertionError(f"no RESULT line in output:\n{proc.stdout[-2000:]}")
+
+
+def test_packed_equals_per_leaf_all_modes():
+    """Bit-for-bit packed == per-leaf over a multi-leaf, oddly-shaped,
+    mixed-dtype tree: adaptive & fixed quantization, static ring AND the
+    (1,2)-stride schedule including its epoch-boundary m_agg resync."""
+    body = """
+tree = make_tree(jax.random.PRNGKey(0))
+out = {}
+for qm in ("adaptive", "fixed"):
+    for strides, period, tag in (((1,), 1, "static"), ((1, 2), 2, "sched")):
+        kw = dict(algorithm="adc_dgd", quant_mode=qm, fixed_step0=1e-2,
+                  ring_strides=strides, schedule_period=period)
+        a = trajectory({**kw, "wire_packing": "packed"}, tree, steps=5)
+        b = trajectory({**kw, "wire_packing": "per_leaf"}, tree, steps=5)
+        out[f"{qm}_{tag}"] = max_diff(a, b)
+print("RESULT", json.dumps(out))
+"""
+    r = run_sub(body)
+    for k, v in r.items():
+        assert v == 0.0, f"{k}: packed vs per-leaf max diff {v}"
+
+
+def test_compressed_dgd_packed_equals_per_leaf():
+    body = """
+tree = make_tree(jax.random.PRNGKey(1))
+kw = dict(algorithm="compressed_dgd", fixed_step0=1e-2)
+a = trajectory({**kw, "wire_packing": "packed"}, tree, steps=4)
+b = trajectory({**kw, "wire_packing": "per_leaf"}, tree, steps=4)
+print("RESULT", json.dumps({"max_diff": max_diff(a[0], b[0])}))
+"""
+    r = run_sub(body)
+    assert r["max_diff"] == 0.0
+
+
+def test_packed_exchange_issues_exactly_two_ppermutes():
+    """Acceptance: the packed path traces EXACTLY 2 ring ppermute eqns per
+    step regardless of leaf count; the per-leaf reference traces
+    4 x n_leaves."""
+    body = """
+import sys
+sys.path.insert(0, os.path.join(%r, "benchmarks"))
+from consensus_step import count_eqns
+
+def count_for(mode, n_extra):
+    tree = make_tree(jax.random.PRNGKey(2), n_extra=n_extra)
+    rt = ConsensusRuntime(ConsensusConfig(algorithm="adc_dgd",
+                                          wire_packing=mode), ctx)
+    init_f, step_f = build(rt, tree)
+    st = init_f(tree)
+    xh = jax.tree.map(lambda a: a, tree)
+    jaxpr = jax.make_jaxpr(step_f)(tree, xh, st, jnp.asarray(2, jnp.int32))
+    return count_eqns(jaxpr, "ppermute"), len(jax.tree_util.tree_leaves(tree))
+
+out = {}
+for n_extra in (0, 7):
+    for mode in ("packed", "per_leaf"):
+        n_pp, n_leaves = count_for(mode, n_extra)
+        out[f"{mode}_{n_leaves}"] = n_pp
+print("RESULT", json.dumps(out))
+""" % REPO
+    r = run_sub(body)
+    leaf_counts = sorted(int(k.split("_")[1]) for k in r if "packed" in k)
+    assert len(set(leaf_counts)) == 2          # genuinely different trees
+    for k, v in r.items():
+        mode, n_leaves = k.rsplit("_", 1)
+        if mode == "packed":
+            assert v == 2, f"{k}: {v} ppermutes (want 2, leaf-independent)"
+        else:
+            assert v == 4 * int(n_leaves), f"{k}: {v} ppermutes"
+
+
+def test_padding_rows_stay_zero_through_steps():
+    """The layout invariant the packed shadows rely on: padding rows of
+    x_tilde / m_agg remain exactly zero across exchange steps."""
+    body = """
+tree = make_tree(jax.random.PRNGKey(3))
+local = jax.tree.map(lambda a: a[0], tree)
+layout = wire.WireLayout.for_tree(local)
+mask = np.zeros((layout.n_rows * layout.block,), bool)
+for slot in layout.slots:
+    start = slot.row_start * layout.block
+    mask[start + slot.size: (slot.row_start + slot.n_rows) * layout.block] = True
+x, st = trajectory(dict(algorithm="adc_dgd", quant_mode="adaptive",
+                        wire_packing="packed"), tree, steps=5)
+flat_xt = np.asarray(st["x_tilde"]).reshape(4, -1)
+flat_m = np.asarray(st["m_agg"]).reshape(4, -1)
+pad_max = max(float(np.max(np.abs(flat_xt[:, mask]))) if mask.any() else 0.0,
+              float(np.max(np.abs(flat_m[:, mask]))) if mask.any() else 0.0)
+print("RESULT", json.dumps({"pad_max": pad_max,
+                            "n_pad": int(mask.sum())}))
+"""
+    r = run_sub(body)
+    assert r["n_pad"] > 0
+    assert r["pad_max"] == 0.0
