@@ -1,4 +1,4 @@
-"""consensus_step_latency: packed vs per-leaf wire path on real leaf trees.
+"""consensus_step_latency: per-leaf vs packed vs pipelined wire paths.
 
 Times one jit'd ADC-DGD consensus exchange (no model forward/backward — the
 consensus step IS the system under test) on a >=4-device host-platform mesh
@@ -16,7 +16,7 @@ the packed path.
 
 Measured per arch and per wire path (``ConsensusConfig.wire_packing``):
   * steps/s under ``jax.jit`` (best-of-repeats wall clock; quantization
-    noise is pre-generated and injected so the PRNG — identical in both
+    noise is pre-generated and injected so the PRNG — identical in all
     paths — is excluded and the measurement isolates the wire path),
   * ring collectives per step (counted as ``ppermute`` eqns in the traced
     jaxpr — not hand-derived),
@@ -24,10 +24,24 @@ Measured per arch and per wire path (``ConsensusConfig.wire_packing``):
   * trace+compile seconds (the per-leaf path also pays an O(leaves)
     compile tax).
 
+The pipelined (chunked double-buffered) path is swept over
+``CHUNK_SWEEP`` chunk counts — chunking hides transfer latency behind
+quantize/dequant compute when the exchange is transfer-bound, but pays
+2 x chunks collectives and extra launch overhead, so the best chunk count
+is hardware- and tree-dependent (EXPERIMENTS.md §Perf).  Chunk count 1 is
+part of the sweep: it is structurally the monolithic packed path, so the
+best swept configuration can never lose to packed by more than timing
+noise.
+
 Writes ``BENCH_consensus_step.json`` at the repo root (the perf-trajectory
 artifact tracked from PR 2 onward) plus a copy under
-``benchmarks/artifacts/``.  Exits non-zero if the packed path is slower
-than the per-leaf path — the CI smoke gate.
+``benchmarks/artifacts/``.  CI smoke gates (exit non-zero):
+  * packed slower than the per-leaf reference,
+  * pipelined at its best swept chunk count slower than monolithic packed
+    beyond the NOISE_TOL timing-noise tolerance (plus a deterministic
+    structural check: chunks=1 must trace exactly 2 collectives),
+  * packed trace+compile time above COMPILE_BUDGET_S (a trace-size blowup
+    guard for the _adc_exchange rewrite).
 
 Run standalone (sets up its own host devices):
 
@@ -68,6 +82,23 @@ ARCHS = ("smollm-135m", "qwen3-0.6b")
 PROD_TP, PROD_FSDP, NODES = 16, 16, 4
 STEPS_TIMED = 3
 REPEATS = 2
+#: pipelined-path chunk counts swept per arch (1 == monolithic packed
+#: structure, so the best swept config tracks packed within timing noise
+#: even when chunking does not pay on this interconnect)
+CHUNK_SWEEP = (1, 2, 4, 8)
+#: trace+compile budget for the packed path: a trace-size *blowup* guard,
+#: not a tight SLA — PR 2 measured ~9 s and the PR 3 pipelined rewrite
+#: ~11 s on the CI host, whose compile times jitter tens of percent under
+#: load; the budget only needs to catch order-of-magnitude regressions
+#: (e.g. an accidentally unrolled scan)
+COMPILE_BUDGET_S = 20.0
+#: timing-noise floor for the pipelined-vs-packed gate: chunks=1 traces a
+#: program identical to packed yet has measured up to ~45% faster/slower
+#: on the shared CI host (the packed denominator is a single such noisy
+#: sample), so the timing gate's honest resolution is catching ~2x
+#: genuine regressions — anything finer is delegated to the
+#: deterministic chunks=1 structural check below
+NOISE_TOL = 0.5
 
 
 def count_eqns(jaxpr, prim_name: str) -> int:
@@ -203,14 +234,68 @@ def main() -> int:
             res[mode] = time_path(rt, mesh, xp, xh, noise, f"{arch}/{mode}")
             res[mode]["wire_bytes_per_step"] = rt.wire_bytes_per_step(
                 layout.n_elements, layout=layout)
+        # chunked double-buffered pipeline: sweep the chunk count, keep the
+        # best (the transfer-hiding vs launch-overhead tradeoff is swept,
+        # not guessed — EXPERIMENTS.md §Perf)
+        sweep, best = {}, None
+        for chunks in CHUNK_SWEEP:
+            rt = ConsensusRuntime(
+                ConsensusConfig(algorithm="adc_dgd", quant_mode="adaptive",
+                                wire_packing="pipelined",
+                                pipeline_chunks=chunks), ctx)
+            r = time_path(rt, mesh, xp, xh, noise,
+                          f"{arch}/pipelined[{chunks}]")
+            r["wire_bytes_per_step"] = rt.wire_bytes_per_step(
+                layout.n_elements, layout=layout)
+            r["pipeline_chunks"] = chunks
+            sweep[str(chunks)] = r
+            if best is None or r["steps_per_s"] > best["steps_per_s"]:
+                best = r
+        res["pipelined"] = dict(best, sweep=sweep,
+                                best_chunks=best["pipeline_chunks"])
         res["speedup"] = (res["packed"]["steps_per_s"]
                          / res["per_leaf"]["steps_per_s"])
-        print(f"  speedup: {res['speedup']:.2f}x", flush=True)
-        ok &= res["speedup"] >= 1.0
+        res["pipelined_vs_packed"] = (best["steps_per_s"]
+                                      / res["packed"]["steps_per_s"])
+        # the unbiased chunking win: best vs the sweep's OWN chunks=1 point.
+        # chunks=1 traces the identical program to packed, but the packed
+        # column is timed earlier in a colder process, so best/packed
+        # overstates the overlap gain by whatever warm-process drift
+        # accumulated between the two measurements; best/sweep[1] compares
+        # within the sweep and isolates what chunking itself buys.
+        res["overlap_gain"] = (best["steps_per_s"]
+                               / sweep["1"]["steps_per_s"])
+        print(f"  speedup: {res['speedup']:.2f}x   pipelined(best "
+              f"chunks={best['pipeline_chunks']}) vs packed: "
+              f"{res['pipelined_vs_packed']:.2f}x   overlap gain vs "
+              f"chunks=1: {res['overlap_gain']:.2f}x", flush=True)
+        if res["speedup"] < 1.0:
+            print(f"FAIL[{arch}]: packed slower than per-leaf reference")
+            ok = False
+        if res["pipelined_vs_packed"] < NOISE_TOL:
+            print(f"FAIL[{arch}]: pipelined best chunk count slower than "
+                  f"monolithic packed beyond the {NOISE_TOL:.2f} noise "
+                  "tolerance")
+            ok = False
+        if sweep["1"]["collectives_per_step"] != 2:
+            # deterministic structural check alongside the noisy timing
+            # gate: chunks=1 must trace exactly the monolithic packed wire
+            print(f"FAIL[{arch}]: pipelined chunks=1 traced "
+                  f"{sweep['1']['collectives_per_step']} collectives "
+                  "(want 2 — structure diverged from packed)")
+            ok = False
+        if res["packed"]["compile_s"] > COMPILE_BUDGET_S:
+            compile_s = res["packed"]["compile_s"]
+            print(f"FAIL[{arch}]: packed compile {compile_s:.1f}s exceeds "
+                  f"the {COMPILE_BUDGET_S:.0f}s budget "
+                  "(trace-size regression)")
+            ok = False
         out[arch.replace("-", "_").replace(".", "_")] = res
     payload = {"n_devices": N_DEVICES, "nodes": NODES,
                "prod_mesh": f"{PROD_FSDP}x{PROD_TP}",
-               "steps_timed": STEPS_TIMED, "archs": out}
+               "steps_timed": STEPS_TIMED, "chunk_sweep": list(CHUNK_SWEEP),
+               "compile_budget_s": COMPILE_BUDGET_S, "noise_tol": NOISE_TOL,
+               "archs": out}
     with open(os.path.join(REPO, "BENCH_consensus_step.json"), "w") as f:
         json.dump(payload, f, indent=1, default=float)
     art = os.path.join(REPO, "benchmarks", "artifacts")
@@ -218,7 +303,7 @@ def main() -> int:
     with open(os.path.join(art, "consensus_step_latency.json"), "w") as f:
         json.dump(payload, f, indent=1, default=float)
     if not ok:
-        print("FAIL: packed wire path slower than per-leaf reference")
+        print("FAIL: consensus-step smoke gates violated (see FAIL lines)")
         return 1
     return 0
 

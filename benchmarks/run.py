@@ -544,10 +544,12 @@ def bench_llm_wire_bytes() -> None:
 
 
 def bench_consensus_step_latency() -> None:
-    """Packed vs per-leaf consensus exchange on real LLM leaf trees (see
-    benchmarks/consensus_step.py).  Runs in a subprocess so the >=4-device
-    host platform does not clash with this process's jax device state;
-    fails (raises) if the packed path is slower than the per-leaf path."""
+    """Per-leaf vs packed vs pipelined consensus exchange on real LLM leaf
+    trees (see benchmarks/consensus_step.py).  Runs in a subprocess so the
+    >=4-device host platform does not clash with this process's jax device
+    state; fails (raises) on any smoke gate: packed slower than per-leaf,
+    pipelined best-chunk slower than packed, or packed compile time over
+    its trace-size budget."""
     import subprocess
     import sys
     t0 = time.time()
@@ -571,7 +573,8 @@ def bench_consensus_step_latency() -> None:
         payload = json.load(f)
     derived = " ".join(
         f"{a}:{v['speedup']:.1f}x({int(v['per_leaf']['collectives_per_step'])}"
-        f"->{int(v['packed']['collectives_per_step'])}coll)"
+        f"->{int(v['packed']['collectives_per_step'])}coll,"
+        f"pipe{v['pipelined_vs_packed']:.2f}x@c{v['pipelined']['best_chunks']})"
         for a, v in payload["archs"].items())
     _row("consensus_step_latency", time.time() - t0, derived)
 

@@ -29,10 +29,17 @@ spanning every leaf of the parameter tree (:class:`repro.core.wire.
 WireLayout`).  The default ``wire_packing="packed"`` hot path therefore
 runs ONE quantize launch, ONE byte-payload ``ppermute`` per ring direction
 (two collectives per step total, independent of leaf count), and ONE fused
-dequant-combine launch per step.  ``wire_packing="per_leaf"`` keeps the
-historical per-leaf wire path (4 x n_leaves collectives per step) as a
-bit-identical reference for tests and the ``consensus_step_latency``
-benchmark (DESIGN.md §Hardware adaptation).
+dequant-combine launch per step.  ``wire_packing="pipelined"`` splits the
+packed buffer into ``pipeline_chunks`` tile-aligned row slices
+(:class:`repro.core.wire.ChunkedLayout`) and double-buffers the exchange:
+chunk i's payload is in flight on both ring directions while chunk i+1 is
+quantized and chunk i-1 is dequant-combined, hiding transfer latency
+behind Pallas compute at the cost of 2 x pipeline_chunks collectives
+(same wire bytes; bit-identical results for every chunk count).
+``wire_packing="per_leaf"`` keeps the historical per-leaf wire path
+(4 x n_leaves collectives per step) as a bit-identical reference for
+tests and the ``consensus_step_latency`` benchmark (DESIGN.md §Hardware
+adaptation).
 
 Algorithms:
   adc_dgd        — the paper's contribution (wire = int8 codes + scales)
@@ -106,10 +113,20 @@ class ConsensusConfig:
     #: wire strategy for the compressed exchanges (DESIGN.md §Hardware
     #: adaptation): "packed" flat-packs the whole parameter tree into one
     #: lane-aligned buffer — one quantize launch + one byte-payload
-    #: ppermute per ring direction per step; "per_leaf" is the historical
+    #: ppermute per ring direction per step; "pipelined" splits the packed
+    #: buffer into ``pipeline_chunks`` tile-aligned row slices and
+    #: double-buffers them so chunk i's payload is in flight on both ring
+    #: directions while chunk i+1 is quantized and chunk i-1 is
+    #: dequant-combined (transfer hidden behind Pallas compute;
+    #: bit-identical to "packed"); "per_leaf" is the historical
     #: bit-identical per-leaf reference (4 x n_leaves collectives/step),
     #: kept for equivalence tests and the consensus_step_latency benchmark.
-    wire_packing: str = "packed"   # packed | per_leaf
+    wire_packing: str = "packed"   # packed | pipelined | per_leaf
+    #: chunk count for ``wire_packing="pipelined"`` (clamped to the packed
+    #: buffer's TILE_N-tile count; ragged tails allowed).  More chunks hide
+    #: more transfer latency but pay more launch/collective overhead —
+    #: benchmarks/consensus_step.py sweeps this (EXPERIMENTS.md §Perf).
+    pipeline_chunks: int = 4
 
     @property
     def side_weight(self) -> float:
@@ -121,9 +138,12 @@ class ConsensusConfig:
         if self.schedule_period < 1:
             raise ValueError(f"schedule_period must be >= 1, got "
                              f"{self.schedule_period}")
-        if self.wire_packing not in ("packed", "per_leaf"):
-            raise ValueError(f"wire_packing must be 'packed' or 'per_leaf', "
-                             f"got {self.wire_packing!r}")
+        if self.wire_packing not in ("packed", "pipelined", "per_leaf"):
+            raise ValueError(f"wire_packing must be 'packed', 'pipelined' "
+                             f"or 'per_leaf', got {self.wire_packing!r}")
+        if self.pipeline_chunks < 1:
+            raise ValueError(f"pipeline_chunks must be >= 1, got "
+                             f"{self.pipeline_chunks}")
 
 
 def _flat_ring_perm(ctx: ParallelContext, shift: int):
@@ -143,6 +163,28 @@ def _ppermute_ring(x, ctx: ParallelContext, shift: int):
     axes = _ring_axes(ctx)
     return jax.lax.ppermute(x, axes if len(axes) > 1 else axes[0],
                             _flat_ring_perm(ctx, shift))
+
+
+def _pipeline_schedule(chunks: wire.ChunkedLayout, launch, retire,
+                       inspect=None) -> list:
+    """Double-buffered chunk schedule shared by the pipelined exchanges.
+
+    Emission order at iteration c is ``launch(c+1)`` BEFORE ``retire(c)``,
+    so chunk c's payload transfer has no data dependence on — and can
+    overlap with — chunk c+1's quantize launch; chunk c-1 was retired in
+    the previous iteration while chunk c was in flight.  ``inspect(c,
+    inflight)`` (optional) observes each in-flight value before it is
+    retired (overflow accounting).  Returns ``[retire(c, ...) for c]``.
+    """
+    outs = []
+    inflight = launch(0)
+    for c in range(chunks.n_chunks):
+        if inspect is not None:
+            inspect(c, inflight)
+        nxt = launch(c + 1) if c + 1 < chunks.n_chunks else None
+        outs.append(retire(c, inflight))
+        inflight = nxt
+    return outs
 
 
 class ConsensusRuntime:
@@ -231,13 +273,37 @@ class ConsensusRuntime:
             return 2.0 * n_params_local * itemsize
         return 0.0
 
-    def collectives_per_step(self, n_leaves: int = 1) -> float:
+    def _chunks_for(self, layout: wire.WireLayout) -> wire.ChunkedLayout:
+        """The (single) chunk split this runtime's exchange uses for a
+        layout: the tile-count-clamped configured count for
+        ``wire_packing="pipelined"``, one chunk for the monolithic paths."""
+        return wire.ChunkedLayout.split(
+            layout, self.cfg.pipeline_chunks
+            if self.cfg.wire_packing == "pipelined" else 1)
+
+    def pipeline_chunks_for(self, layout: wire.WireLayout) -> int:
+        """Effective pipeline chunk count for a layout: 1 for the
+        monolithic paths, the (tile-count-clamped) configured chunk count
+        for ``wire_packing="pipelined"``."""
+        return self._chunks_for(layout).n_chunks
+
+    def collectives_per_step(self, n_leaves: int = 1,
+                             n_chunks: int | None = None,
+                             layout: wire.WireLayout | None = None) -> float:
         """Ring collectives this device issues per training step (static).
 
         The packed wire path is leaf-count independent: exactly one
         payload ``ppermute`` per ring direction (+ the amortized fp32
-        resync exchange for time-varying rings).  The per-leaf reference
-        pays 4 collectives per leaf (codes/scales x two directions).
+        resync exchange for time-varying rings).  The pipelined path pays
+        one payload ``ppermute`` per ring direction PER CHUNK (2 x
+        pipeline_chunks — the price of overlapping transfer with compute;
+        wire bytes are unchanged).  The per-leaf reference pays 4
+        collectives per leaf (codes/scales x two directions).
+
+        The traced chunk count is clamped to the buffer's tile count, so
+        for exact pipelined accounting pass ``layout`` (or an explicit
+        ``n_chunks``); with neither, the unclamped configured count is the
+        best static estimate available.
         """
         cfg = self.cfg
         n = self.ctx.total_consensus_nodes
@@ -245,12 +311,20 @@ class ConsensusRuntime:
             return 0.0
         resync_amort = (1.0 / cfg.schedule_period
                         if len(cfg.ring_strides) > 1 else 0.0)
+        if cfg.wire_packing == "pipelined":
+            if n_chunks is None and layout is not None:
+                n_chunks = self.pipeline_chunks_for(layout)
+            chunks = float(cfg.pipeline_chunks if n_chunks is None
+                           else n_chunks)
+        else:
+            chunks = 1.0
         if cfg.algorithm == "adc_dgd":
-            if cfg.wire_packing == "packed":
-                return 2.0 + 2.0 * resync_amort
+            if cfg.wire_packing in ("packed", "pipelined"):
+                return 2.0 * chunks + 2.0 * chunks * resync_amort
             return 4.0 * n_leaves + 2.0 * n_leaves * resync_amort
         if cfg.algorithm == "compressed_dgd":
-            return 2.0 if cfg.wire_packing == "packed" else 4.0 * n_leaves
+            return (2.0 * chunks if cfg.wire_packing in ("packed", "pipelined")
+                    else 4.0 * n_leaves)
         if cfg.algorithm == "dgd":
             return 2.0 * n_leaves
         assert cfg.algorithm == "allreduce", cfg.algorithm
@@ -292,7 +366,7 @@ class ConsensusRuntime:
             # across nodes & pods) — classic synchronous data parallelism.
             x_next = _allreduce_mean_delta(x_prev, x_half, ctx)
             return x_next, state, base_metrics(x_next)
-        packed = self.cfg.wire_packing == "packed"
+        packed = self.cfg.wire_packing in ("packed", "pipelined")
         if alg == "dgd":
             impl = lambda s: self._dgd_exchange(  # noqa: E731
                 x_prev, x_half, state, step=step, key=key, stride=s,
@@ -354,7 +428,9 @@ class ConsensusRuntime:
         constants."""
         return {
             "collectives_per_step": jnp.asarray(
-                self.collectives_per_step(layout.n_leaves), jnp.float32),
+                self.collectives_per_step(
+                    layout.n_leaves,
+                    n_chunks=self.pipeline_chunks_for(layout)), jnp.float32),
             "wire_bytes_per_step": jnp.asarray(
                 self.wire_bytes_per_step(layout.n_elements, layout=layout),
                 jnp.float32),
@@ -363,16 +439,28 @@ class ConsensusRuntime:
     # ------------------------------------------------------------------
     def _adc_exchange(self, x_prev, x_half, state, step, key, stride=1,
                       noise=None, layout=None):
-        """Packed ADC-DGD exchange: the whole parameter tree as ONE wire
-        problem.  One quantize launch over the packed differential, one
-        byte payload ``ppermute`` per ring direction, one fused
-        dequant-combine launch; leaves are materialized only for the
-        returned ``x_next``.  Bit-identical to ``_adc_exchange_per_leaf``
-        given the same noise buffer.
+        """Packed / pipelined ADC-DGD exchange: the whole parameter tree as
+        ONE wire problem, optionally software-pipelined over tile-aligned
+        chunks of the packed buffer.
+
+        ``wire_packing="packed"`` (chunks == 1) degenerates to the
+        monolithic PR 2 path: one quantize launch over the packed
+        differential, one byte-payload ``ppermute`` per ring direction,
+        one fused dequant-combine launch.  ``wire_packing="pipelined"``
+        splits the buffer into ``pipeline_chunks`` row slices
+        (:class:`repro.core.wire.ChunkedLayout`) and double-buffers the
+        stages — chunk i+1's payload is quantized and put on the wire
+        BEFORE chunk i's in-flight payload is consumed, so in steady state
+        the interconnect moves chunk i while the VPU quantizes chunk i+1
+        and dequant-combines chunk i-1 (see DESIGN.md §Hardware adaptation
+        for the timeline).  Rows are whole quantization blocks, so every
+        chunk count is bit-identical to the monolithic path given the same
+        noise buffer — and therefore to ``_adc_exchange_per_leaf`` too.
         """
         cfg, ctx = self.cfg, self.ctx
         if layout is None:
             layout = wire.WireLayout.for_tree(x_half)
+        chunks = self._chunks_for(layout)
         resync = self._resync_flag(step)
         step_k = self._step_k(step)
         key = _device_key(key, ctx)
@@ -383,28 +471,58 @@ class ConsensusRuntime:
         y = xh_p - xt                               # packed differential
         if noise is None:
             noise = jax.random.uniform(key, y.shape, jnp.float32)
-        payload = kops.quantize_payload(y, noise, fixed_step=step_k,
-                                        use_pallas=cfg.use_pallas)
-        if cfg.quant_mode == "fixed":
-            # overflow monitoring (paper §IV-D: bounded transmitted values)
-            codes = kops.unpack_payload(payload, layout.block)[0]
-            overflow = jnp.mean((jnp.abs(codes.astype(jnp.float32)) >= 127)
-                                .astype(jnp.float32))
-        else:
-            overflow = jnp.zeros((), jnp.float32)
-        # the ring exchange: exactly one collective per direction, carrying
-        # codes AND scales for every leaf in a single byte buffer
-        p_l = _ppermute_ring(payload, ctx, +stride)
-        p_r = _ppermute_ring(payload, ctx, -stride)
-        if resync is not None:
-            def _rebuild(xt=xt):
-                xt_l = _ppermute_ring(xt, ctx, +stride)
-                xt_r = _ppermute_ring(xt, ctx, -stride)
-                return jnp.float32(cfg.side_weight) * (xt_l + xt_r)
-            mb = jax.lax.cond(resync, _rebuild, lambda mb=mb: mb)
-        xt_new, m_new, comb = kops.dequant_combine_payload(
-            payload, p_l, p_r, xt, mb, cfg.self_weight, cfg.side_weight,
-            jnp.float32(1.0), use_pallas=cfg.use_pallas)
+
+        def launch(c):
+            """Quantize chunk c straight out of the full differential (the
+            kernel reads the row range in place) and put its byte payload
+            on both ring directions: 2 collectives per chunk, same total
+            wire bytes as the monolithic path."""
+            start, rows = chunks.bounds[c]
+            pay = kops.quantize_payload(y, noise, fixed_step=step_k,
+                                        use_pallas=cfg.use_pallas,
+                                        row_offset=start, n_rows=rows)
+            return (pay, _ppermute_ring(pay, ctx, +stride),
+                    _ppermute_ring(pay, ctx, -stride))
+
+        def retire(c, inflight):
+            """Fused dequant + shadow update + combine for chunk c's
+            in-flight payloads (persistent shadows viewed at the chunk
+            offset in-kernel; chunk-aware epoch-boundary m_agg resync)."""
+            pay, p_l, p_r = inflight
+            start, rows = chunks.bounds[c]
+            mb_c = mb
+            if resync is not None:
+                xt_c = chunks.slice_rows(xt, c)
+
+                def _rebuild(xt_c=xt_c):
+                    xt_l = _ppermute_ring(xt_c, ctx, +stride)
+                    xt_r = _ppermute_ring(xt_c, ctx, -stride)
+                    return jnp.float32(cfg.side_weight) * (xt_l + xt_r)
+
+                mb_c = jax.lax.cond(
+                    resync, _rebuild, lambda c=c: chunks.slice_rows(mb, c))
+            return kops.dequant_combine_payload(
+                pay, p_l, p_r, xt, mb_c, cfg.self_weight, cfg.side_weight,
+                jnp.float32(1.0), use_pallas=cfg.use_pallas,
+                row_offset=start, n_rows=rows)
+
+        clipped = [jnp.zeros((), jnp.float32)]
+
+        def count_overflow(c, inflight):
+            # overflow monitoring (paper §IV-D: bounded transmitted
+            # values); integer counts, so chunk sums are exact
+            codes = kops.unpack_payload(inflight[0], layout.block)[0]
+            clipped[0] = clipped[0] + jnp.sum(
+                (jnp.abs(codes.astype(jnp.float32)) >= 127)
+                .astype(jnp.float32))
+
+        parts = _pipeline_schedule(
+            chunks, launch, retire,
+            inspect=count_overflow if cfg.quant_mode == "fixed" else None)
+        xt_new = chunks.concat([p[0] for p in parts])
+        m_new = chunks.concat([p[1] for p in parts])
+        comb = chunks.concat([p[2] for p in parts])
+        overflow = clipped[0] / float(layout.n_rows * layout.block)
         # gradient step applied per leaf while unpacking (x_prev never
         # needs packing; identical elementwise ops to the per-leaf path)
         comb_leaves = layout.unpack(comb, cast=False)
@@ -509,20 +627,30 @@ class ConsensusRuntime:
         cfg, ctx = self.cfg, self.ctx
         if layout is None:
             layout = wire.WireLayout.for_tree(x_half)
+        chunks = self._chunks_for(layout)
         key = _device_key(key, ctx)
         xp_p = layout.pack(x_prev)
         if noise is None:
             noise = jax.random.uniform(key, xp_p.shape, jnp.float32)
-        payload = kops.quantize_payload(
-            xp_p, noise, fixed_step=jnp.float32(cfg.fixed_step0),
-            use_pallas=cfg.use_pallas)
-        p_l = _ppermute_ring(payload, ctx, +stride)
-        p_r = _ppermute_ring(payload, ctx, -stride)
-        c_l, s_l = kops.unpack_payload(p_l, layout.block)
-        c_r, s_r = kops.unpack_payload(p_r, layout.block)
-        left = c_l.astype(jnp.float32) * s_l
-        right = c_r.astype(jnp.float32) * s_r
-        mixed = (cfg.self_weight * xp_p + cfg.side_weight * (left + right))
+
+        def launch(c):
+            start, rows = chunks.bounds[c]
+            pay = kops.quantize_payload(
+                xp_p, noise, fixed_step=jnp.float32(cfg.fixed_step0),
+                use_pallas=cfg.use_pallas, row_offset=start, n_rows=rows)
+            return (_ppermute_ring(pay, ctx, +stride),
+                    _ppermute_ring(pay, ctx, -stride))
+
+        def retire(c, inflight):
+            p_l, p_r = inflight
+            c_l, s_l = kops.unpack_payload(p_l, layout.block)
+            c_r, s_r = kops.unpack_payload(p_r, layout.block)
+            left = c_l.astype(jnp.float32) * s_l
+            right = c_r.astype(jnp.float32) * s_r
+            return (cfg.self_weight * chunks.slice_rows(xp_p, c)
+                    + cfg.side_weight * (left + right))
+
+        mixed = chunks.concat(_pipeline_schedule(chunks, launch, retire))
         mixed_leaves = layout.unpack(mixed, cast=False)
         x_next = jax.tree.map(
             lambda m, h, p: (m + (h.astype(jnp.float32)

@@ -41,7 +41,7 @@ import numpy as np
 
 from repro.kernels import ops as kops
 
-__all__ = ["LeafSlot", "WireLayout", "pvary_to"]
+__all__ = ["LeafSlot", "WireLayout", "ChunkedLayout", "pvary_to"]
 
 
 def pvary_to(x, axes):
@@ -204,4 +204,62 @@ class WireLayout:
         rows = _lift_common_vma(rows)
         out = rows[0] if len(rows) == 1 else jnp.concatenate(rows, axis=0)
         assert out.shape == (self.n_rows, self.block), out.shape
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkedLayout:
+    """Static split of a packed ``(n_rows, BLOCK)`` buffer into pipeline
+    chunks (the unit of the double-buffered consensus exchange).
+
+    Chunk boundaries sit on ``TILE_N``-row multiples: rows ARE quantization
+    blocks (one per-block scale per row), so any row-aligned split leaves
+    codes/scales bit-identical to quantizing the whole buffer at once, and
+    tile alignment additionally keeps every chunk a valid standalone Pallas
+    grid.  The requested chunk count is clamped to the buffer's tile count;
+    when it does not divide evenly the leading chunks carry one extra tile
+    (ragged tail allowed — chunk sizes are static, no scan stacking).
+    """
+
+    n_rows: int
+    block: int
+    #: per chunk: (row_start, n_rows) — contiguous, covering [0, n_rows)
+    bounds: tuple[tuple[int, int], ...]
+
+    @classmethod
+    def split(cls, layout: "WireLayout", pipeline_chunks: int,
+              tile: int = kops.TILE_N) -> "ChunkedLayout":
+        if pipeline_chunks < 1:
+            raise ValueError(f"pipeline_chunks must be >= 1, got "
+                             f"{pipeline_chunks}")
+        n_tiles = layout.n_rows // tile
+        assert n_tiles * tile == layout.n_rows, (layout.n_rows, tile)
+        n_chunks = max(1, min(pipeline_chunks, n_tiles))
+        base, rem = divmod(n_tiles, n_chunks)
+        bounds, row = [], 0
+        for c in range(n_chunks):
+            rows = (base + (1 if c < rem else 0)) * tile
+            bounds.append((row, rows))
+            row += rows
+        assert row == layout.n_rows, (row, layout.n_rows)
+        return cls(n_rows=layout.n_rows, block=layout.block,
+                   bounds=tuple(bounds))
+
+    @property
+    def n_chunks(self) -> int:
+        return len(self.bounds)
+
+    def slice_rows(self, buf: jax.Array, c: int) -> jax.Array:
+        """Chunk ``c``'s row range of a full-height packed buffer (static
+        slice — fuses into consumers, never a standalone copy)."""
+        start, rows = self.bounds[c]
+        return jax.lax.slice_in_dim(buf, start, start + rows, axis=0)
+
+    def concat(self, parts: list) -> jax.Array:
+        """Reassemble the full-height buffer from per-chunk results."""
+        if len(parts) != self.n_chunks:
+            raise ValueError(f"{len(parts)} chunk parts != {self.n_chunks}")
+        parts = _lift_common_vma(list(parts))
+        out = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
+        assert out.shape[0] == self.n_rows, out.shape
         return out

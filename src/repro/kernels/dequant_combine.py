@@ -23,7 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from .quantize import (BLOCK, SCALE_BYTES, TILE_N, _align_vma,
-                       _bytes_to_scale, _out_vma)
+                       _bytes_to_scale, _chunk_view, _out_vma,
+                       _row_index_map, default_interpret)
 
 __all__ = ["dequant_combine_pallas", "dequant_combine_payload_pallas"]
 
@@ -46,11 +47,14 @@ def _kernel(w_ref, cs_ref, ss_ref, cl_ref, sl_ref, cr_ref, sr_ref,
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def dequant_combine_pallas(codes_self, scale_self, codes_left, scale_left,
                            codes_right, scale_right, x_tilde, m_agg,
-                           w_self, w_side, deamp, interpret: bool = True):
+                           w_self, w_side, deamp,
+                           interpret: bool | None = None):
     """All array args (n_blocks, BLOCK) / scales (n_blocks, 1).
 
     Returns (x_tilde', m_agg', combined).
     """
+    if interpret is None:
+        interpret = default_interpret()
     n, b = x_tilde.shape
     assert n % TILE_N == 0 and b % 128 == 0, (n, b)
     grid = (n // TILE_N,)
@@ -104,26 +108,53 @@ def _payload_kernel(w_ref, ps_ref, pl_ref, pr_ref, xt_ref, m_ref,
     comb_ref[...] = w_self * x_t + m
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "row_offset",
+                                             "n_rows"))
 def dequant_combine_payload_pallas(payload_self, payload_left, payload_right,
                                    x_tilde, m_agg, w_self, w_side, deamp,
-                                   interpret: bool = True):
+                                   interpret: bool | None = None,
+                                   row_offset: int = 0,
+                                   n_rows: int | None = None):
     """Payload-view receive side: three (n_blocks, BLOCK+4) uint8 wire
     buffers (self / left / right), packed shadows (n_blocks, BLOCK) f32.
 
     One fused launch decodes all three payloads (scales region decoded
     in-kernel) and applies the shadow update + ring combine for the whole
     parameter tree.  Returns (x_tilde', m_agg', combined).
+
+    Chunk view (the pipelined exchange): static ``row_offset``/``n_rows``
+    restrict the launch to one tile-aligned row range.  Operands that are
+    already chunk-height (the in-flight payloads off the wire, or a
+    resync-rebuilt ``m_agg`` slice) are read from row 0; full-height
+    operands (the persistent packed shadows) are read at the chunk offset
+    in-kernel via BlockSpec index maps — no sliced shadow copy is ever
+    materialized.  Outputs are chunk-height.
     """
-    n, b = x_tilde.shape
-    assert n % TILE_N == 0 and b % 128 == 0, (n, b)
-    assert payload_self.shape == (n, b + SCALE_BYTES), payload_self.shape
+    if interpret is None:
+        interpret = default_interpret()
+    b = x_tilde.shape[1]
+    assert b % 128 == 0, b
+    n, tile_off = _chunk_view(x_tilde.shape[0], n_rows, row_offset)
+    for p in (payload_self, payload_left, payload_right):
+        assert p.shape[1] == b + SCALE_BYTES, p.shape
+        assert p.shape[0] in (n, x_tilde.shape[0]), (p.shape, n)
     grid = (n // TILE_N,)
-    row = pl.BlockSpec((TILE_N, b), lambda i: (i, 0))
-    pay = pl.BlockSpec((TILE_N, b + SCALE_BYTES), lambda i: (i, 0))
+
+    def row(arr):
+        return pl.BlockSpec((TILE_N, b),
+                            _row_index_map(arr.shape[0], n, tile_off))
+
+    def pay(arr):
+        return pl.BlockSpec((TILE_N, b + SCALE_BYTES),
+                            _row_index_map(arr.shape[0], n, tile_off))
+
+    out_row = pl.BlockSpec((TILE_N, b), lambda i: (i, 0))
     w = jnp.stack([jnp.asarray(w_self, jnp.float32),
                    jnp.asarray(w_side, jnp.float32),
                    jnp.asarray(deamp, jnp.float32)])
+    in_specs = [pl.BlockSpec(memory_space=pl.ANY), pay(payload_self),
+                pay(payload_left), pay(payload_right), row(x_tilde),
+                row(m_agg)]
     (w, payload_self, payload_left, payload_right, x_tilde, m_agg) = \
         _align_vma(w, payload_self, payload_left, payload_right, x_tilde,
                    m_agg)
@@ -133,8 +164,8 @@ def dequant_combine_payload_pallas(payload_self, payload_left, payload_right,
     return pl.pallas_call(
         _payload_kernel,
         grid=grid,
-        in_specs=[pl.BlockSpec(memory_space=pl.ANY), pay, pay, pay, row, row],
-        out_specs=(row, row, row),
+        in_specs=in_specs,
+        out_specs=(out_row, out_row, out_row),
         out_shape=out_shape,
         interpret=interpret,
     )(w, payload_self, payload_left, payload_right, x_tilde, m_agg)

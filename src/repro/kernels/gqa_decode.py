@@ -28,7 +28,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .quantize import _lit, _match_vma, _out_vma
+from .quantize import _lit, _match_vma, _out_vma, default_interpret
 
 __all__ = ["gqa_decode_pallas", "TILE_S"]
 
@@ -79,13 +79,15 @@ def _kernel(softcap_arr, q_ref, k_ref, v_ref, valid_ref,
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def gqa_decode_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
                       valid: jax.Array, softcap=None,
-                      interpret: bool = True):
+                      interpret: bool | None = None):
     """q: (b, kvh, g, hd); k/v: (b, S, kvh, hd); valid: (S,) bool.
 
     Returns flash-decode partials (m (b,kvh,g), l (b,kvh,g),
     acc (b,kvh,g,hd)) — combine across shards with
     ``combine_decode_partials``.  Matches ``ref.gqa_decode_ref``.
     """
+    if interpret is None:
+        interpret = default_interpret()
     b, kvh, g, hd = q.shape
     S = k.shape[1]
     assert S % TILE_S == 0, (S, TILE_S)

@@ -50,8 +50,10 @@ def _vma_carrying(*arrays) -> bool:
     blocks are re-created without vma, so every binop fails type-checking),
     so the jit'd wrappers fall back to the bit-identical jnp reference there.
     On a real TPU (interpret=False) kernel avals are vma-stripped by design
-    and the pallas path is used unconditionally."""
-    return any(getattr(jax.typeof(a), "vma", None) for a in arrays)
+    and the pallas path is used unconditionally.  Pre-vma jax (0.4.x, no
+    ``jax.typeof``) has no such type system: always False."""
+    from .quantize import _vma_of
+    return any(_vma_of(a) for a in arrays)
 
 
 def quantize_blocks(y_blocks: jax.Array, noise: jax.Array,
@@ -96,14 +98,31 @@ def unpack_payload(payload: jax.Array, block: int = BLOCK):
     return codes, scales
 
 
+def _chunk_rows(a: jax.Array, row_offset: int, n_rows: int | None):
+    """Static chunk slice of a full-height operand (ref-path counterpart of
+    the kernels' BlockSpec chunk view); chunk-height operands pass through."""
+    if n_rows is None or a.shape[0] == n_rows:
+        return a
+    return jax.lax.slice_in_dim(a, row_offset, row_offset + n_rows, axis=0)
+
+
 def quantize_payload(y_blocks: jax.Array, noise: jax.Array,
-                     fixed_step=None, use_pallas: bool = False) -> jax.Array:
+                     fixed_step=None, use_pallas: bool = False,
+                     row_offset: int = 0,
+                     n_rows: int | None = None) -> jax.Array:
     """One quantize launch for the whole packed shard, emitting the wire
-    payload directly: (rows, BLOCK) f32 -> (rows, BLOCK+4) uint8."""
+    payload directly: (rows, BLOCK) f32 -> (rows, BLOCK+4) uint8.
+
+    Static ``row_offset``/``n_rows`` select one tile-aligned chunk of the
+    full-height operands (the pipelined exchange unit): the Pallas path
+    reads the chunk in-kernel via BlockSpec index offsets, the jnp path
+    takes a static slice; both emit only the chunk's payload rows."""
     if use_pallas and not _vma_carrying(y_blocks, noise):
-        return quantize_payload_pallas(y_blocks, noise, fixed_step=fixed_step)
-    codes, scales = ref.quantize_blocks_ref(y_blocks, noise,
-                                            fixed_step=fixed_step)
+        return quantize_payload_pallas(y_blocks, noise, fixed_step=fixed_step,
+                                       row_offset=row_offset, n_rows=n_rows)
+    codes, scales = ref.quantize_blocks_ref(
+        _chunk_rows(y_blocks, row_offset, n_rows),
+        _chunk_rows(noise, row_offset, n_rows), fixed_step=fixed_step)
     return pack_payload(codes, scales)
 
 
@@ -132,18 +151,29 @@ def dequant_combine(codes_self, scale_self, codes_left, scale_left,
 
 def dequant_combine_payload(payload_self, payload_left, payload_right,
                             x_tilde, m_agg, w_self, w_side, deamp,
-                            use_pallas: bool = False):
+                            use_pallas: bool = False,
+                            row_offset: int = 0, n_rows: int | None = None):
     """Payload-view dequant+combine: the three (rows, BLOCK+4) uint8 wire
     buffers are decoded (scales region decoded in-kernel on the Pallas
     path) and fused with the packed shadow update — ONE launch for the
-    whole parameter tree.  Returns (x_tilde', m_agg', combined)."""
+    whole parameter tree.  Returns (x_tilde', m_agg', combined).
+
+    Static ``row_offset``/``n_rows`` select one tile-aligned chunk (the
+    pipelined exchange unit): chunk-height operands (in-flight payloads, a
+    resync-rebuilt m_agg slice) are used as-is, full-height persistent
+    shadows are viewed at the chunk offset; all three results come back
+    chunk-height."""
     if use_pallas and not _vma_carrying(payload_self, x_tilde, m_agg):
         return dequant_combine_payload_pallas(
             payload_self, payload_left, payload_right, x_tilde, m_agg,
-            w_self, w_side, deamp)
+            w_self, w_side, deamp, row_offset=row_offset, n_rows=n_rows)
     block = x_tilde.shape[1]
-    cs, ss = unpack_payload(payload_self, block)
-    cl, sl = unpack_payload(payload_left, block)
-    cr, sr = unpack_payload(payload_right, block)
-    return ref.dequant_combine_ref(cs, ss, cl, sl, cr, sr, x_tilde, m_agg,
-                                   w_self, w_side, deamp)
+    cs, ss = unpack_payload(_chunk_rows(payload_self, row_offset, n_rows),
+                            block)
+    cl, sl = unpack_payload(_chunk_rows(payload_left, row_offset, n_rows),
+                            block)
+    cr, sr = unpack_payload(_chunk_rows(payload_right, row_offset, n_rows),
+                            block)
+    return ref.dequant_combine_ref(
+        cs, ss, cl, sl, cr, sr, _chunk_rows(x_tilde, row_offset, n_rows),
+        _chunk_rows(m_agg, row_offset, n_rows), w_self, w_side, deamp)

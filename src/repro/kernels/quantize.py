@@ -27,11 +27,60 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 __all__ = ["quantize_blocks_pallas", "quantize_payload_pallas", "TILE_N",
-           "BLOCK", "SCALE_BYTES"]
+           "BLOCK", "SCALE_BYTES", "default_interpret"]
 
 TILE_N = 32     # rows per grid step (int8 sublane tile)
 BLOCK = 512     # quantization block = lane-dim multiple of 128
 SCALE_BYTES = 4  # one fp32 scale per row, appended to the wire payload
+
+
+def default_interpret() -> bool:
+    """Backend-derived ``interpret`` default for every kernel in this
+    package: compiled Pallas on real TPUs, interpret mode everywhere else
+    (CPU CI, host-platform meshes) where Mosaic cannot lower."""
+    return jax.default_backend() != "tpu"
+
+
+def _chunk_view(n_full: int, n_rows: int | None, row_offset: int):
+    """Resolve a static chunk view over full-height (n_full, ...) operands.
+
+    Returns ``(n, tile_offset)``: the grid covers ``n`` rows starting at
+    ``row_offset`` of the full buffer — the kernel reads the chunk directly
+    out of the persistent packed array via BlockSpec index offsets, no
+    sliced copy is materialized.  Offsets/heights must sit on TILE_N
+    boundaries (chunk boundaries are tile-aligned by ChunkedLayout).
+    """
+    n = n_full if n_rows is None else int(n_rows)
+    assert n % TILE_N == 0, f"chunk rows {n} not a multiple of {TILE_N}"
+    assert row_offset % TILE_N == 0, f"row_offset {row_offset} unaligned"
+    assert row_offset + n <= n_full, (row_offset, n, n_full)
+    return n, row_offset // TILE_N
+
+
+def _row_index_map(arr_rows: int, n: int, tile_off: int):
+    """Index map for an operand that is either full-height (read at the
+    chunk offset, in-kernel view) or already chunk-height (offset 0)."""
+    if arr_rows == n:
+        return lambda i: (i, 0)
+    return lambda i: (i + tile_off, 0)
+
+
+def _vma_of(x) -> frozenset:
+    """vma of a value's aval, across jax versions: pre-vma jax (no
+    ``jax.typeof`` / ``jax.lax.pcast``, e.g. 0.4.x) has no varying/invariant
+    type distinction at all — everything reports the empty set and every
+    vma lift below becomes a no-op."""
+    typeof = getattr(jax, "typeof", None)
+    if typeof is None:
+        return frozenset()
+    return getattr(typeof(x), "vma", frozenset()) or frozenset()
+
+
+def _pcast_varying(x, axes):
+    pcast = getattr(jax.lax, "pcast", None)
+    if pcast is None or not axes:
+        return x
+    return pcast(x, tuple(axes), to="varying")
 
 
 def _match_vma(x, like):
@@ -41,11 +90,9 @@ def _match_vma(x, like):
     shard_map(check_vma=True) keep vma on elementwise ops but STRIP it on
     reductions, and never auto-insert pvary on literals — so any binop mixing
     those fails vma type-checking.  Explicit lifting is a no-op on real-TPU
-    lowering (kernel avals carry no vma there)."""
-    tgt = getattr(jax.typeof(like), "vma", frozenset()) or frozenset()
-    have = getattr(jax.typeof(x), "vma", frozenset()) or frozenset()
-    missing = tuple(tgt - have)
-    return jax.lax.pcast(x, missing, to="varying") if missing else x
+    lowering (kernel avals carry no vma there) and on pre-vma jax."""
+    missing = tuple(_vma_of(like) - _vma_of(x))
+    return _pcast_varying(x, missing)
 
 
 def _lit(v, like):
@@ -128,38 +175,33 @@ def _payload_fixed_kernel(y_ref, noise_ref, step_ref, payload_ref):
 
 def _out_vma(*args):
     """vma kwarg for pallas out ShapeDtypeStructs: union of the input vmas
-    (required under shard_map check_vma=True; empty dict elsewhere)."""
+    (required under shard_map check_vma=True; empty dict elsewhere,
+    including on pre-vma jax versions)."""
     vma: frozenset = frozenset()
-    seen = False
     for a in args:
-        v = getattr(jax.typeof(a), "vma", None)
-        if v is not None:
-            vma |= v
-            seen = True
-    return {"vma": vma} if seen and vma else {}
+        vma |= _vma_of(a)
+    return {"vma": vma} if vma else {}
 
 
 def _align_vma(*args):
     """pcast every array to the union vma of the group (no-op outside
-    shard_map) so the pallas kernel sees uniformly-typed inputs."""
+    shard_map and on pre-vma jax) so the pallas kernel sees uniformly-typed
+    inputs."""
     union: frozenset = frozenset()
     for a in args:
-        union |= getattr(jax.typeof(a), "vma", frozenset()) or frozenset()
+        union |= _vma_of(a)
     if not union:
         return args
-    out = []
-    for a in args:
-        have = getattr(jax.typeof(a), "vma", frozenset()) or frozenset()
-        missing = tuple(union - have)
-        out.append(jax.lax.pcast(a, missing, to="varying") if missing else a)
-    return tuple(out)
+    return tuple(_pcast_varying(a, tuple(union - _vma_of(a))) for a in args)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def quantize_blocks_pallas(y: jax.Array, noise: jax.Array,
                            fixed_step: jax.Array | None = None,
-                           interpret: bool = True):
+                           interpret: bool | None = None):
     """y, noise: (n_blocks, BLOCK) f32.  Returns (codes int8, scales f32)."""
+    if interpret is None:
+        interpret = default_interpret()
     n, b = y.shape
     assert b % 128 == 0, f"block {b} must be lane-aligned (x128)"
     assert n % TILE_N == 0, f"n_blocks {n} must be a multiple of {TILE_N}"
@@ -199,22 +241,37 @@ def quantize_blocks_pallas(y: jax.Array, noise: jax.Array,
     )(y, noise, step_arr)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "row_offset",
+                                             "n_rows"))
 def quantize_payload_pallas(y: jax.Array, noise: jax.Array,
                             fixed_step: jax.Array | None = None,
-                            interpret: bool = True):
+                            interpret: bool | None = None,
+                            row_offset: int = 0,
+                            n_rows: int | None = None):
     """Fused quantize-to-wire: (n_blocks, BLOCK) f32 -> (n_blocks,
     BLOCK + SCALE_BYTES) uint8 payload (int8 codes || fp32 scale bytes).
 
     One launch emits the exact byte buffer the ring ``ppermute`` moves —
     no separate codes/scales materialization or concat pass.  Bit-identical
     to ``pack_payload(*quantize_blocks_ref(y, noise, fixed_step))``.
+
+    Chunk view (the pipelined exchange): static ``row_offset``/``n_rows``
+    restrict the launch to one tile-aligned row range of full-height
+    operands — the grid's BlockSpec index maps read the chunk straight out
+    of the persistent packed buffers (no sliced copy), emitting only that
+    chunk's ``(n_rows, BLOCK+4)`` payload.  Rows are whole quantization
+    blocks, so the chunk payload is bit-identical to the same rows of the
+    whole-buffer launch.
     """
-    n, b = y.shape
+    if interpret is None:
+        interpret = default_interpret()
+    n_full, b = y.shape
     assert b % 128 == 0, f"block {b} must be lane-aligned (x128)"
-    assert n % TILE_N == 0, f"n_blocks {n} must be a multiple of {TILE_N}"
+    n, tile_off = _chunk_view(n_full, n_rows, row_offset)
     grid = (n // TILE_N,)
-    row_spec = pl.BlockSpec((TILE_N, b), lambda i: (i, 0))
+    y_spec = pl.BlockSpec((TILE_N, b), _row_index_map(y.shape[0], n, tile_off))
+    noise_spec = pl.BlockSpec((TILE_N, b),
+                              _row_index_map(noise.shape[0], n, tile_off))
     payload_spec = pl.BlockSpec((TILE_N, b + SCALE_BYTES), lambda i: (i, 0))
     if fixed_step is None:
         y, noise = _align_vma(y, noise)
@@ -222,7 +279,7 @@ def quantize_payload_pallas(y: jax.Array, noise: jax.Array,
         return pl.pallas_call(
             _payload_adaptive_kernel,
             grid=grid,
-            in_specs=[row_spec, row_spec],
+            in_specs=[y_spec, noise_spec],
             out_specs=payload_spec,
             out_shape=jax.ShapeDtypeStruct((n, b + SCALE_BYTES), jnp.uint8,
                                            **vma_kw),
@@ -234,7 +291,7 @@ def quantize_payload_pallas(y: jax.Array, noise: jax.Array,
     return pl.pallas_call(
         _payload_fixed_kernel,
         grid=grid,
-        in_specs=[row_spec, row_spec, pl.BlockSpec(memory_space=pl.ANY)],
+        in_specs=[y_spec, noise_spec, pl.BlockSpec(memory_space=pl.ANY)],
         out_specs=payload_spec,
         out_shape=jax.ShapeDtypeStruct((n, b + SCALE_BYTES), jnp.uint8,
                                        **vma_kw),

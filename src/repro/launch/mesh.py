@@ -16,21 +16,26 @@ import jax
 __all__ = ["make_production_mesh", "make_cpu_mesh"]
 
 
+def _make_mesh(shape, axes) -> jax.sharding.Mesh:
+    """jax.make_mesh across versions: ``axis_types``/``AxisType`` only exist
+    on newer jax; older versions (0.4.x) take just (shape, axes) and treat
+    every axis as the equivalent of Auto."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(axis_type.Auto,) * len(axes))
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_cpu_mesh(data: int = 1, model: int = 1, pod: int | None = None
                   ) -> jax.sharding.Mesh:
     """Small mesh over however many (host) devices exist — tests/examples."""
     if pod is not None:
-        return jax.make_mesh(
-            (pod, data, model), ("pod", "data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 3)
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        return _make_mesh((pod, data, model), ("pod", "data", "model"))
+    return _make_mesh((data, model), ("data", "model"))

@@ -158,6 +158,9 @@ def build_train_setup(
                                         # memory / microbatches per step)
     ring_strides: tuple[int, ...] = (1,),  # time-varying node-ring schedule
     schedule_period: int = 1,              # steps between ring re-wirings
+    wire_packing: str = "packed",          # packed | pipelined | per_leaf
+    pipeline_chunks: int = 4,              # chunks for wire_packing="pipelined"
+    seed: int = 0,                         # consensus quantization-noise seed
 ) -> TrainSetup:
     ctx = make_context(mesh, consensus_nodes)
     defs = T.build_defs(cfg, ctx, dtype=compute_dtype)
@@ -165,7 +168,8 @@ def build_train_setup(
         algorithm=algorithm, gamma=gamma, quant_mode=quant_mode,
         fixed_step0=fixed_step0, use_pallas=use_pallas,
         track_consensus_error=track_consensus_error,
-        ring_strides=tuple(ring_strides), schedule_period=schedule_period)
+        ring_strides=tuple(ring_strides), schedule_period=schedule_period,
+        wire_packing=wire_packing, pipeline_chunks=pipeline_chunks)
     consensus = ConsensusRuntime(ccfg, ctx)
     opt = opt_by_name(optimizer)
     if schedule == "constant":
@@ -228,7 +232,11 @@ def build_train_setup(
             grads = jax.tree.map(lambda g: g / ctx.fsdp, grads)
         lr_k = sched(k)
         x_half, opt_state = opt.step(state["opt"], state["params"], grads, lr_k)
-        key = jax.random.fold_in(jax.random.PRNGKey(0), k)
+        # consensus noise stream rooted at the run seed (folded per step;
+        # _device_key folds in the node coordinates) — independent runs must
+        # not share quantization noise or their stochastic-rounding errors
+        # would be correlated across replicas of an experiment
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), k)
         # packed consensus shadows carry a leading per-device dim of 1
         # inside shard_map (the global buffers are device-major)
         cons_in = jax.tree.map(lambda a: a[0], state["consensus"])
@@ -292,9 +300,13 @@ def init_consensus_state(setup: TrainSetup, params) -> Any:
     return jax.jit(init_sm)(params)
 
 
-def init_train_state(setup: TrainSetup, key: jax.Array):
-    """Materialize a real train state (small configs / examples / tests)."""
+def init_train_state(setup: TrainSetup, key: jax.Array | int):
+    """Materialize a real train state (small configs / examples / tests).
+
+    ``key`` may be a PRNG key or a plain int seed (CLI ``--seed``)."""
     from repro.models.params import materialize_storage_host
+    if isinstance(key, int):
+        key = jax.random.PRNGKey(key)
     ctx = setup.ctx
     host_params = materialize_storage_host(
         setup.defs.storage, key, ctx.tp, ctx.total_consensus_nodes, ctx.fsdp)
@@ -335,6 +347,15 @@ def main(argv=None):
                          "schedule epoch (time-varying topology), e.g. 1,2")
     ap.add_argument("--schedule-period", type=int, default=1,
                     help="steps between ring re-wirings")
+    ap.add_argument("--wire-packing", default="packed",
+                    choices=["packed", "pipelined", "per_leaf"],
+                    help="consensus wire strategy (pipelined = chunked "
+                         "double-buffered exchange)")
+    ap.add_argument("--pipeline-chunks", type=int, default=4,
+                    help="chunk count for --wire-packing=pipelined")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="run seed: parameter init AND the consensus "
+                         "quantization-noise stream")
     ap.add_argument("--optimizer", default="sgd")
     ap.add_argument("--schedule", default="constant")
     ap.add_argument("--microbatches", type=int, default=1)
@@ -353,8 +374,10 @@ def main(argv=None):
         microbatches=args.microbatches,
         ring_strides=tuple(int(s) for s in args.ring_strides.split(",")),
         schedule_period=args.schedule_period,
+        wire_packing=args.wire_packing, pipeline_chunks=args.pipeline_chunks,
+        seed=args.seed,
         track_consensus_error=(args.algorithm != "allreduce"))
-    state = init_train_state(setup, jax.random.PRNGKey(0))
+    state = init_train_state(setup, args.seed)
     ds_kw = {}
     if cfg.frontend == "audio_frames":
         ds_kw = dict(enc_frames=cfg.encoder_frames, d_model=cfg.d_model)

@@ -103,17 +103,29 @@ class ParallelContext:
         psum/tp keeps both the value and the gradient exact."""
         if self.tp == 1 or not self.in_shard_map:
             return x
-        if self.tp_axis in getattr(jax.typeof(x), "vma", frozenset()):
+        typeof = getattr(jax, "typeof", None)
+        if typeof is None:
+            # pre-vma jax: replicated compute is already a plain replicated
+            # value and grad does NOT insert psums at invariant boundaries
+            # (that pathology is the vma type system's), so the correct
+            # fallback is the identity — psum/tp here would route the
+            # cotangent through psum's old-shard_map transpose and scale
+            # gradients wrongly
+            return x
+        if self.tp_axis in getattr(typeof(x), "vma", frozenset()):
             return jax.lax.psum(x, self.tp_axis) / self.tp
         return x
 
     def pvary_tp(self, x):
         """Mark x as vma-varying over the model axis (no-op semantically;
         needed so lax.scan carries type-check under check_vma=True when the
-        body contains model-axis all_gathers)."""
+        body contains model-axis all_gathers; no-op on pre-vma jax)."""
         if self.tp == 1 or not self.in_shard_map:
             return x
-        return jax.lax.pcast(x, (self.tp_axis,), to="varying")
+        pcast = getattr(jax.lax, "pcast", None)
+        if pcast is None:
+            return x
+        return pcast(x, (self.tp_axis,), to="varying")
 
     def ag_tp(self, x, axis: int, tiled: bool = True):
         """all_gather over the model axis (seq-sharded attention path)."""
@@ -167,10 +179,21 @@ class ParallelContext:
         ``check_vma=True`` out_specs of ``P()`` valid for every mesh shape."""
         if not self.in_shard_map:
             return x
-        varying = getattr(jax.typeof(x), "vma", frozenset())
+        typeof = getattr(jax, "typeof", None)
+        if typeof is None:
+            # pre-vma jax can't tell varying from replicated: psum every
+            # axis of size > 1 and divide — exact for varying values (true
+            # mean) AND replicated ones (n*x/n == x)
+            varying = None
+        else:
+            varying = getattr(typeof(x), "vma", frozenset())
         denom = 1
         for a in (self.tp_axis, self.data_axis, self.pod_axis):
-            if a is not None and a in varying:
+            if a is None:
+                continue
+            take = (self.axis_size_of(a) > 1 if varying is None
+                    else a in varying)
+            if take:
                 x = jax.lax.psum(x, a)
                 denom *= self.axis_size_of(a)
         return x / denom if denom > 1 else x

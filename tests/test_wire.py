@@ -11,6 +11,13 @@ Covered invariants:
   * the packed exchange issues EXACTLY 2 ring ppermute collectives per step
     regardless of leaf count (counted in the traced jaxpr)
   * packed compressed-DGD == per-leaf reference bit-for-bit
+  * ChunkedLayout split algebra: tile-aligned contiguous cover, ragged
+    tails, chunk-count clamping
+  * pipelined (chunked double-buffered) exchange == monolithic packed
+    bit-for-bit for chunk counts {1, 2, 4, 7-with-ragged-tail}, including
+    the epoch-boundary m_agg resync and fixed-mode overflow accounting
+  * the pipelined exchange issues EXACTLY 2 x pipeline_chunks ppermutes
+    per step with wire bytes unchanged vs packed (jaxpr + metrics)
 
 Multi-device tests spawn a fresh python with XLA_FLAGS (jax locks the device
 count at first init; the main pytest process must keep seeing ONE device).
@@ -159,6 +166,87 @@ def test_config_rejects_bad_wire_packing():
     from repro.core.distributed import ConsensusConfig
     with pytest.raises(ValueError, match="wire_packing"):
         ConsensusConfig(wire_packing="flat")
+    with pytest.raises(ValueError, match="pipeline_chunks"):
+        ConsensusConfig(wire_packing="pipelined", pipeline_chunks=0)
+
+
+# ---------------------------------------------------------------------------
+# ChunkedLayout: split algebra + chunk-view kernel equivalence
+# ---------------------------------------------------------------------------
+
+def test_chunked_layout_split_algebra():
+    """Chunks are contiguous, tile-aligned, cover the buffer exactly;
+    ragged splits put the extra tiles in the leading chunks; requested
+    counts beyond the tile count clamp."""
+    tree = {"big": jnp.zeros((10 * kops.TILE_N * kops.BLOCK - 5,))}
+    layout = wire.WireLayout.for_tree(tree)
+    n_tiles = layout.n_rows // kops.TILE_N
+    assert n_tiles == 10
+    for k in (1, 2, 4, 7, 10):
+        cl = wire.ChunkedLayout.split(layout, k)
+        assert cl.n_chunks == k
+        row = 0
+        for start, rows in cl.bounds:
+            assert start == row and rows % kops.TILE_N == 0 and rows > 0
+            row += rows
+        assert row == layout.n_rows
+    # ragged: 10 tiles over 7 chunks -> three 2-tile chunks then four 1-tile
+    cl = wire.ChunkedLayout.split(layout, 7)
+    assert [r // kops.TILE_N for _, r in cl.bounds] == [2, 2, 2, 1, 1, 1, 1]
+    # clamp: more chunks than tiles
+    assert wire.ChunkedLayout.split(layout, 64).n_chunks == n_tiles
+    with pytest.raises(ValueError, match="pipeline_chunks"):
+        wire.ChunkedLayout.split(layout, 0)
+    # concat round-trips slice_rows
+    buf = jnp.arange(layout.n_rows * layout.block, dtype=jnp.float32
+                     ).reshape(layout.n_rows, layout.block)
+    cl = wire.ChunkedLayout.split(layout, 7)
+    back = cl.concat([cl.slice_rows(buf, c) for c in range(cl.n_chunks)])
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(buf))
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_chunk_view_kernels_match_monolithic(use_pallas):
+    """quantize_payload / dequant_combine_payload chunk views (static
+    row_offset/n_rows over full-height operands) == the same rows of the
+    whole-buffer launch, bit-for-bit, on both kernel paths."""
+    rng = np.random.default_rng(11)
+    n, b = 10 * kops.TILE_N, kops.BLOCK
+    y = jnp.asarray(rng.standard_normal((n, b)), jnp.float32)
+    noise = jnp.asarray(rng.random((n, b)), jnp.float32)
+    xt = jnp.asarray(rng.standard_normal((n, b)), jnp.float32)
+    m = jnp.asarray(rng.standard_normal((n, b)), jnp.float32)
+
+    class _L:
+        n_rows, block = n, b
+
+    for step in (None, jnp.float32(1e-2)):
+        full = kops.quantize_payload(y, noise, fixed_step=step,
+                                     use_pallas=use_pallas)
+        dq_full = kops.dequant_combine_payload(
+            full, full, full, xt, m, 0.5, 0.25, jnp.float32(1.0),
+            use_pallas=use_pallas)
+        for k in (2, 7):
+            cl = wire.ChunkedLayout.split(_L, k)
+            parts = [kops.quantize_payload(y, noise, fixed_step=step,
+                                           use_pallas=use_pallas,
+                                           row_offset=s, n_rows=r)
+                     for s, r in cl.bounds]
+            np.testing.assert_array_equal(
+                np.asarray(jnp.concatenate(parts)), np.asarray(full))
+            dq_parts = [
+                kops.dequant_combine_payload(
+                    # in-flight payloads arrive chunk-height off the wire;
+                    # the persistent shadows stay full-height (in-kernel view)
+                    cl.slice_rows(full, c), cl.slice_rows(full, c),
+                    cl.slice_rows(full, c), xt, m, 0.5, 0.25,
+                    jnp.float32(1.0), use_pallas=use_pallas,
+                    row_offset=s, n_rows=r)
+                for c, (s, r) in enumerate(cl.bounds)]
+            for i in range(3):
+                np.testing.assert_array_equal(
+                    np.asarray(jnp.concatenate([p[i] for p in dq_parts])),
+                    np.asarray(dq_full[i]))
 
 
 # ---------------------------------------------------------------------------
@@ -179,8 +267,8 @@ def run_sub(body: str, timeout: int = 1500) -> dict:
         mesh = Mesh(np.array(jax.devices()[:4]), ("data",))
         ctx = ParallelContext(tp=1, data_size=4, n_nodes=4, in_shard_map=True)
 
-        def make_tree(key, n_extra=0):
-            ks = jax.random.split(key, 5 + n_extra)
+        def make_tree(key, n_extra=0, big=0):
+            ks = jax.random.split(key, 6 + n_extra)
             tree = {
                 "w": jax.random.normal(ks[0], (4, 3, 37), jnp.float32),
                 "b": jax.random.normal(ks[1], (4, 513), jnp.bfloat16),
@@ -188,8 +276,12 @@ def run_sub(body: str, timeout: int = 1500) -> dict:
                 "deep": {"m": jax.random.normal(ks[3], (4, 7, 11, 2),
                                                 jnp.float32)},
             }
+            if big:
+                # one leaf large enough that the packed buffer spans many
+                # TILE_N tiles (so multi-chunk pipelines have real splits)
+                tree["big"] = jax.random.normal(ks[4], (4, big), jnp.float32)
             for i in range(n_extra):
-                tree[f"x{i}"] = jax.random.normal(ks[5 + i], (4, 64 + i),
+                tree[f"x{i}"] = jax.random.normal(ks[6 + i], (4, 64 + i),
                                                   jnp.float32)
             return tree
 
@@ -337,6 +429,113 @@ print("RESULT", json.dumps(out))
             assert v == 2, f"{k}: {v} ppermutes (want 2, leaf-independent)"
         else:
             assert v == 4 * int(n_leaves), f"{k}: {v} ppermutes"
+
+
+def test_pipelined_equals_packed_all_chunk_counts():
+    """Acceptance: the chunked double-buffered exchange is bit-for-bit the
+    monolithic packed path for every chunk count in {1, 2, 4,
+    7-with-ragged-tail} — params AND shadows — on adaptive & fixed
+    quantization, including the (1,2)-stride schedule's epoch-boundary
+    m_agg resync, with the fixed-mode overflow accounting identical too
+    (clip counts are integers, so chunk-summed accounting is exact)."""
+    body = """
+def build_m(rt, tree):
+    # like build(), but also surfaces the per-device overflow_frac metric
+    pspec = jax.tree.map(lambda a: P("data"), tree)
+    cons_spec = {"x_tilde": P("data", None, None),
+                 "m_agg": P("data", None, None)}
+    init = lambda p: jax.tree.map(lambda a: a[None], rt.init_state(p))
+    init_f = jax.jit(shard_map_compat(
+        init, mesh, in_specs=(pspec,), out_specs=cons_spec, check=False))
+    def step(xp, xh, s, k):
+        s = jax.tree.map(lambda a: a[0], s)
+        xn, s2, m = rt.exchange(xp, xh, s, k, jax.random.PRNGKey(7),
+                                noise=shared_noise(rt, xh, k))
+        return (xn, jax.tree.map(lambda a: a[None], s2),
+                m["overflow_frac"][None])
+    step_f = jax.jit(shard_map_compat(
+        step, mesh, in_specs=(pspec, pspec, cons_spec, P()),
+        out_specs=(pspec, cons_spec, P("data")), check=False))
+    return init_f, step_f
+
+def trajectory_m(cfg_kw, tree, steps=5):
+    rt = ConsensusRuntime(ConsensusConfig(**cfg_kw), ctx)
+    init_f, step_f = build_m(rt, tree)
+    st = init_f(tree)
+    x, overflows = tree, []
+    for k in range(1, steps + 1):
+        xh = jax.tree.map(
+            lambda a: (a.astype(jnp.float32) + 0.01 * k).astype(a.dtype), x)
+        x, st, ov = step_f(x, xh, st, jnp.asarray(k, jnp.int32))
+        overflows.append(ov)
+    return jax.device_get((x, st, overflows))
+
+# big leaf -> 10+ tiles so 7 chunks is a genuinely ragged split
+tree = make_tree(jax.random.PRNGKey(0), big=150000)
+layout = wire.WireLayout.for_tree(jax.tree.map(lambda a: a[0], tree))
+out = {"n_tiles": layout.n_rows // 32}
+for qm in ("adaptive", "fixed"):
+    for strides, period, tag in (((1,), 1, "static"), ((1, 2), 2, "sched")):
+        kw = dict(algorithm="adc_dgd", quant_mode=qm, fixed_step0=1e-2,
+                  ring_strides=strides, schedule_period=period)
+        ref = trajectory_m({**kw, "wire_packing": "packed"}, tree)
+        for chunks in (1, 2, 4, 7):
+            got = trajectory_m({**kw, "wire_packing": "pipelined",
+                                "pipeline_chunks": chunks}, tree)
+            out[f"{qm}_{tag}_c{chunks}"] = max_diff(got, ref)
+print("RESULT", json.dumps(out))
+"""
+    r = run_sub(body)
+    n_tiles = r.pop("n_tiles")
+    assert n_tiles >= 8, f"tree too small for ragged 7-chunk split: {n_tiles}"
+    assert len(r) == 2 * 2 * 4
+    for k, v in r.items():
+        assert v == 0.0, f"{k}: pipelined vs packed max diff {v}"
+
+
+def test_pipelined_collectives_scale_with_chunks():
+    """Acceptance: the pipelined exchange traces EXACTLY 2 x pipeline_chunks
+    ring ppermutes per step (counted in the jaxpr), its reported
+    collectives_per_step metric agrees, the requested chunk count clamps to
+    the buffer's tile count, and wire bytes are unchanged vs packed."""
+    body = """
+import sys
+sys.path.insert(0, os.path.join(%r, "benchmarks"))
+from consensus_step import count_eqns
+
+tree = make_tree(jax.random.PRNGKey(2), big=150000)
+local = jax.tree.map(lambda a: a[0], tree)
+layout = wire.WireLayout.for_tree(local)
+out = {"n_tiles": layout.n_rows // 32}
+packed_rt = ConsensusRuntime(ConsensusConfig(algorithm="adc_dgd"), ctx)
+bytes_packed = packed_rt.wire_bytes_per_step(layout.n_elements, layout=layout)
+for chunks in (1, 2, 4, 7, 999):
+    rt = ConsensusRuntime(
+        ConsensusConfig(algorithm="adc_dgd", wire_packing="pipelined",
+                        pipeline_chunks=chunks), ctx)
+    init_f, step_f = build(rt, tree)
+    st = init_f(tree)
+    jaxpr = jax.make_jaxpr(step_f)(tree, tree, st, jnp.asarray(2, jnp.int32))
+    out[f"pp_{chunks}"] = count_eqns(jaxpr, "ppermute")
+    out[f"eff_{chunks}"] = rt.pipeline_chunks_for(layout)
+    out[f"acct_{chunks}"] = rt.collectives_per_step(
+        layout.n_leaves, n_chunks=rt.pipeline_chunks_for(layout))
+    out[f"bytes_{chunks}"] = rt.wire_bytes_per_step(layout.n_elements,
+                                                    layout=layout)
+out["bytes_packed"] = bytes_packed
+print("RESULT", json.dumps(out))
+""" % REPO
+    r = run_sub(body)
+    n_tiles = r.pop("n_tiles")
+    bytes_packed = r.pop("bytes_packed")
+    for chunks in (1, 2, 4, 7, 999):
+        eff = min(chunks, n_tiles)
+        assert r[f"eff_{chunks}"] == eff
+        assert r[f"pp_{chunks}"] == 2 * eff, \
+            f"chunks={chunks}: {r[f'pp_{chunks}']} ppermutes (want {2 * eff})"
+        assert r[f"acct_{chunks}"] == 2.0 * eff
+        # chunking pays collectives, never bytes
+        assert r[f"bytes_{chunks}"] == bytes_packed
 
 
 def test_padding_rows_stay_zero_through_steps():
