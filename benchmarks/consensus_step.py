@@ -1,4 +1,5 @@
-"""consensus_step_latency: per-leaf vs packed vs pipelined wire paths.
+"""consensus_step_latency: per-leaf vs packed vs pipelined wire paths,
+plus the wire-codec sweep and the adaptive bit-budget controller demo.
 
 Times one jit'd ADC-DGD consensus exchange (no model forward/backward — the
 consensus step IS the system under test) on a >=4-device host-platform mesh
@@ -33,6 +34,16 @@ part of the sweep: it is structurally the monolithic packed path, so the
 best swept configuration can never lose to packed by more than timing
 noise.
 
+The **codec sweep** (smollm-135m, packed path) measures each wire codec in
+``CODEC_SWEEP`` — int8 / int4 / int2 / topk (DESIGN.md §Wire codecs) —
+reporting steps/s, wire bytes/step, and the consensus error of a short
+pure-gossip run (xh == x; per-device random init) so the bandwidth/fidelity
+trade is a measured table (EXPERIMENTS.md §Wire codecs), and the
+**controller demo** runs fixed-mode epochs with the AdaptiveBitController
+in the loop, logging the codec chosen per epoch — the amplified grid
+``Delta_0 / k^gamma`` shrinks across epochs, so the trace must walk the
+bit-budget ladder.
+
 Writes ``BENCH_consensus_step.json`` at the repo root (the perf-trajectory
 artifact tracked from PR 2 onward) plus a copy under
 ``benchmarks/artifacts/``.  CI smoke gates (exit non-zero):
@@ -41,7 +52,10 @@ artifact tracked from PR 2 onward) plus a copy under
     beyond the NOISE_TOL timing-noise tolerance (plus a deterministic
     structural check: chunks=1 must trace exactly 2 collectives),
   * packed trace+compile time above COMPILE_BUDGET_S (a trace-size blowup
-    guard for the _adc_exchange rewrite).
+    guard for the _adc_exchange rewrite),
+  * any sub-byte/sparse codec NOT strictly below int8's wire bytes/step,
+    int4 or topk below the 2x reduction the sub-byte formats promise,
+  * the adaptive controller not switching codecs across the demo epochs.
 
 Run standalone (sets up its own host devices):
 
@@ -70,6 +84,7 @@ from jax.sharding import Mesh, PartitionSpec as P            # noqa: E402
 
 from repro.configs import get_config                         # noqa: E402
 from repro.core import wire                                  # noqa: E402
+from repro.core.codec import AdaptiveBitController           # noqa: E402
 from repro.core.distributed import (ConsensusConfig,         # noqa: E402
                                     ConsensusRuntime)
 from repro.models import transformer as T                    # noqa: E402
@@ -92,6 +107,15 @@ CHUNK_SWEEP = (1, 2, 4, 8)
 #: load; the budget only needs to catch order-of-magnitude regressions
 #: (e.g. an accidentally unrolled scan)
 COMPILE_BUDGET_S = 20.0
+#: packed-path wire codecs swept on smollm-135m (DESIGN.md §Wire codecs)
+CODEC_SWEEP = ("int8", "int4", "int2", "topk")
+#: pure-gossip steps for the per-codec consensus-error column
+GOSSIP_STEPS = 6
+#: controller demo: epochs x steps/epoch of fixed-mode exchanges with the
+#: AdaptiveBitController re-selecting the codec at every epoch boundary
+CONTROLLER_EPOCHS = 4
+CONTROLLER_EPOCH_STEPS = 5
+CONTROLLER_STEP0 = 0.02
 #: timing-noise floor for the pipelined-vs-packed gate: chunks=1 traces a
 #: program identical to packed yet has measured up to ~45% faster/slower
 #: on the shared CI host (the packed denominator is a single such noisy
@@ -176,8 +200,8 @@ def build_step(rt: ConsensusRuntime, mesh, tree):
     return init_f, step_f
 
 
-def time_path(rt, mesh, xp, xh, noise, label: str) -> dict:
-    init_f, step_f = build_step(rt, mesh, xp)
+def time_path(rt, mesh, xp, xh, noise, label: str, built=None) -> dict:
+    init_f, step_f = built if built is not None else build_step(rt, mesh, xp)
     st = jax.tree.map(lambda a: a.block_until_ready(), init_f(xp))
     k = jnp.asarray(2, jnp.int32)
     jaxpr = jax.make_jaxpr(step_f)(xp, xh, st, noise, k)
@@ -199,6 +223,178 @@ def time_path(rt, mesh, xp, xh, noise, label: str) -> dict:
           f"ppermutes/step   (compile {compile_s:.0f}s)", flush=True)
     return {"steps_per_s": 1.0 / sec, "seconds_per_step": sec,
             "collectives_per_step": collectives, "compile_s": compile_s}
+
+
+def build_step_metrics(rt: ConsensusRuntime, mesh, tree):
+    """Like :func:`build_step` but also surfaces the per-step residual RMS
+    and clip fraction — the AdaptiveBitController's feedback signals."""
+    pspec = jax.tree.map(lambda _: P("data"), tree)
+    cons_spec = {"x_tilde": P("data", None, None),
+                 "m_agg": P("data", None, None)}
+    noise_spec = P("data", None, None)
+
+    def init(p):
+        return jax.tree.map(lambda a: a[None], rt.init_state(p))
+
+    init_f = jax.jit(shard_map_compat(init, mesh, in_specs=(pspec,),
+                                      out_specs=cons_spec, check=False))
+
+    def step(xp, xh, st, noise, k):
+        st = jax.tree.map(lambda a: a[0], st)
+        x_next, st2, m = rt.exchange(xp, xh, st, k, jax.random.PRNGKey(3),
+                                     noise=noise[0])
+        return (x_next, jax.tree.map(lambda a: a[None], st2),
+                m["residual_norm"][None], m["overflow_frac"][None])
+
+    step_f = jax.jit(shard_map_compat(
+        step, mesh, in_specs=(pspec, pspec, cons_spec, noise_spec, P()),
+        out_specs=(pspec, cons_spec, P("data"), P("data")), check=False))
+    return init_f, step_f
+
+
+def _codec_noise(rt: ConsensusRuntime, layout: wire.WireLayout, seed=0):
+    return jnp.asarray(np.random.default_rng(seed).random(
+        (N_DEVICES, layout.n_rows, rt.codec.noise_cols(layout.block)),
+        np.float32))
+
+
+def _consensus_err(x) -> float:
+    """Normalized dispersion of the per-device copies (leading dim)."""
+    total, count = 0.0, 0
+    for leaf in jax.tree_util.tree_leaves(x):
+        a = np.asarray(jax.device_get(leaf), np.float64)
+        total += float(np.sum((a - a.mean(axis=0, keepdims=True)) ** 2))
+        count += a[0].size
+    return total / count
+
+
+def codec_section(mesh, ctx) -> tuple[dict, bool]:
+    """Wire-codec sweep + adaptive-controller demo (smollm-135m, packed).
+
+    Per codec: steps/s (same harness as the wire-path columns), wire
+    bytes/step, and the consensus error of a GOSSIP_STEPS pure-gossip run
+    from per-device random inits (xh == x isolates the mixing fidelity —
+    coarser codecs buy bandwidth with slower/looser consensus).  Then the
+    controller demo: fixed-mode epochs with the amplified grid shrinking
+    as Delta_0 / k, the controller re-selecting the codec from measured
+    residual/overflow at every epoch boundary.
+    """
+    arch = "smollm-135m"
+    ok = True
+    key = jax.random.PRNGKey(hash(arch) % 2**31)
+    local = local_leaf_tree(arch, key)
+    layout = wire.WireLayout.for_tree(local)
+    xp = jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (N_DEVICES, *a.shape)), local)
+    xh = jax.tree.map(
+        lambda a: (a.astype(jnp.float32) + 1e-3).astype(a.dtype), xp)
+    # per-device DISTINCT copies for the pure-gossip fidelity runs
+    leaves, treedef = jax.tree_util.tree_flatten(local)
+    ks = jax.random.split(jax.random.fold_in(key, 1), len(leaves))
+    x0 = jax.tree_util.tree_unflatten(treedef, [
+        (jax.random.normal(k2, (N_DEVICES, *a.shape), jnp.float32) * 0.05)
+        .astype(a.dtype)
+        for k2, a in zip(ks, leaves)])
+    sweep = {}
+    print(f"codec sweep ({arch}, packed): {layout.n_elements:,} local "
+          f"params, {layout.n_rows} rows", flush=True)
+    for name in CODEC_SWEEP:
+        rt = ConsensusRuntime(
+            ConsensusConfig(algorithm="adc_dgd", quant_mode="adaptive",
+                            wire_codec=name), ctx)
+        noise = _codec_noise(rt, layout)
+        built = build_step(rt, mesh, xp)
+        r = time_path(rt, mesh, xp, xh, noise, f"{arch}/codec[{name}]",
+                      built=built)
+        r["wire_bytes_per_step"] = rt.wire_bytes_per_step(
+            layout.n_elements, layout=layout)
+        # pure-gossip fidelity: same compiled step, xh == x, distinct inits.
+        # init_state's m_0 = (1 - W_ii) x0 bakes in the shared-init
+        # contract (DESIGN.md §Changed assumptions); these nodes start
+        # DISTINCT, so m_agg is rebuilt from the actual ring neighbors
+        # (w_side * (x_left + x_right)) — the same correction the
+        # epoch-boundary resync performs
+        init_f, step_f = built
+        st = init_f(x0)
+        xt0 = np.stack([np.asarray(layout.pack(
+            jax.tree.map(lambda a, d=d: a[d], x0))) for d in range(N_DEVICES)])
+        w_side = rt.cfg.side_weight
+        m0 = w_side * (np.roll(xt0, 1, axis=0) + np.roll(xt0, -1, axis=0))
+        st = {"x_tilde": st["x_tilde"], "m_agg": jnp.asarray(m0)}
+        x = x0
+        r["consensus_err_start"] = _consensus_err(x)
+        for k2 in range(1, GOSSIP_STEPS + 1):
+            x, st = step_f(x, x, st, noise, jnp.asarray(k2, jnp.int32))
+        r["consensus_err_end"] = _consensus_err(x)
+        print(f"    gossip err {r['consensus_err_start']:.3e} -> "
+              f"{r['consensus_err_end']:.3e}   "
+              f"{r['wire_bytes_per_step'] / 1e6:.2f} MB/step", flush=True)
+        sweep[name] = r
+    int8_bytes = sweep["int8"]["wire_bytes_per_step"]
+    for name in ("int4", "int2", "topk"):
+        if not sweep[name]["wire_bytes_per_step"] < int8_bytes:
+            print(f"FAIL[codec]: {name} does not shrink wire bytes "
+                  f"({sweep[name]['wire_bytes_per_step']} vs {int8_bytes})")
+            ok = False
+    for name in ("int4", "topk"):
+        if int8_bytes / sweep[name]["wire_bytes_per_step"] < 2.0:
+            print(f"FAIL[codec]: {name} below the promised 2x byte "
+                  "reduction vs int8")
+            ok = False
+    for name in CODEC_SWEEP:
+        if not sweep[name]["consensus_err_end"] \
+                < sweep[name]["consensus_err_start"]:
+            print(f"FAIL[codec]: {name} gossip did not contract "
+                  "consensus error")
+            ok = False
+
+    # -- adaptive controller demo (fixed-mode epochs) --------------------
+    ctl = AdaptiveBitController(fixed_step0=CONTROLLER_STEP0, gamma=1.0,
+                                patience=1)
+    trace = [ctl.initial(layout.n_rows)]
+    steps_f, states, xs = {}, {}, {}
+    print(f"controller demo: start {trace[0]}, Delta_k = "
+          f"{CONTROLLER_STEP0}/k, {CONTROLLER_EPOCHS} epochs x "
+          f"{CONTROLLER_EPOCH_STEPS} steps", flush=True)
+    x = xp
+    st = None
+    noise_by = {}
+    k = 0
+    for epoch in range(CONTROLLER_EPOCHS):
+        name = trace[-1]
+        if name not in steps_f:
+            rt = ConsensusRuntime(
+                ConsensusConfig(algorithm="adc_dgd", quant_mode="fixed",
+                                fixed_step0=CONTROLLER_STEP0,
+                                wire_codec=name), ctx)
+            steps_f[name] = (rt, *build_step_metrics(rt, mesh, x))
+            noise_by[name] = _codec_noise(steps_f[name][0], layout)
+        rt, init_f, step_f = steps_f[name]
+        if st is None:
+            st = init_f(x)
+        res_l, ovf_l = [], []
+        for _ in range(CONTROLLER_EPOCH_STEPS):
+            k += 1
+            xh_k = jax.tree.map(
+                lambda a: (a.astype(jnp.float32) + 1e-3).astype(a.dtype), x)
+            x, st, res, ovf = step_f(x, xh_k, st, noise_by[name],
+                                     jnp.asarray(k, jnp.int32))
+            res_l.append(float(np.mean(np.asarray(res))))
+            ovf_l.append(float(np.mean(np.asarray(ovf))))
+        chosen = ctl.select(k + 1, residual_rms=float(np.mean(res_l)),
+                            overflow_frac=float(np.mean(ovf_l)),
+                            n_rows=layout.n_rows)
+        print(f"  epoch {epoch}: ran {name}, residual_rms="
+              f"{np.mean(res_l):.3g} overflow={np.mean(ovf_l):.3g} "
+              f"-> next codec {chosen}", flush=True)
+        trace.append(chosen)
+    controller = {"trace": trace, "epoch_steps": CONTROLLER_EPOCH_STEPS,
+                  "fixed_step0": CONTROLLER_STEP0,
+                  "switched": len(set(trace)) > 1}
+    if not controller["switched"]:
+        print(f"FAIL[codec]: controller never switched codecs: {trace}")
+        ok = False
+    return {"sweep": sweep, "controller": controller}, ok
 
 
 def main() -> int:
@@ -291,11 +487,13 @@ def main() -> int:
                   "(trace-size regression)")
             ok = False
         out[arch.replace("-", "_").replace(".", "_")] = res
+    codecs, codec_ok = codec_section(mesh, ctx)
+    ok = ok and codec_ok
     payload = {"n_devices": N_DEVICES, "nodes": NODES,
                "prod_mesh": f"{PROD_FSDP}x{PROD_TP}",
                "steps_timed": STEPS_TIMED, "chunk_sweep": list(CHUNK_SWEEP),
                "compile_budget_s": COMPILE_BUDGET_S, "noise_tol": NOISE_TOL,
-               "archs": out}
+               "archs": out, "codecs": codecs}
     with open(os.path.join(REPO, "BENCH_consensus_step.json"), "w") as f:
         json.dump(payload, f, indent=1, default=float)
     art = os.path.join(REPO, "benchmarks", "artifacts")

@@ -3,12 +3,21 @@
 Public surface:
   topology     — mixing matrices W and their spectral properties
   compression  — unbiased stochastic compression operators (Definition 1)
+  codec        — wire-codec payload formats + adaptive bit-budget controller
   problems     — consensus optimization test problems
   consensus    — ADC-DGD + baselines, single-process reference
   distributed  — shard_map/pjit distributed runtime for ADC-DGD
   theory       — rate/error-ball predictions for validation
 """
-from . import compression, consensus, problems, theory, topology  # noqa: F401
+from . import codec, compression, consensus, problems, theory, topology  # noqa: F401
+
+from .codec import (  # noqa: F401
+    AdaptiveBitController,
+    Int8Codec,
+    SubByteCodec,
+    TopKCodec,
+    WireCodec,
+)
 
 from .compression import (  # noqa: F401
     Compressor,

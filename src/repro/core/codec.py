@@ -1,0 +1,414 @@
+"""Wire-codec subsystem: pluggable payload formats for the packed exchange.
+
+The paper's convergence theory (Definition 1 / Theorems 1-3) only needs the
+wire transformation to be an unbiased compressor — nothing pins it to the
+int8-codes-plus-fp32-scale format the transport shipped historically.  This
+module makes the payload format a first-class axis (DESIGN.md §Wire codecs):
+
+    compressors (core.compression)  —  WHAT noise model the math assumes
+    WireCodec (this module)         —  HOW a block row becomes wire bytes
+    WireLayout / ChunkedLayout      —  WHERE those bytes live in the buffer
+    ConsensusRuntime (distributed)  —  WHEN they move (packed / pipelined)
+
+A :class:`WireCodec` maps ``(n_rows, BLOCK)`` fp32 block rows to
+``(n_rows, payload_width)`` uint8 wire rows and back, fused with the
+consensus combine on the receive side.  Every codec is row-local (rows ARE
+quantization blocks), so the chunk-view discipline of the pipelined
+exchange — static ``row_offset``/``n_rows`` views over full-height packed
+operands — carries over unchanged, and every chunk count stays
+bit-identical to the monolithic launch.
+
+Codecs:
+
+  ``int8``  — the historical production format, refactored (not rewritten)
+              behind this interface: delegates to the PR 2/3 kernels
+              unchanged, byte-for-byte (asserted in tests/test_codec.py).
+  ``int4``/``int2`` — sub-byte dense: codes bit-packed 2/4 per byte + bf16
+              scale (kernels/bitpack.py).
+  ``topk``  — sparse: one magnitude-proportionally sampled element per
+              BLOCK//k stratum, inverse-probability scaled (unbiased),
+              shipped as bitmap + int8 values + bf16 scale.
+
+:class:`AdaptiveBitController` sits on top: a host-level state machine that
+re-selects the codec per epoch from runtime feedback (residual RMS vs the
+amplified grid ``Delta_0 / k^gamma``, clip fraction, and a user byte
+budget) — see DESIGN.md §Wire codecs for the transition rules.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import bitpack
+from repro.kernels import ops as kops
+
+__all__ = ["WireCodec", "Int8Codec", "SubByteCodec", "TopKCodec",
+           "by_name", "CODEC_NAMES", "AdaptiveBitController"]
+
+
+class WireCodec:
+    """Payload format contract between compressors and the packed transport.
+
+    All geometry (`payload_width`, `payload_bytes`, `noise_cols`,
+    `codes_per_row`) is static — trace constants the runtime, benchmarks
+    and rooflines account with.  ``encode_payload`` / ``decode_combine``
+    follow the chunk-view kernel contract of kernels/ops.py (static
+    ``row_offset``/``n_rows`` over full-height operands).
+    """
+
+    name: str
+    #: largest transmittable |code| (the clip boundary; grid levels =
+    #: 2*code_max + 1)
+    code_max: int
+
+    # -- static geometry -------------------------------------------------
+    def payload_width(self, block: int = kops.BLOCK) -> int:
+        """Wire bytes per block row."""
+        raise NotImplementedError
+
+    def payload_bytes(self, n_rows: int, block: int = kops.BLOCK) -> int:
+        """Wire bytes for an ``n_rows``-row payload (one ring direction)."""
+        return n_rows * self.payload_width(block)
+
+    def noise_cols(self, block: int = kops.BLOCK) -> int:
+        """Uniform-noise columns consumed per block row."""
+        return block
+
+    def codes_per_row(self, block: int = kops.BLOCK) -> int:
+        """Transmitted codes per row (the clip-fraction denominator)."""
+        return block
+
+    # -- wire transformation --------------------------------------------
+    def encode_payload(self, y, noise, fixed_step=None,
+                       use_pallas: bool = False, row_offset: int = 0,
+                       n_rows: int | None = None):
+        """(rows, BLOCK) f32 differential -> (rows, payload_width) uint8."""
+        raise NotImplementedError
+
+    def decode_payload(self, payload, block: int = kops.BLOCK):
+        """Payload -> dense (rows, BLOCK) f32 (jnp path: tests, overflow
+        accounting, offline tools; the hot path uses decode_combine)."""
+        raise NotImplementedError
+
+    def decode_combine(self, payload_self, payload_left, payload_right,
+                       x_tilde, m_agg, w_self, w_side, deamp,
+                       use_pallas: bool = False, row_offset: int = 0,
+                       n_rows: int | None = None):
+        """Fused decode + shadow update + ring combine; returns
+        (x_tilde', m_agg', combined), all chunk-height."""
+        raise NotImplementedError
+
+    def count_clipped(self, payload, block: int = kops.BLOCK):
+        """Number of transmitted codes sitting at the clip boundary
+        (paper §IV-D overflow monitoring); integer-valued f32 scalar."""
+        raise NotImplementedError
+
+    def count_saturated(self, y, fixed_step, payload,
+                        block: int = kops.BLOCK):
+        """Transmitted values that overflowed the fixed grid — the signal
+        the exchange's ``overflow_frac`` metric (and through it the
+        AdaptiveBitController's up-switch) is built on.
+
+        Default: the payload boundary census (``count_clipped``), which is
+        honest for fine grids (int8, top-k values: 255 levels, boundary
+        codes are overwhelmingly genuine clips).  Coarse sub-byte grids
+        override this to count from the differential itself — under int2's
+        3-level alphabet almost every legitimate code sits AT +-1, so the
+        census would read ~50% "overflow" on perfectly healthy traffic and
+        the controller could never hold a sub-byte codec.
+        """
+        del y, fixed_step
+        return self.count_clipped(payload, block)
+
+
+@dataclasses.dataclass(frozen=True)
+class Int8Codec(WireCodec):
+    """The historical int8 + fp32-scale wire, unchanged: every method
+    delegates to the exact PR 2/3 kernel entry points, so the refactor is
+    bit-invisible (tests/test_codec.py pins the byte stream)."""
+
+    name: str = "int8"
+    code_max: int = 127
+
+    def payload_width(self, block: int = kops.BLOCK) -> int:
+        return kops.payload_width(block)
+
+    def encode_payload(self, y, noise, fixed_step=None, use_pallas=False,
+                       row_offset=0, n_rows=None):
+        return kops.quantize_payload(y, noise, fixed_step=fixed_step,
+                                     use_pallas=use_pallas,
+                                     row_offset=row_offset, n_rows=n_rows)
+
+    def decode_payload(self, payload, block: int = kops.BLOCK):
+        codes, scales = kops.unpack_payload(payload, block)
+        return codes.astype(jnp.float32) * scales
+
+    def decode_combine(self, payload_self, payload_left, payload_right,
+                       x_tilde, m_agg, w_self, w_side, deamp,
+                       use_pallas=False, row_offset=0, n_rows=None):
+        return kops.dequant_combine_payload(
+            payload_self, payload_left, payload_right, x_tilde, m_agg,
+            w_self, w_side, deamp, use_pallas=use_pallas,
+            row_offset=row_offset, n_rows=n_rows)
+
+    def count_clipped(self, payload, block: int = kops.BLOCK):
+        codes = kops.unpack_payload(payload, block)[0]
+        return jnp.sum((jnp.abs(codes.astype(jnp.float32)) >= 127)
+                       .astype(jnp.float32))
+
+
+@dataclasses.dataclass(frozen=True)
+class SubByteCodec(WireCodec):
+    """Dense ``code_bits``-bit codes (4 -> int4, 2 -> int2), bit-packed
+    ``8 // code_bits`` per byte, + 2 bf16 scale bytes per row."""
+
+    code_bits: int = 4
+
+    def __post_init__(self):
+        if self.code_bits not in (2, 4):
+            raise ValueError(f"code_bits must be 2 or 4, got {self.code_bits}")
+
+    @property
+    def name(self) -> str:  # type: ignore[override]
+        return f"int{self.code_bits}"
+
+    @property
+    def code_max(self) -> int:  # type: ignore[override]
+        return bitpack.subbyte_code_max(self.code_bits)
+
+    def payload_width(self, block: int = kops.BLOCK) -> int:
+        return bitpack.subbyte_payload_width(block, self.code_bits)
+
+    def encode_payload(self, y, noise, fixed_step=None, use_pallas=False,
+                       row_offset=0, n_rows=None):
+        return kops.subbyte_encode_payload(
+            y, noise, self.code_bits, fixed_step=fixed_step,
+            use_pallas=use_pallas, row_offset=row_offset, n_rows=n_rows)
+
+    def decode_payload(self, payload, block: int = kops.BLOCK):
+        return kops.subbyte_decode_payload(payload, self.code_bits, block)
+
+    def decode_combine(self, payload_self, payload_left, payload_right,
+                       x_tilde, m_agg, w_self, w_side, deamp,
+                       use_pallas=False, row_offset=0, n_rows=None):
+        return kops.subbyte_decode_combine(
+            payload_self, payload_left, payload_right, x_tilde, m_agg,
+            w_self, w_side, deamp, self.code_bits, use_pallas=use_pallas,
+            row_offset=row_offset, n_rows=n_rows)
+
+    def count_clipped(self, payload, block: int = kops.BLOCK):
+        pack = bitpack.subbyte_pack(self.code_bits)
+        codes = bitpack._unpack_fields(payload[:, : block // pack],
+                                       self.code_max, pack)
+        return jnp.sum((jnp.abs(codes) >= self.code_max)
+                       .astype(jnp.float32))
+
+    def count_saturated(self, y, fixed_step, payload,
+                        block: int = kops.BLOCK):
+        """|y| beyond the representable fixed grid (|y / Delta_k| >
+        code_max: the stochastic round can exceed the clip boundary).
+        Counted from the differential, not the payload — on a 3- or
+        15-level alphabet, boundary codes are usually legitimate values,
+        not clips (see WireCodec.count_saturated)."""
+        if fixed_step is None:
+            return self.count_clipped(payload, block)
+        step = bitpack._bf16_round(jnp.asarray(fixed_step, jnp.float32))
+        return jnp.sum((jnp.abs(y) > self.code_max * step)
+                       .astype(jnp.float32))
+
+
+@dataclasses.dataclass(frozen=True)
+class TopKCodec(WireCodec):
+    """Sparse one-per-stratum codec: k magnitude-proportionally sampled
+    elements per row (unbiased via inverse-probability scaling), shipped as
+    a BLOCK-bit bitmap + k int8 values + 2 bf16 scale bytes."""
+
+    k: int = 64
+    name: str = "topk"
+    code_max: int = 127
+
+    def __post_init__(self):
+        if self.k < 1 or kops.BLOCK % self.k:
+            raise ValueError(f"k must divide BLOCK={kops.BLOCK}, got {self.k}")
+
+    def payload_width(self, block: int = kops.BLOCK) -> int:
+        return bitpack.topk_payload_width(block, self.k)
+
+    def noise_cols(self, block: int = kops.BLOCK) -> int:
+        # [0, block): selection race; [block, block + k): value rounding
+        return 2 * block
+
+    def codes_per_row(self, block: int = kops.BLOCK) -> int:
+        return self.k
+
+    def encode_payload(self, y, noise, fixed_step=None, use_pallas=False,
+                       row_offset=0, n_rows=None):
+        return kops.topk_encode_payload(
+            y, noise, self.k, fixed_step=fixed_step, use_pallas=use_pallas,
+            row_offset=row_offset, n_rows=n_rows)
+
+    def decode_payload(self, payload, block: int = kops.BLOCK):
+        return kops.topk_decode_payload(payload, self.k, block)
+
+    def decode_combine(self, payload_self, payload_left, payload_right,
+                       x_tilde, m_agg, w_self, w_side, deamp,
+                       use_pallas=False, row_offset=0, n_rows=None):
+        return kops.topk_decode_combine(
+            payload_self, payload_left, payload_right, x_tilde, m_agg,
+            w_self, w_side, deamp, self.k, use_pallas=use_pallas,
+            row_offset=row_offset, n_rows=n_rows)
+
+    def count_clipped(self, payload, block: int = kops.BLOCK):
+        wb = block // 8
+        vals = jax.lax.bitcast_convert_type(
+            payload[:, wb:wb + self.k], jnp.int8)
+        return jnp.sum((jnp.abs(vals.astype(jnp.float32)) >= 127)
+                       .astype(jnp.float32))
+
+
+CODEC_NAMES = ("int8", "int4", "int2", "topk")
+
+
+def by_name(name: str) -> WireCodec:
+    reg = {
+        "int8": Int8Codec,
+        "int4": lambda: SubByteCodec(code_bits=4),
+        "int2": lambda: SubByteCodec(code_bits=2),
+        "topk": TopKCodec,
+    }
+    if name not in reg:
+        raise KeyError(f"unknown wire codec {name!r}; have {sorted(reg)}")
+    return reg[name]()
+
+
+# ---------------------------------------------------------------------------
+# Adaptive bit-budget controller (host level, epoch granularity)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class AdaptiveBitController:
+    """Per-epoch codec selector driven by runtime feedback.
+
+    ``ppermute`` payload shapes are static per trace, so the codec cannot
+    change inside a jitted step; the controller instead runs on the host at
+    epoch boundaries and the trainer swaps in the (cached) step trace for
+    the chosen codec (launch/train.py).  State machine (DESIGN.md §Wire
+    codecs):
+
+      fidelity need   n(k) = residual_rms * headroom / Delta_k,
+                      Delta_k = fixed_step0 / k^gamma  (the amplified grid)
+      candidates      ladder entries whose 2 * n_rows * payload_width fits
+                      ``byte_budget`` (all, when no budget; the cheapest
+                      entry when nothing fits)
+      target          cheapest candidate with code_max >= n(k); the
+                      highest-fidelity candidate when none reaches n(k)
+      up-switches     (more bits) immediate — clipping destroys the
+                      unbiased-compression contract; additionally forced
+                      one ladder rung up when overflow_frac > overflow_hi
+      down-switches   (fewer bits) only after ``patience`` consecutive
+                      epochs agree — hysteresis against residual noise
+
+    In ``quant_mode="adaptive"`` there is no fixed grid (Delta_k is
+    meaningless and overflow is structurally ~0): pass
+    ``residual_rms=None`` and the controller degenerates to the byte-budget
+    filter (cheapest fitting codec).
+    """
+
+    ladder: tuple[str, ...] = ("int2", "int4", "int8")
+    byte_budget: float | None = None
+    gamma: float = 1.0
+    fixed_step0: float = 1e-3
+    headroom: float = 4.0        # target code_max >= headroom * rms / Delta_k
+    overflow_hi: float = 0.01    # clip fraction that forces a rung up
+    patience: int = 2            # consecutive epochs before a down-switch
+    current: str | None = None
+    _pending: str | None = dataclasses.field(default=None, repr=False)
+    _pending_count: int = dataclasses.field(default=0, repr=False)
+
+    def __post_init__(self):
+        if not self.ladder:
+            raise ValueError("ladder must be non-empty")
+        for name in self.ladder:
+            by_name(name)  # validates
+
+    # -- static helpers --------------------------------------------------
+    def wire_bytes(self, name: str, n_rows: int,
+                   block: int = kops.BLOCK) -> float:
+        """Bytes/step this codec puts on the ring (both directions)."""
+        return 2.0 * by_name(name).payload_bytes(n_rows, block)
+
+    def candidates(self, n_rows: int, block: int = kops.BLOCK
+                   ) -> tuple[str, ...]:
+        """Budget-filtered ladder, cheapest first."""
+        order = sorted(self.ladder,
+                       key=lambda n: (by_name(n).payload_width(block),
+                                      by_name(n).code_max))
+        if self.byte_budget:
+            fit = tuple(n for n in order
+                        if self.wire_bytes(n, n_rows, block)
+                        <= self.byte_budget)
+            return fit if fit else (order[0],)
+        return tuple(order)
+
+    def _fidelity(self, name: str) -> int:
+        return self.ladder.index(name)
+
+    def target(self, next_step: int, residual_rms: float | None,
+               overflow_frac: float, n_rows: int,
+               block: int = kops.BLOCK) -> str:
+        cands = self.candidates(n_rows, block)
+        if residual_rms is None:          # adaptive grid: budget filter only
+            pick = cands[0]
+        else:
+            delta_k = self.fixed_step0 / max(1.0, float(next_step)) ** self.gamma
+            need = float(residual_rms) * self.headroom / delta_k
+            pick = None
+            for name in cands:
+                if by_name(name).code_max >= need:
+                    pick = name
+                    break
+            if pick is None:
+                pick = max(cands, key=lambda n: by_name(n).code_max)
+        if (self.current is not None and overflow_frac > self.overflow_hi
+                and self._fidelity(pick) <= self._fidelity(self.current)):
+            # observed clipping overrides the prediction: force a rung up
+            cur = self._fidelity(self.current)
+            above = [n for n in cands if self._fidelity(n) > cur]
+            if above:
+                pick = min(above, key=self._fidelity)
+        return pick
+
+    def initial(self, n_rows: int, block: int = kops.BLOCK) -> str:
+        """Conservative starting codec: the highest-fidelity budget
+        candidate (no residual feedback exists before the first epoch, and
+        starting coarse risks clipping the large early differentials)."""
+        self.current = max(self.candidates(n_rows, block),
+                           key=self._fidelity)
+        return self.current
+
+    # -- the state machine ----------------------------------------------
+    def select(self, next_step: int, residual_rms: float | None,
+               overflow_frac: float, n_rows: int,
+               block: int = kops.BLOCK) -> str:
+        """Advance one epoch; returns the codec to use until the next call."""
+        pick = self.target(next_step, residual_rms, overflow_frac, n_rows,
+                           block)
+        if self.current is None:
+            self.current = pick
+        elif self._fidelity(pick) > self._fidelity(self.current):
+            self.current = pick           # up-switch: immediate
+            self._pending, self._pending_count = None, 0
+        elif pick != self.current:
+            if pick == self._pending:
+                self._pending_count += 1
+            else:
+                self._pending, self._pending_count = pick, 1
+            if self._pending_count >= self.patience:
+                self.current = pick       # down-switch: after patience
+                self._pending, self._pending_count = None, 0
+        else:
+            self._pending, self._pending_count = None, 0
+        return self.current

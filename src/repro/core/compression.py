@@ -146,15 +146,38 @@ class QuantizationSparsifier(Compressor):
     big_m: float = 1.0  # M, the assumed bound on |z_i|
     wire_bits: float = 8.0  # level index + sign, sparsely encoded
 
-    def apply(self, key, z):
+    def _signed_levels(self, key, z):
+        """Signed level index in [-m, m] (0 = dropped): the wire alphabet."""
         a = self.big_m / self.m_levels  # level spacing
         mag = jnp.abs(z)
         # next level above |z| (level a_{i+1}); clamp into the partition
-        upper = jnp.minimum(jnp.ceil(mag / a), self.m_levels) * a
-        upper = jnp.maximum(upper, a)  # |z| in [0, a) -> level a
+        level = jnp.maximum(jnp.minimum(jnp.ceil(mag / a), self.m_levels),
+                            1.0)  # |z| in [0, a) -> level 1
+        upper = level * a
         p_keep = jnp.where(upper > 0, mag / upper, 0.0)
         keep = jax.random.bernoulli(key, p_keep.astype(jnp.float32), z.shape)
-        return jnp.sign(z) * upper * keep.astype(z.dtype)
+        return jnp.sign(z) * level * keep.astype(jnp.float32)
+
+    def apply(self, key, z):
+        a = self.big_m / self.m_levels
+        return (self._signed_levels(key, z) * jnp.float32(a)).astype(z.dtype)
+
+    # -- wire-level API (same contract as RandomizedRounding/Int8Block) --
+    def encode(self, key, z):
+        """(codes, meta): signed level indices on the integer wire alphabet
+        [-m, m] — int8 when m_levels fits, else int16 — with the standard
+        overflow guard (structurally 0 here: levels are clamped to m by
+        construction; the key is reported for parity with the int8 wire).
+        ``decode(encode(key, z)) == apply(key, z)`` bit-for-bit."""
+        dtype = jnp.int8 if self.m_levels <= 127 else jnp.int16
+        codes = self._signed_levels(key, z).astype(dtype)
+        sparsity = jnp.mean((codes == 0).astype(jnp.float32))
+        return codes, {"overflow_frac": jnp.zeros((), jnp.float32),
+                       "sparsity": sparsity}
+
+    def decode(self, codes):
+        a = self.big_m / self.m_levels
+        return codes.astype(jnp.float32) * a
 
     def sigma2(self, z=None):
         # worst case: |z| just below a level edge; var <= M*a/4 <= M^2/(4m)... use
@@ -171,11 +194,31 @@ class TernaryCompressor(Compressor):
 
     wire_bits: float = 2.0
 
-    def apply(self, key, z):
+    def _ternary(self, key, z):
+        """(codes in {-1, 0, +1} f32, scale s = max|z|)."""
         s = jnp.maximum(jnp.max(jnp.abs(z)), 1e-30)
         p = jnp.abs(z) / s
         keep = jax.random.bernoulli(key, p.astype(jnp.float32), z.shape)
-        return s * jnp.sign(z) * keep.astype(z.dtype)
+        return jnp.sign(z) * keep.astype(jnp.float32), s
+
+    def apply(self, key, z):
+        codes, s = self._ternary(key, z)
+        return (s * codes).astype(z.dtype)
+
+    # -- wire-level API (same contract as RandomizedRounding/Int8Block) --
+    def encode(self, key, z):
+        """(codes int8 in {-1, 0, +1}, scale f32 scalar, meta): the 2-bit
+        ternary alphabet + one scale per tensor, the transmitted pair.
+        ``decode(encode(key, z)) == apply(key, z)`` bit-for-bit; ternary
+        codes cannot overflow, the guard is reported for wire parity."""
+        codes, s = self._ternary(key, z)
+        sparsity = jnp.mean((codes == 0).astype(jnp.float32))
+        return codes.astype(jnp.int8), s, \
+            {"overflow_frac": jnp.zeros((), jnp.float32),
+             "sparsity": sparsity}
+
+    def decode(self, codes, scale):
+        return scale * codes.astype(jnp.float32)
 
     def sigma2(self, z=None):
         if z is None:

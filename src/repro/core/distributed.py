@@ -39,7 +39,11 @@ behind Pallas compute at the cost of 2 x pipeline_chunks collectives
 ``wire_packing="per_leaf"`` keeps the historical per-leaf wire path
 (4 x n_leaves collectives per step) as a bit-identical reference for
 tests and the ``consensus_step_latency`` benchmark (DESIGN.md §Hardware
-adaptation).
+adaptation).  The byte format of the packed/pipelined payload is set by
+``wire_codec`` (:mod:`repro.core.codec`, DESIGN.md §Wire codecs): int8
+(historical), int4/int2 (sub-byte bit-packed) or topk (sparse bitmap +
+values); ``byte_budget`` feeds the epoch-level AdaptiveBitController that
+re-selects the codec from runtime feedback (launch/train.py).
 
 Algorithms:
   adc_dgd        — the paper's contribution (wire = int8 codes + scales)
@@ -65,6 +69,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.core import codec as wire_codec
 from repro.core import wire
 from repro.kernels import ops as kops
 from repro.models.sharding import ParallelContext
@@ -127,6 +132,18 @@ class ConsensusConfig:
     #: more transfer latency but pay more launch/collective overhead —
     #: benchmarks/consensus_step.py sweeps this (EXPERIMENTS.md §Perf).
     pipeline_chunks: int = 4
+    #: payload format of the packed/pipelined ADC exchange (DESIGN.md §Wire
+    #: codecs): "int8" (historical, BLOCK codes + fp32 scale per row),
+    #: "int4"/"int2" (sub-byte bit-packed codes + bf16 scale), "topk"
+    #: (sparse one-per-stratum selection: bitmap + int8 values + bf16
+    #: scale).  The per-leaf reference path and the compressed_dgd negative
+    #: control speak int8 only.
+    wire_codec: str = "int8"
+    #: optional bytes/step target (both ring directions) consumed by the
+    #: AdaptiveBitController's candidate filter (core.codec) and surfaced
+    #: alongside the wire accounting; the static exchange itself never
+    #: reads it.
+    byte_budget: float | None = None
 
     @property
     def side_weight(self) -> float:
@@ -144,6 +161,22 @@ class ConsensusConfig:
         if self.pipeline_chunks < 1:
             raise ValueError(f"pipeline_chunks must be >= 1, got "
                              f"{self.pipeline_chunks}")
+        if self.wire_codec not in wire_codec.CODEC_NAMES:
+            raise ValueError(f"wire_codec must be one of "
+                             f"{wire_codec.CODEC_NAMES}, got "
+                             f"{self.wire_codec!r}")
+        if self.wire_codec != "int8" and self.wire_packing == "per_leaf":
+            raise ValueError(
+                f"wire_codec={self.wire_codec!r} requires the packed or "
+                "pipelined transport; the per-leaf reference path speaks "
+                "int8 only")
+        if self.wire_codec != "int8" and self.algorithm == "compressed_dgd":
+            raise ValueError(
+                "compressed_dgd (the Eq. (5) negative control) is pinned "
+                f"to the int8 wire; got wire_codec={self.wire_codec!r}")
+        if self.byte_budget is not None and self.byte_budget <= 0:
+            raise ValueError(f"byte_budget must be positive, got "
+                             f"{self.byte_budget}")
 
 
 def _flat_ring_perm(ctx: ParallelContext, shift: int):
@@ -193,6 +226,8 @@ class ConsensusRuntime:
     def __init__(self, config: ConsensusConfig, ctx: ParallelContext):
         self.cfg = config
         self.ctx = ctx
+        #: payload format of the packed/pipelined exchange (§Wire codecs)
+        self.codec = wire_codec.by_name(config.wire_codec)
         n = ctx.total_consensus_nodes
         if n > 1 and config.algorithm in ("adc_dgd", "dgd", "compressed_dgd"):
             for s in config.ring_strides:
@@ -260,8 +295,10 @@ class ConsensusRuntime:
         else:
             rows = kops.padded_block_rows(n_params_local)
         if self.cfg.algorithm in ("adc_dgd", "compressed_dgd"):
-            # one byte payload per ring direction: int8 codes + fp32 scale
-            total = 2.0 * rows * kops.payload_width()
+            # one byte payload per ring direction, width set by the wire
+            # codec (int8: BLOCK codes + fp32 scale; sub-byte/top-k: see
+            # core.codec payload layouts)
+            total = 2.0 * rows * self.codec.payload_width()
             if self.cfg.algorithm == "adc_dgd" and len(self.cfg.ring_strides) > 1:
                 # amortized epoch-boundary resync: one fp32 x_tilde exchange
                 # per re-wiring (both ring directions)
@@ -355,6 +392,7 @@ class ConsensusRuntime:
             m = self._wire_metrics(layout)
             if alg == "adc_dgd":
                 m["overflow_frac"] = jnp.zeros((), jnp.float32)
+                m["residual_norm"] = jnp.zeros((), jnp.float32)
             if self.cfg.track_consensus_error:
                 m["consensus_err"] = _consensus_error(x_out, ctx)
             return m
@@ -458,6 +496,7 @@ class ConsensusRuntime:
         noise buffer — and therefore to ``_adc_exchange_per_leaf`` too.
         """
         cfg, ctx = self.cfg, self.ctx
+        codec = self.codec
         if layout is None:
             layout = wire.WireLayout.for_tree(x_half)
         chunks = self._chunks_for(layout)
@@ -470,17 +509,21 @@ class ConsensusRuntime:
         xh_p = layout.pack(x_half)
         y = xh_p - xt                               # packed differential
         if noise is None:
-            noise = jax.random.uniform(key, y.shape, jnp.float32)
+            # noise column count is codec-specific (top-k consumes a second
+            # BLOCK-wide region for its selection race — core.codec)
+            noise = jax.random.uniform(
+                key, (layout.n_rows, codec.noise_cols(layout.block)),
+                jnp.float32)
 
         def launch(c):
-            """Quantize chunk c straight out of the full differential (the
+            """Encode chunk c straight out of the full differential (the
             kernel reads the row range in place) and put its byte payload
             on both ring directions: 2 collectives per chunk, same total
             wire bytes as the monolithic path."""
             start, rows = chunks.bounds[c]
-            pay = kops.quantize_payload(y, noise, fixed_step=step_k,
-                                        use_pallas=cfg.use_pallas,
-                                        row_offset=start, n_rows=rows)
+            pay = codec.encode_payload(y, noise, fixed_step=step_k,
+                                       use_pallas=cfg.use_pallas,
+                                       row_offset=start, n_rows=rows)
             return (pay, _ppermute_ring(pay, ctx, +stride),
                     _ppermute_ring(pay, ctx, -stride))
 
@@ -501,7 +544,7 @@ class ConsensusRuntime:
 
                 mb_c = jax.lax.cond(
                     resync, _rebuild, lambda c=c: chunks.slice_rows(mb, c))
-            return kops.dequant_combine_payload(
+            return codec.decode_combine(
                 pay, p_l, p_r, xt, mb_c, cfg.self_weight, cfg.side_weight,
                 jnp.float32(1.0), use_pallas=cfg.use_pallas,
                 row_offset=start, n_rows=rows)
@@ -510,11 +553,12 @@ class ConsensusRuntime:
 
         def count_overflow(c, inflight):
             # overflow monitoring (paper §IV-D: bounded transmitted
-            # values); integer counts, so chunk sums are exact
-            codes = kops.unpack_payload(inflight[0], layout.block)[0]
-            clipped[0] = clipped[0] + jnp.sum(
-                (jnp.abs(codes.astype(jnp.float32)) >= 127)
-                .astype(jnp.float32))
+            # values); integer counts, so chunk sums are exact.  Sub-byte
+            # codecs count grid saturation from the differential itself —
+            # on coarse alphabets boundary codes are usually legitimate
+            # values, not clips (core.codec.count_saturated)
+            clipped[0] = clipped[0] + codec.count_saturated(
+                chunks.slice_rows(y, c), step_k, inflight[0], layout.block)
 
         parts = _pipeline_schedule(
             chunks, launch, retire,
@@ -522,7 +566,8 @@ class ConsensusRuntime:
         xt_new = chunks.concat([p[0] for p in parts])
         m_new = chunks.concat([p[1] for p in parts])
         comb = chunks.concat([p[2] for p in parts])
-        overflow = clipped[0] / float(layout.n_rows * layout.block)
+        overflow = clipped[0] / float(
+            layout.n_rows * codec.codes_per_row(layout.block))
         # gradient step applied per leaf while unpacking (x_prev never
         # needs packing; identical elementwise ops to the per-leaf path)
         comb_leaves = layout.unpack(comb, cast=False)
@@ -531,7 +576,13 @@ class ConsensusRuntime:
                                   - p.astype(jnp.float32))).astype(h.dtype),
             comb_leaves, x_half, x_prev)
         new_state = {"x_tilde": xt_new, "m_agg": m_new}
-        metrics = {"overflow_frac": overflow, **self._wire_metrics(layout)}
+        # residual RMS of the packed differential: the controller's fidelity
+        # feedback (core.codec.AdaptiveBitController) and a convergence
+        # diagnostic in its own right (padding rows are exact zeros)
+        residual = jnp.sqrt(jnp.sum(y * y)
+                            / float(layout.n_rows * layout.block))
+        metrics = {"overflow_frac": overflow, "residual_norm": residual,
+                   **self._wire_metrics(layout)}
         if cfg.track_consensus_error:
             metrics["consensus_err"] = _consensus_error(x_next, self.ctx)
         return x_next, new_state, metrics
@@ -566,6 +617,7 @@ class ConsensusRuntime:
 
         new_x, new_xt_rows, new_m_rows = [], [], []
         clipped_acc = jnp.zeros((), jnp.float32)
+        residual_sq = jnp.zeros((), jnp.float32)
         for i, (leaf_half, leaf_prev) in enumerate(zip(leaves, prev_leaves)):
             slot = layout.slots[i]
             full = kops.padded_block_rows(slot.size)
@@ -573,6 +625,7 @@ class ConsensusRuntime:
             xtb = rowpad(layout.leaf_rows(state["x_tilde"], i), full)
             mb = rowpad(layout.leaf_rows(state["m_agg"], i), full)
             yb = xh_b - xtb
+            residual_sq = residual_sq + jnp.sum(yb * yb)
             if noise is None:       # historical per-leaf noise stream
                 noise_b = jax.random.uniform(leaf_keys[i], yb.shape,
                                              jnp.float32)
@@ -610,7 +663,10 @@ class ConsensusRuntime:
         new_state = {"x_tilde": layout.from_leaf_rows(new_xt_rows),
                      "m_agg": layout.from_leaf_rows(new_m_rows)}
         overflow = clipped_acc / float(layout.n_rows * layout.block)
-        metrics = {"overflow_frac": overflow, **self._wire_metrics(layout)}
+        residual = jnp.sqrt(residual_sq
+                            / float(layout.n_rows * layout.block))
+        metrics = {"overflow_frac": overflow, "residual_norm": residual,
+                   **self._wire_metrics(layout)}
         if cfg.track_consensus_error:
             metrics["consensus_err"] = _consensus_error(x_next, self.ctx)
         return x_next, new_state, metrics

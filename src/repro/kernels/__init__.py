@@ -1,3 +1,11 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the consensus wire path + jnp oracles.
+
+  quantize.py         stochastic int8 block quantizer (+ fused payload
+                      emitter for the packed wire)
+  dequant_combine.py  fused decode + shadow update + ring combine
+  bitpack.py          sub-byte (int4/int2) bit-packed and top-k sparse
+                      wire codecs (DESIGN.md §Wire codecs)
+  gqa_decode.py       flash-decode GQA partials over sharded KV caches
+  ops.py              jit'd dispatch wrappers (pallas vs jnp reference)
+  ref.py              pure-jnp oracles (bit-exact vs interpret kernels)
+"""

@@ -12,7 +12,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from . import ref
+from . import bitpack, ref
 from .dequant_combine import (dequant_combine_pallas,
                               dequant_combine_payload_pallas)
 from .gqa_decode import gqa_decode_pallas
@@ -22,7 +22,10 @@ from .quantize import (BLOCK, SCALE_BYTES, TILE_N, quantize_blocks_pallas,
 __all__ = ["blockify", "unblockify", "quantize_blocks", "dequant_combine",
            "gqa_decode", "BLOCK", "SCALE_BYTES", "padded_block_rows",
            "payload_width", "pack_payload", "unpack_payload",
-           "quantize_payload", "dequant_combine_payload"]
+           "quantize_payload", "dequant_combine_payload",
+           "subbyte_encode_payload", "subbyte_decode_payload",
+           "subbyte_decode_combine", "topk_encode_payload",
+           "topk_decode_payload", "topk_decode_combine"]
 
 
 def padded_block_rows(n_elements: int, block: int = BLOCK,
@@ -124,6 +127,105 @@ def quantize_payload(y_blocks: jax.Array, noise: jax.Array,
         _chunk_rows(y_blocks, row_offset, n_rows),
         _chunk_rows(noise, row_offset, n_rows), fixed_step=fixed_step)
     return pack_payload(codes, scales)
+
+
+# ---------------------------------------------------------------------------
+# Sub-byte / top-k wire codecs (kernels/bitpack.py; DESIGN.md §Wire codecs)
+# ---------------------------------------------------------------------------
+
+def subbyte_encode_payload(y_blocks: jax.Array, noise: jax.Array,
+                           code_bits: int, fixed_step=None,
+                           use_pallas: bool = False, row_offset: int = 0,
+                           n_rows: int | None = None) -> jax.Array:
+    """Bit-packed sub-byte quantize-to-wire: (rows, BLOCK) f32 ->
+    (rows, BLOCK // (8 // code_bits) + 2) uint8 (packed codes || bf16
+    scale).  Same chunk-view contract as :func:`quantize_payload`."""
+    if use_pallas and not _vma_carrying(y_blocks, noise):
+        return bitpack.subbyte_encode_pallas(
+            y_blocks, noise, code_bits, fixed_step=fixed_step,
+            row_offset=row_offset, n_rows=n_rows)
+    return bitpack.subbyte_encode_ref(
+        _chunk_rows(y_blocks, row_offset, n_rows),
+        _chunk_rows(noise, row_offset, n_rows), code_bits,
+        fixed_step=fixed_step)
+
+
+def subbyte_decode_payload(payload: jax.Array, code_bits: int,
+                           block: int = BLOCK) -> jax.Array:
+    """Payload rows -> dequantized (rows, BLOCK) f32 (jnp path; tests,
+    overflow accounting and offline tools — the hot path decodes in-kernel
+    via :func:`subbyte_decode_combine`)."""
+    return bitpack.subbyte_decode_ref(payload, block, code_bits)
+
+
+def _decode_combine_ref(decode, payloads, x_tilde, m_agg, w_self, w_side,
+                        deamp, row_offset, n_rows):
+    """Shared jnp fallback for the codec receive sides: decode the three
+    (chunk views of the) wire buffers and run the fused combine core."""
+    block = x_tilde.shape[1]
+    d_s, d_l, d_r = (decode(_chunk_rows(p, row_offset, n_rows), block)
+                     for p in payloads)
+    return bitpack.combine_core(
+        d_s, d_l, d_r, _chunk_rows(x_tilde, row_offset, n_rows),
+        _chunk_rows(m_agg, row_offset, n_rows),
+        jnp.asarray(w_self, jnp.float32), jnp.asarray(w_side, jnp.float32),
+        jnp.asarray(deamp, jnp.float32))
+
+
+def subbyte_decode_combine(payload_self, payload_left, payload_right,
+                           x_tilde, m_agg, w_self, w_side, deamp,
+                           code_bits: int, use_pallas: bool = False,
+                           row_offset: int = 0, n_rows: int | None = None):
+    """Sub-byte receive side (unpack + shadow update + combine fused);
+    same chunk-view contract as :func:`dequant_combine_payload`."""
+    if use_pallas and not _vma_carrying(payload_self, x_tilde, m_agg):
+        return bitpack.subbyte_combine_pallas(
+            payload_self, payload_left, payload_right, x_tilde, m_agg,
+            w_self, w_side, deamp, code_bits, row_offset=row_offset,
+            n_rows=n_rows)
+    return _decode_combine_ref(
+        lambda p, b: bitpack.subbyte_decode_ref(p, b, code_bits),
+        (payload_self, payload_left, payload_right), x_tilde, m_agg,
+        w_self, w_side, deamp, row_offset, n_rows)
+
+
+def topk_encode_payload(y_blocks: jax.Array, noise: jax.Array, k: int,
+                        fixed_step=None, use_pallas: bool = False,
+                        row_offset: int = 0,
+                        n_rows: int | None = None) -> jax.Array:
+    """Top-k sparse quantize-to-wire: (rows, BLOCK) f32 + (rows, 2*BLOCK)
+    noise -> (rows, BLOCK // 8 + k + 2) uint8 (bitmap || int8 values ||
+    bf16 scale).  Noise columns [0, BLOCK) drive the magnitude-proportional
+    selection, [BLOCK, BLOCK + k) the value rounding."""
+    if use_pallas and not _vma_carrying(y_blocks, noise):
+        return bitpack.topk_encode_pallas(
+            y_blocks, noise, k, fixed_step=fixed_step,
+            row_offset=row_offset, n_rows=n_rows)
+    return bitpack.topk_encode_ref(
+        _chunk_rows(y_blocks, row_offset, n_rows),
+        _chunk_rows(noise, row_offset, n_rows), k, fixed_step=fixed_step)
+
+
+def topk_decode_payload(payload: jax.Array, k: int,
+                        block: int = BLOCK) -> jax.Array:
+    """Sparse payload rows -> dense (rows, BLOCK) f32 (jnp path)."""
+    return bitpack.topk_decode_ref(payload, block, k)
+
+
+def topk_decode_combine(payload_self, payload_left, payload_right,
+                        x_tilde, m_agg, w_self, w_side, deamp, k: int,
+                        use_pallas: bool = False, row_offset: int = 0,
+                        n_rows: int | None = None):
+    """Top-k receive side (bitmap scatter + shadow update + combine fused);
+    same chunk-view contract as :func:`dequant_combine_payload`."""
+    if use_pallas and not _vma_carrying(payload_self, x_tilde, m_agg):
+        return bitpack.topk_combine_pallas(
+            payload_self, payload_left, payload_right, x_tilde, m_agg,
+            w_self, w_side, deamp, k, row_offset=row_offset, n_rows=n_rows)
+    return _decode_combine_ref(
+        lambda p, b: bitpack.topk_decode_ref(p, b, k),
+        (payload_self, payload_left, payload_right), x_tilde, m_agg,
+        w_self, w_side, deamp, row_offset, n_rows)
 
 
 def gqa_decode(q, k, v, valid, softcap=None, use_pallas: bool = False):

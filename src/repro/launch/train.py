@@ -94,6 +94,31 @@ def _mesh_lead_axes(ctx: ParallelContext) -> tuple[str, ...]:
     return (*_data_axes(ctx), "model")
 
 
+def _sync_replicated_grads(grads, defs: T.ModelDefs, ctx: ParallelContext):
+    """Pre-vma compat: mean model-replicated leaves' grads over the tp axis.
+
+    Old ``jax.experimental.shard_map(check_rep=False)`` (jax 0.4.x) has no
+    vma type system, so the AD transpose never inserts the psums that keep
+    per-rank cotangents of replicated compute consistent — model-replicated
+    leaves (``ParamDef.tp_dim is None``: norms, replicated projections)
+    would receive per-rank *different* gradients and the replicas would
+    silently drift apart.  Averaging them over ``model`` restores replica
+    identity (and is exactly the invariant value on symmetric paths).  On
+    vma-typed jax (``jax.shard_map`` exists) the transpose already yields
+    rank-identical grads and this is a no-op.
+    """
+    if hasattr(jax, "shard_map") or ctx.tp == 1:
+        return grads
+
+    def sync(d, g):
+        if d.tp_dim is not None:
+            return g
+        return jax.lax.psum(g, ctx.tp_axis) / ctx.tp
+
+    return jax.tree.map(sync, defs.storage, grads,
+                        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
 def consensus_wire_layout(defs: T.ModelDefs, ctx: ParallelContext
                           ) -> wire.WireLayout:
     """The static packing plan for one device's local parameter shard."""
@@ -160,6 +185,8 @@ def build_train_setup(
     schedule_period: int = 1,              # steps between ring re-wirings
     wire_packing: str = "packed",          # packed | pipelined | per_leaf
     pipeline_chunks: int = 4,              # chunks for wire_packing="pipelined"
+    wire_codec: str = "int8",              # int8 | int4 | int2 | topk
+    byte_budget: float | None = None,      # bytes/step target (controller)
     seed: int = 0,                         # consensus quantization-noise seed
 ) -> TrainSetup:
     ctx = make_context(mesh, consensus_nodes)
@@ -169,7 +196,8 @@ def build_train_setup(
         fixed_step0=fixed_step0, use_pallas=use_pallas,
         track_consensus_error=track_consensus_error,
         ring_strides=tuple(ring_strides), schedule_period=schedule_period,
-        wire_packing=wire_packing, pipeline_chunks=pipeline_chunks)
+        wire_packing=wire_packing, pipeline_chunks=pipeline_chunks,
+        wire_codec=wire_codec, byte_budget=byte_budget)
     consensus = ConsensusRuntime(ccfg, ctx)
     opt = opt_by_name(optimizer)
     if schedule == "constant":
@@ -230,6 +258,7 @@ def build_train_setup(
         # shards; normalize to the node-mean objective f_i.
         if ctx.fsdp > 1:
             grads = jax.tree.map(lambda g: g / ctx.fsdp, grads)
+        grads = _sync_replicated_grads(grads, defs, ctx)
         lr_k = sched(k)
         x_half, opt_state = opt.step(state["opt"], state["params"], grads, lr_k)
         # consensus noise stream rooted at the run seed (folded per step;
@@ -260,7 +289,8 @@ def build_train_setup(
                               "collectives_per_step": P(),
                               "wire_bytes_per_step": P(),
                               **({"aux": P()} if cfg.router_aux_weight and microbatches == 1 else {}),
-                              **({"overflow_frac": P()} if algorithm == "adc_dgd" else {}),
+                              **({"overflow_frac": P(), "residual_norm": P()}
+                                 if algorithm == "adc_dgd" else {}),
                               **({"consensus_err": P()} if track_consensus_error else {})})
 
     step_sm = shard_map_compat(step_body, mesh, in_specs=in_specs,
@@ -353,6 +383,18 @@ def main(argv=None):
                          "double-buffered exchange)")
     ap.add_argument("--pipeline-chunks", type=int, default=4,
                     help="chunk count for --wire-packing=pipelined")
+    ap.add_argument("--wire-codec", default="int8",
+                    choices=["int8", "int4", "int2", "topk", "adaptive"],
+                    help="packed-exchange payload codec (DESIGN.md §Wire "
+                         "codecs); 'adaptive' hands the choice to the "
+                         "AdaptiveBitController, which re-selects the bit "
+                         "budget every --codec-period steps from residual/"
+                         "overflow feedback and --byte-budget")
+    ap.add_argument("--byte-budget", type=float, default=None,
+                    help="bytes/step ring budget (both directions) for the "
+                         "adaptive controller's candidate filter")
+    ap.add_argument("--codec-period", type=int, default=25,
+                    help="steps per adaptive-controller epoch")
     ap.add_argument("--seed", type=int, default=0,
                     help="run seed: parameter init AND the consensus "
                          "quantization-noise stream")
@@ -367,16 +409,51 @@ def main(argv=None):
     if args.reduced:
         cfg = reduced(cfg)
     mesh = make_cpu_mesh(data=args.data, model=args.model)
-    setup = build_train_setup(
-        cfg, mesh, consensus_nodes=args.nodes, algorithm=args.algorithm,
-        optimizer=args.optimizer, schedule=args.schedule, lr=args.lr,
-        gamma=args.gamma, global_batch=args.batch, seq_len=args.seq,
-        microbatches=args.microbatches,
-        ring_strides=tuple(int(s) for s in args.ring_strides.split(",")),
-        schedule_period=args.schedule_period,
-        wire_packing=args.wire_packing, pipeline_chunks=args.pipeline_chunks,
-        seed=args.seed,
-        track_consensus_error=(args.algorithm != "allreduce"))
+
+    setups: dict[str, TrainSetup] = {}
+
+    def setup_for(codec_name: str) -> TrainSetup:
+        # one cached setup (and thus one compiled step trace) per codec:
+        # ppermute payload widths are static, so codec switches swap the
+        # whole trace at epoch boundaries instead of re-tracing in-graph
+        if codec_name not in setups:
+            setups[codec_name] = build_train_setup(
+                cfg, mesh, consensus_nodes=args.nodes,
+                algorithm=args.algorithm, optimizer=args.optimizer,
+                schedule=args.schedule, lr=args.lr, gamma=args.gamma,
+                global_batch=args.batch, seq_len=args.seq,
+                microbatches=args.microbatches,
+                ring_strides=tuple(int(s)
+                                   for s in args.ring_strides.split(",")),
+                schedule_period=args.schedule_period,
+                wire_packing=args.wire_packing,
+                pipeline_chunks=args.pipeline_chunks,
+                wire_codec=codec_name, byte_budget=args.byte_budget,
+                seed=args.seed,
+                track_consensus_error=(args.algorithm != "allreduce"))
+        return setups[codec_name]
+
+    controller = None
+    codec_name = args.wire_codec
+    if args.wire_codec == "adaptive":
+        from repro.core.codec import AdaptiveBitController
+        if args.algorithm != "adc_dgd":
+            raise SystemExit("--wire-codec adaptive requires adc_dgd")
+        if args.wire_packing == "per_leaf":
+            # fail now, not at the controller's first sub-byte pick N
+            # steps in (per-leaf speaks int8 only)
+            raise SystemExit("--wire-codec adaptive requires the packed or "
+                             "pipelined transport (per_leaf is int8-only)")
+        probe_ctx = make_context(mesh, args.nodes)
+        probe_defs = T.build_defs(cfg, probe_ctx)
+        n_rows = consensus_wire_layout(probe_defs, probe_ctx).n_rows
+        controller = AdaptiveBitController(byte_budget=args.byte_budget,
+                                           gamma=args.gamma)
+        codec_name = controller.initial(n_rows)
+        print(f"[codec] controller start: {codec_name} "
+              f"(budget={args.byte_budget})")
+
+    setup = setup_for(codec_name)
     state = init_train_state(setup, args.seed)
     ds_kw = {}
     if cfg.frontend == "audio_frames":
@@ -385,13 +462,31 @@ def main(argv=None):
                             n_shards=setup.ctx.dp, **ds_kw)
 
     t0 = time.time()
+    ep_res, ep_ovf = [], []
     for step in range(args.steps):
         batch = jax.device_put(ds.global_batch_arrays(step), setup.batch_sharding)
         state, metrics = setup.train_step(state, batch)
+        if controller is not None:
+            ep_res.append(float(metrics["residual_norm"]))
+            ep_ovf.append(float(metrics["overflow_frac"]))
+            if (step + 1) % args.codec_period == 0:
+                new = controller.select(
+                    next_step=step + 2,
+                    residual_rms=float(np.mean(ep_res)),
+                    overflow_frac=float(np.mean(ep_ovf)),
+                    n_rows=n_rows)
+                if new != codec_name:
+                    print(f"[codec] step {step + 1}: {codec_name} -> {new} "
+                          f"(residual_rms={np.mean(ep_res):.3g}, "
+                          f"overflow={np.mean(ep_ovf):.3g})")
+                    codec_name = new
+                    setup = setup_for(new)
+                ep_res, ep_ovf = [], []
         if step % max(1, args.steps // 10) == 0 or step == args.steps - 1:
             m = jax.tree.map(float, metrics)
             extra = " ".join(f"{k}={v:.4g}" for k, v in m.items() if k != "loss")
-            print(f"step {step:5d} loss={m['loss']:.4f} {extra}")
+            print(f"step {step:5d} loss={m['loss']:.4f} "
+                  f"codec={codec_name} {extra}")
         if (args.checkpoint_dir and args.checkpoint_every
                 and (step + 1) % args.checkpoint_every == 0):
             from repro.checkpoint import save_checkpoint

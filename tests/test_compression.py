@@ -112,6 +112,62 @@ def test_sparsifier_produces_zeros():
     assert abs(out.mean() - 0.05) < 0.02  # but unbiased
 
 
+def test_sparsifier_wire_roundtrip():
+    """QuantizationSparsifier's wire contract (same as RandomizedRounding /
+    Int8BlockQuantizer): integer codes + static scale, decode(encode(k, z))
+    == apply(k, z) bit-for-bit, unbiasedness preserved through the wire."""
+    op = C.QuantizationSparsifier(m_levels=8, big_m=4.0)
+    key = jax.random.PRNGKey(10)
+    z = jnp.asarray(np.random.default_rng(11).uniform(-3.9, 3.9, size=(512,)),
+                    jnp.float32)
+    codes, meta = op.encode(key, z)
+    assert codes.dtype == jnp.int8          # m_levels <= 127
+    assert int(np.max(np.abs(np.asarray(codes)))) <= op.m_levels
+    assert float(meta["overflow_frac"]) == 0.0
+    assert 0.0 < float(meta["sparsity"]) < 1.0
+    np.testing.assert_array_equal(np.asarray(op.decode(codes)),
+                                  np.asarray(op.apply(key, z)))
+    # wide partitions need the int16 alphabet
+    codes16, _ = C.QuantizationSparsifier(m_levels=1000, big_m=4.0).encode(
+        key, z)
+    assert codes16.dtype == jnp.int16
+    # unbiasedness THROUGH the wire representation (not just apply)
+    keys = jax.random.split(key, 3000)
+    dec = np.asarray(jax.vmap(lambda k: op.decode(op.encode(k, z)[0]))(keys),
+                     np.float64)
+    se = dec.std(axis=0) / np.sqrt(len(keys)) + 1e-12
+    # floor: a keep-probability ~1/trials event that never fired leaves the
+    # empirical se at 0 while the true mean sits p * level away (artifact)
+    floor = (op.big_m / op.m_levels) * 5.0 / len(keys)
+    np.testing.assert_array_less(np.abs(dec.mean(0) - np.asarray(z)),
+                                 5 * se + floor + 5e-6)
+
+
+def test_ternary_wire_roundtrip():
+    """TernaryCompressor's wire contract: {-1, 0, +1} int8 codes + one
+    fp32 scale per tensor, decode(encode) == apply bit-for-bit."""
+    op = C.TernaryCompressor()
+    key = jax.random.PRNGKey(12)
+    z = jnp.asarray(np.random.default_rng(13).normal(size=(512,)),
+                    jnp.float32)
+    codes, scale, meta = op.encode(key, z)
+    assert codes.dtype == jnp.int8
+    assert set(np.unique(np.asarray(codes))) <= {-1, 0, 1}
+    assert float(scale) == float(jnp.max(jnp.abs(z)))
+    assert float(meta["overflow_frac"]) == 0.0
+    np.testing.assert_array_equal(np.asarray(op.decode(codes, scale)),
+                                  np.asarray(op.apply(key, z)))
+    # unbiasedness THROUGH the wire representation
+    keys = jax.random.split(key, 3000)
+    dec = np.asarray(
+        jax.vmap(lambda k: op.decode(*op.encode(k, z)[:2]))(keys),
+        np.float64)
+    se = dec.std(axis=0) / np.sqrt(len(keys)) + 1e-12
+    floor = float(scale) * 5.0 / len(keys)   # never-fired Bernoulli floor
+    np.testing.assert_array_less(np.abs(dec.mean(0) - np.asarray(z)),
+                                 5 * se + floor + 5e-6)
+
+
 def test_wire_bytes_ordering():
     """Compressors must actually be cheaper on the wire than fp32."""
     n = 10_000

@@ -290,11 +290,14 @@ def run_sub(body: str, timeout: int = 1500) -> dict:
         def shared_noise(rt, xh, k):
             # one uniform buffer from the device-folded key, injected into
             # BOTH wire paths so the transformation is compared bit-for-bit
+            # (column count is codec-specific: top-k consumes a second
+            # BLOCK-wide region for its selection race)
             layout = wire.WireLayout.for_tree(xh)
             dk = _device_key(jax.random.fold_in(jax.random.PRNGKey(7), k),
                              rt.ctx)
-            return jax.random.uniform(dk, (layout.n_rows, layout.block),
-                                      jnp.float32)
+            return jax.random.uniform(
+                dk, (layout.n_rows, rt.codec.noise_cols(layout.block)),
+                jnp.float32)
 
         def build(rt, tree):
             pspec = jax.tree.map(lambda a: P("data"), tree)
@@ -491,6 +494,46 @@ print("RESULT", json.dumps(out))
     assert len(r) == 2 * 2 * 4
     for k, v in r.items():
         assert v == 0.0, f"{k}: pipelined vs packed max diff {v}"
+
+
+@pytest.mark.parametrize("codec_name", ["int4", "topk"])
+def test_codec_pipelined_equals_packed_all_chunk_counts(codec_name):
+    """Acceptance (DESIGN.md §Wire codecs): the sub-byte and sparse codecs
+    run end-to-end through the packed AND pipelined exchanges, bit-identical
+    across chunk counts {1, 2, 4, 7-with-ragged-tail} for adaptive and
+    fixed quantization — parameters and packed shadows alike — and their
+    reported wire bytes/step are >= 2x below int8's."""
+    body = """
+codec_name = %r
+tree = make_tree(jax.random.PRNGKey(4), big=150000)
+local = jax.tree.map(lambda a: a[0], tree)
+layout = wire.WireLayout.for_tree(local)
+out = {"n_tiles": layout.n_rows // 32}
+int8_rt = ConsensusRuntime(ConsensusConfig(algorithm="adc_dgd"), ctx)
+out["bytes_int8"] = int8_rt.wire_bytes_per_step(layout.n_elements,
+                                                layout=layout)
+for qm in ("adaptive", "fixed"):
+    kw = dict(algorithm="adc_dgd", quant_mode=qm, fixed_step0=1e-2,
+              wire_codec=codec_name)
+    ref = trajectory({**kw, "wire_packing": "packed"}, tree, steps=4)
+    rt = ConsensusRuntime(ConsensusConfig(**kw), ctx)
+    out[f"bytes_{qm}"] = rt.wire_bytes_per_step(layout.n_elements,
+                                                layout=layout)
+    for chunks in (1, 2, 4, 7):
+        got = trajectory({**kw, "wire_packing": "pipelined",
+                          "pipeline_chunks": chunks}, tree, steps=4)
+        out[f"{qm}_c{chunks}"] = max_diff(got, ref)
+print("RESULT", json.dumps(out))
+""" % codec_name
+    r = run_sub(body)
+    n_tiles = r.pop("n_tiles")
+    assert n_tiles >= 8, f"tree too small for ragged 7-chunk split: {n_tiles}"
+    bytes_int8 = r.pop("bytes_int8")
+    for qm in ("adaptive", "fixed"):
+        assert bytes_int8 / r.pop(f"bytes_{qm}") >= 2.0
+    assert len(r) == 2 * 4
+    for k, v in r.items():
+        assert v == 0.0, f"{codec_name}/{k}: pipelined vs packed diff {v}"
 
 
 def test_pipelined_collectives_scale_with_chunks():
