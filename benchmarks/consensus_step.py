@@ -36,13 +36,20 @@ noise.
 
 The **codec sweep** (smollm-135m, packed path) measures each wire codec in
 ``CODEC_SWEEP`` — int8 / int4 / int2 / topk (DESIGN.md §Wire codecs) —
+plus two **mixed per-leaf wire plans** (DESIGN.md §Wire plans):
+``MIXED_PLAN`` (norms/embeddings cold at int4, projections hot at int8;
+bytes- AND fidelity-gated) and ``MIXED_PLAN_AGGR`` (cold slots at int2;
+bytes-gated only — its row documents the per-leaf sensitivity trade),
 reporting steps/s, wire bytes/step, and the consensus error of a short
 pure-gossip run (xh == x; per-device random init) so the bandwidth/fidelity
 trade is a measured table (EXPERIMENTS.md §Wire codecs), and the
 **controller demo** runs fixed-mode epochs with the AdaptiveBitController
 in the loop, logging the codec chosen per epoch — the amplified grid
 ``Delta_0 / k^gamma`` shrinks across epochs, so the trace must walk the
-bit-budget ladder.
+bit-budget ladder.  The **equal-bytes choco_vs_adc section** routes the
+reference ADC-DGD and CHOCO-SGD gossip wires through the SAME WirePlan
+(``core.wireplan.WirePlanCompressor``) per plan, gating that their
+cumulative bytes are exactly equal and both contract the gradient norm.
 
 Writes ``BENCH_consensus_step.json`` at the repo root (the perf-trajectory
 artifact tracked from PR 2 onward) plus a copy under
@@ -109,6 +116,23 @@ CHUNK_SWEEP = (1, 2, 4, 8)
 COMPILE_BUDGET_S = 20.0
 #: packed-path wire codecs swept on smollm-135m (DESIGN.md §Wire codecs)
 CODEC_SWEEP = ("int8", "int4", "int2", "topk")
+#: the mixed per-leaf plan column (DESIGN.md §Wire plans): cold slots
+#: (norms + embeddings, the low-sensitivity rows) at int4, hot projection
+#: rows pinned at int8.  CI gates: strictly fewer bytes/step than uniform
+#: int8 AND pure-gossip fidelity within MIXED_FIDELITY_TOL of it.
+MIXED_PLAN = "mixed:norm=int4,embed=int4,*=int8"
+#: a second, aggressive plan recorded for the EXPERIMENTS.md table (norms
+#: + embeddings at int2) — bytes-gated only; its int2 rows dominate the
+#: gossip error, which is exactly the sensitivity story the table tells
+MIXED_PLAN_AGGR = "mixed:norm=int2,embed=int2,*=int8"
+MIXED_FIDELITY_TOL = 10.0
+#: equal-bytes choco_vs_adc: reference ADC-DGD and CHOCO-SGD exchange
+#: through the SAME WirePlan (core.wireplan.WirePlanCompressor), so their
+#: bytes/step are equal by construction — the comparison PR 1 could only
+#: make at equal nominal bits
+CHOCO_EB_STEPS = 400
+CHOCO_EB_LR = 0.05
+CHOCO_EB_CONSENSUS_LR = 0.1
 #: pure-gossip steps for the per-codec consensus-error column
 GOSSIP_STEPS = 6
 #: controller demo: epochs x steps/epoch of fixed-mode exchanges with the
@@ -254,7 +278,7 @@ def build_step_metrics(rt: ConsensusRuntime, mesh, tree):
 
 def _codec_noise(rt: ConsensusRuntime, layout: wire.WireLayout, seed=0):
     return jnp.asarray(np.random.default_rng(seed).random(
-        (N_DEVICES, layout.n_rows, rt.codec.noise_cols(layout.block)),
+        (N_DEVICES, layout.n_rows, rt.noise_cols_for(layout)),
         np.float32))
 
 
@@ -296,12 +320,14 @@ def codec_section(mesh, ctx) -> tuple[dict, bool]:
         .astype(a.dtype)
         for k2, a in zip(ks, leaves)])
     sweep = {}
+    sweep_specs = {**{n: n for n in CODEC_SWEEP},
+                   "mixed": MIXED_PLAN, "mixed_aggr": MIXED_PLAN_AGGR}
     print(f"codec sweep ({arch}, packed): {layout.n_elements:,} local "
           f"params, {layout.n_rows} rows", flush=True)
-    for name in CODEC_SWEEP:
+    for name, spec in sweep_specs.items():
         rt = ConsensusRuntime(
             ConsensusConfig(algorithm="adc_dgd", quant_mode="adaptive",
-                            wire_codec=name), ctx)
+                            wire_codec=spec), ctx)
         noise = _codec_noise(rt, layout)
         built = build_step(rt, mesh, xp)
         r = time_path(rt, mesh, xp, xh, noise, f"{arch}/codec[{name}]",
@@ -329,6 +355,8 @@ def codec_section(mesh, ctx) -> tuple[dict, bool]:
         print(f"    gossip err {r['consensus_err_start']:.3e} -> "
               f"{r['consensus_err_end']:.3e}   "
               f"{r['wire_bytes_per_step'] / 1e6:.2f} MB/step", flush=True)
+        if spec != name:
+            r["wire_plan"] = spec
         sweep[name] = r
     int8_bytes = sweep["int8"]["wire_bytes_per_step"]
     for name in ("int4", "int2", "topk"):
@@ -341,12 +369,30 @@ def codec_section(mesh, ctx) -> tuple[dict, bool]:
             print(f"FAIL[codec]: {name} below the promised 2x byte "
                   "reduction vs int8")
             ok = False
-    for name in CODEC_SWEEP:
+    for name in sweep_specs:
         if not sweep[name]["consensus_err_end"] \
                 < sweep[name]["consensus_err_start"]:
             print(f"FAIL[codec]: {name} gossip did not contract "
                   "consensus error")
             ok = False
+    # mixed-plan gates (DESIGN.md §Wire plans): strictly fewer bytes than
+    # uniform int8 (both plans) AND the shipped plan's pure-gossip fidelity
+    # within MIXED_FIDELITY_TOL of int8's (only the aggressive int2 plan
+    # may trade fidelity beyond that — its row in the table is the
+    # per-leaf sensitivity story, not the shipping default)
+    for name in ("mixed", "mixed_aggr"):
+        if not sweep[name]["wire_bytes_per_step"] < int8_bytes:
+            print(f"FAIL[codec]: {name} plan does not ship strictly fewer "
+                  f"bytes/step than uniform int8 "
+                  f"({sweep[name]['wire_bytes_per_step']} vs {int8_bytes})")
+            ok = False
+    fid = (sweep["mixed"]["consensus_err_end"]
+           / max(sweep["int8"]["consensus_err_end"], 1e-30))
+    sweep["mixed"]["fidelity_vs_int8"] = fid
+    if fid > MIXED_FIDELITY_TOL:
+        print(f"FAIL[codec]: mixed plan gossip fidelity {fid:.1f}x worse "
+              f"than int8 (tolerance {MIXED_FIDELITY_TOL:.0f}x)")
+        ok = False
 
     # -- adaptive controller demo (fixed-mode epochs) --------------------
     ctl = AdaptiveBitController(fixed_step0=CONTROLLER_STEP0, gamma=1.0,
@@ -395,6 +441,66 @@ def codec_section(mesh, ctx) -> tuple[dict, bool]:
         print(f"FAIL[codec]: controller never switched codecs: {trace}")
         ok = False
     return {"sweep": sweep, "controller": controller}, ok
+
+
+def choco_equal_bytes_section() -> tuple[dict, bool]:
+    """ADC-DGD vs CHOCO-SGD with BOTH gossip wires routed through the same
+    WirePlan (core.wireplan.WirePlanCompressor): the error-feedback wire
+    and the amplified-differential wire ship byte-identical heterogeneous
+    payloads, so bytes/step are equal by construction — the head-to-head
+    the PR 1 ``choco_vs_adc`` benchmark could only run at equal *nominal
+    bits*.  Run per plan (uniform int8 + the mixed plan) on the paper's
+    circle problem; gates: exactly-equal cumulative bytes within each
+    pair, and both algorithms contract the gradient norm.
+    """
+    from repro.core import consensus, problems, topology, wireplan
+    ok = True
+    # a two-leaf layout so the mixed plan has real per-leaf structure
+    tree = {"proj": jax.ShapeDtypeStruct((8 * 512,), jnp.float32),
+            "norm1": jax.ShapeDtypeStruct((200,), jnp.float32)}
+    layout = wire.WireLayout.for_tree(tree)
+    prob = problems.paper_circle_problem(4, seed=0, dim=layout.n_elements)
+    mix = topology.ring(4)
+    ss = consensus.StepSize(CHOCO_EB_LR, 0.5)
+    out = {"dim": layout.n_elements, "steps": CHOCO_EB_STEPS,
+           "consensus_lr": CHOCO_EB_CONSENSUS_LR, "plans": {}}
+    print(f"choco_vs_adc equal-bytes (dim {layout.n_elements}, ring4, "
+          f"{CHOCO_EB_STEPS} steps):", flush=True)
+    for label, spec in (("int8", "int8"), ("mixed", MIXED_PLAN)):
+        plan = wireplan.parse_spec(spec).build(layout)
+        res = {"wire_plan": spec,
+               "payload_bytes": float(plan.payload_bytes)}
+        for aname in ("adc_dgd", "choco"):
+            alg = consensus.on_wire_plan(
+                aname, mix, plan, ss,
+                **({"gamma": 1.0} if aname == "adc_dgd"
+                   else {"consensus_lr": CHOCO_EB_CONSENSUS_LR}))
+            r = consensus.run(alg, prob, CHOCO_EB_STEPS, key=31)
+            res[aname] = {
+                "tail_gradnorm": float(np.mean(r["grad_norm"][-50:])),
+                "tail_consensus": float(np.mean(r["consensus"][-50:])),
+                "first_gradnorm": float(r["grad_norm"][0]),
+                "total_bytes": float(r["bytes"][-1]),
+            }
+        eq = (res["adc_dgd"]["total_bytes"] == res["choco"]["total_bytes"])
+        res["equal_bytes"] = eq
+        print(f"  {label}: {res['payload_bytes'] / 1e3:.1f} KB/msg  "
+              f"adc |g|={res['adc_dgd']['tail_gradnorm']:.2e} "
+              f"choco |g|={res['choco']['tail_gradnorm']:.2e}  "
+              f"equal_bytes={eq}", flush=True)
+        if not eq:
+            print(f"FAIL[choco_eb]: {label} adc/choco bytes differ "
+                  f"({res['adc_dgd']['total_bytes']} vs "
+                  f"{res['choco']['total_bytes']})")
+            ok = False
+        for aname in ("adc_dgd", "choco"):
+            if not (res[aname]["tail_gradnorm"]
+                    < res[aname]["first_gradnorm"]):
+                print(f"FAIL[choco_eb]: {label}/{aname} did not contract "
+                      "the gradient norm")
+                ok = False
+        out["plans"][label] = res
+    return out, ok
 
 
 def main() -> int:
@@ -489,11 +595,16 @@ def main() -> int:
         out[arch.replace("-", "_").replace(".", "_")] = res
     codecs, codec_ok = codec_section(mesh, ctx)
     ok = ok and codec_ok
+    choco_eb, choco_ok = choco_equal_bytes_section()
+    ok = ok and choco_ok
     payload = {"n_devices": N_DEVICES, "nodes": NODES,
                "prod_mesh": f"{PROD_FSDP}x{PROD_TP}",
                "steps_timed": STEPS_TIMED, "chunk_sweep": list(CHUNK_SWEEP),
                "compile_budget_s": COMPILE_BUDGET_S, "noise_tol": NOISE_TOL,
-               "archs": out, "codecs": codecs}
+               "mixed_plan": MIXED_PLAN, "mixed_plan_aggr": MIXED_PLAN_AGGR,
+               "mixed_fidelity_tol": MIXED_FIDELITY_TOL,
+               "archs": out, "codecs": codecs,
+               "choco_equal_bytes": choco_eb}
     with open(os.path.join(REPO, "BENCH_consensus_step.json"), "w") as f:
         json.dump(payload, f, indent=1, default=float)
     art = os.path.join(REPO, "benchmarks", "artifacts")

@@ -4,12 +4,14 @@ Public surface:
   topology     — mixing matrices W and their spectral properties
   compression  — unbiased stochastic compression operators (Definition 1)
   codec        — wire-codec payload formats + adaptive bit-budget controller
+  wireplan     — per-leaf codec maps (mixed-precision wire plans)
   problems     — consensus optimization test problems
   consensus    — ADC-DGD + baselines, single-process reference
   distributed  — shard_map/pjit distributed runtime for ADC-DGD
   theory       — rate/error-ball predictions for validation
 """
-from . import codec, compression, consensus, problems, theory, topology  # noqa: F401
+from . import (  # noqa: F401
+    codec, compression, consensus, problems, theory, topology, wireplan)
 
 from .codec import (  # noqa: F401
     AdaptiveBitController,
@@ -17,6 +19,12 @@ from .codec import (  # noqa: F401
     SubByteCodec,
     TopKCodec,
     WireCodec,
+)
+from .wireplan import (  # noqa: F401
+    PlanSpec,
+    WirePlan,
+    WirePlanCompressor,
+    parse_spec,
 )
 
 from .compression import (  # noqa: F401

@@ -315,6 +315,23 @@ class AdaptiveBitController:
     meaningless and overflow is structurally ~0): pass
     ``residual_rms=None`` and the controller degenerates to the byte-budget
     filter (cheapest fitting codec).
+
+    **Plan mode** (DESIGN.md §Wire plans): attach a mixed
+    :class:`~repro.core.wireplan.WirePlan` via ``plan`` and the budget
+    filter evaluates candidate *plans* instead of bare codecs — each
+    ladder entry names the plan's **hot-slot tier** (``plan.retier_hot``),
+    cold slots stay pinned, and ``wire_bytes`` prices the full
+    heterogeneous payload.  ``initial``/``select`` still return ladder
+    names; the trainer maps them back to plan specs with
+    ``PlanSpec.with_hot_tier`` (launch/train.py).
+
+    **Consensus-error signal**: ``select``/``target`` accept an optional
+    ``consensus_err`` (per-element RMS disagreement across nodes, from the
+    ``consensus_err`` metric when ``track_consensus_error=True``).  It
+    folds into the fidelity need as ``max(residual_rms, consensus_err)`` —
+    nodes that have drifted apart need finer grids than the local residual
+    alone suggests (Theorem 2's error ball) — pure plumbing, the policy is
+    unchanged.
     """
 
     ladder: tuple[str, ...] = ("int2", "int4", "int8")
@@ -324,6 +341,9 @@ class AdaptiveBitController:
     headroom: float = 4.0        # target code_max >= headroom * rms / Delta_k
     overflow_hi: float = 0.01    # clip fraction that forces a rung up
     patience: int = 2            # consecutive epochs before a down-switch
+    #: optional WirePlan (duck-typed: retier_hot/payload_bytes) — candidate
+    #: plans shift its hot-slot tier through the ladder, cold slots pinned
+    plan: Any = None
     current: str | None = None
     _pending: str | None = dataclasses.field(default=None, repr=False)
     _pending_count: int = dataclasses.field(default=0, repr=False)
@@ -337,7 +357,11 @@ class AdaptiveBitController:
     # -- static helpers --------------------------------------------------
     def wire_bytes(self, name: str, n_rows: int,
                    block: int = kops.BLOCK) -> float:
-        """Bytes/step this codec puts on the ring (both directions)."""
+        """Bytes/step a candidate puts on the ring (both directions): the
+        uniform codec's payload, or — in plan mode — the full heterogeneous
+        payload of the plan with its hot slots re-tiered to ``name``."""
+        if self.plan is not None:
+            return 2.0 * float(self.plan.retier_hot(name).payload_bytes)
         return 2.0 * by_name(name).payload_bytes(n_rows, block)
 
     def candidates(self, n_rows: int, block: int = kops.BLOCK
@@ -358,11 +382,17 @@ class AdaptiveBitController:
 
     def target(self, next_step: int, residual_rms: float | None,
                overflow_frac: float, n_rows: int,
-               block: int = kops.BLOCK) -> str:
+               block: int = kops.BLOCK,
+               consensus_err: float | None = None) -> str:
         cands = self.candidates(n_rows, block)
         if residual_rms is None:          # adaptive grid: budget filter only
             pick = cands[0]
         else:
+            if consensus_err is not None:
+                # drifted nodes need fidelity beyond the local residual
+                # (per-element RMS scale; ROADMAP "Controller driven by
+                # consensus error" — plumbing, same policy)
+                residual_rms = max(float(residual_rms), float(consensus_err))
             delta_k = self.fixed_step0 / max(1.0, float(next_step)) ** self.gamma
             need = float(residual_rms) * self.headroom / delta_k
             pick = None
@@ -392,10 +422,12 @@ class AdaptiveBitController:
     # -- the state machine ----------------------------------------------
     def select(self, next_step: int, residual_rms: float | None,
                overflow_frac: float, n_rows: int,
-               block: int = kops.BLOCK) -> str:
-        """Advance one epoch; returns the codec to use until the next call."""
+               block: int = kops.BLOCK,
+               consensus_err: float | None = None) -> str:
+        """Advance one epoch; returns the codec (plan mode: the hot-slot
+        tier) to use until the next call."""
         pick = self.target(next_step, residual_rms, overflow_frac, n_rows,
-                           block)
+                           block, consensus_err=consensus_err)
         if self.current is None:
             self.current = pick
         elif self._fidelity(pick) > self._fidelity(self.current):

@@ -57,6 +57,7 @@ __all__ = [
     "CentralizedGD",
     "run",
     "by_name",
+    "on_wire_plan",
 ]
 
 
@@ -320,6 +321,11 @@ class CHOCOGossip(_Algorithm):
 
     Reuses the existing :class:`Compressor` wire-format contract: ``q`` is
     what travels (same codes+scales wire bytes as ADC-DGD's differential).
+    To speak the packed transport's actual byte formats — including mixed
+    per-leaf plans — pass a :class:`~repro.core.wireplan.
+    WirePlanCompressor` (or use :func:`on_wire_plan`): the error-feedback
+    wire is then encoded/decoded through the same WirePlan as ADC-DGD's,
+    so ``choco_vs_adc`` compares the algorithms at equal bytes/step.
     """
 
     mixing: MixingMatrix | TopologySchedule
@@ -535,3 +541,18 @@ def by_name(name: str, mixing: MixingMatrix | TopologySchedule,
     if name == "centralized_gd":
         return CentralizedGD(stepsize)
     raise KeyError(f"unknown algorithm {name!r}")
+
+
+def on_wire_plan(name: str, mixing: MixingMatrix | TopologySchedule,
+                 plan, stepsize: StepSize, **kw) -> _Algorithm:
+    """An algorithm whose gossip wire is routed through a
+    :class:`~repro.core.wireplan.WirePlan` — ADC-DGD's differential and
+    CHOCO's error-feedback correction are encoded/decoded with the SAME
+    plan (identical heterogeneous payload bytes), which makes
+    ``choco_vs_adc`` an equal-bytes/step comparison by construction.
+    ``plan`` must cover the problem dimension
+    (``plan.layout.n_elements == problem.dim``).
+    """
+    from repro.core.wireplan import WirePlanCompressor
+    return by_name(name, mixing, stepsize,
+                   compressor=WirePlanCompressor(plan), **kw)

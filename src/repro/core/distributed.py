@@ -40,10 +40,15 @@ behind Pallas compute at the cost of 2 x pipeline_chunks collectives
 (4 x n_leaves collectives per step) as a bit-identical reference for
 tests and the ``consensus_step_latency`` benchmark (DESIGN.md §Hardware
 adaptation).  The byte format of the packed/pipelined payload is set by
-``wire_codec`` (:mod:`repro.core.codec`, DESIGN.md §Wire codecs): int8
-(historical), int4/int2 (sub-byte bit-packed) or topk (sparse bitmap +
-values); ``byte_budget`` feeds the epoch-level AdaptiveBitController that
-re-selects the codec from runtime feedback (launch/train.py).
+``wire_codec``, a **wire-plan spec** (:mod:`repro.core.wireplan`,
+DESIGN.md §Wire plans): a bare codec name — int8 (historical), int4/int2
+(sub-byte bit-packed) or topk (sparse bitmap + values) — is the uniform
+back-compat plan, while ``"mixed:<pattern=codec,...>"`` assigns codecs per
+leaf by path pattern.  Mixed plans keep ONE flat byte payload per ring
+direction (per-run grouped kernel launches, prefix-sum byte offsets) and
+pipeline chunks snap so none straddles a codec change; ``byte_budget``
+feeds the epoch-level AdaptiveBitController that re-selects the plan's hot
+tier from runtime feedback (launch/train.py).
 
 Algorithms:
   adc_dgd        — the paper's contribution (wire = int8 codes + scales)
@@ -70,7 +75,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import codec as wire_codec
-from repro.core import wire
+from repro.core import wire, wireplan
 from repro.kernels import ops as kops
 from repro.models.sharding import ParallelContext
 
@@ -132,12 +137,14 @@ class ConsensusConfig:
     #: more transfer latency but pay more launch/collective overhead —
     #: benchmarks/consensus_step.py sweeps this (EXPERIMENTS.md §Perf).
     pipeline_chunks: int = 4
-    #: payload format of the packed/pipelined ADC exchange (DESIGN.md §Wire
-    #: codecs): "int8" (historical, BLOCK codes + fp32 scale per row),
-    #: "int4"/"int2" (sub-byte bit-packed codes + bf16 scale), "topk"
-    #: (sparse one-per-stratum selection: bitmap + int8 values + bf16
-    #: scale).  The per-leaf reference path and the compressed_dgd negative
-    #: control speak int8 only.
+    #: wire-plan spec of the packed/pipelined ADC exchange (DESIGN.md §Wire
+    #: plans): a bare codec name — "int8" (historical, BLOCK codes + fp32
+    #: scale per row), "int4"/"int2" (sub-byte bit-packed codes + bf16
+    #: scale), "topk" (sparse bitmap + int8 values + bf16 scale) — is the
+    #: back-compat uniform plan; "mixed:<pattern=codec,...>" assigns codecs
+    #: per leaf by path pattern (core.wireplan grammar), e.g.
+    #: "mixed:norm=int2,embed=int4,*=int8".  The per-leaf reference path
+    #: and the compressed_dgd negative control speak uniform int8 only.
     wire_codec: str = "int8"
     #: optional bytes/step target (both ring directions) consumed by the
     #: AdaptiveBitController's candidate filter (core.codec) and surfaced
@@ -161,16 +168,20 @@ class ConsensusConfig:
         if self.pipeline_chunks < 1:
             raise ValueError(f"pipeline_chunks must be >= 1, got "
                              f"{self.pipeline_chunks}")
-        if self.wire_codec not in wire_codec.CODEC_NAMES:
-            raise ValueError(f"wire_codec must be one of "
-                             f"{wire_codec.CODEC_NAMES}, got "
-                             f"{self.wire_codec!r}")
-        if self.wire_codec != "int8" and self.wire_packing == "per_leaf":
-            raise ValueError(
-                f"wire_codec={self.wire_codec!r} requires the packed or "
-                "pipelined transport; the per-leaf reference path speaks "
-                "int8 only")
-        if self.wire_codec != "int8" and self.algorithm == "compressed_dgd":
+        spec = wireplan.parse_spec(self.wire_codec)   # raises on bad specs
+        if self.wire_packing == "per_leaf":
+            if not spec.is_uniform:
+                raise ValueError(
+                    f"wire_codec={self.wire_codec!r} mixes codecs; the "
+                    "per-leaf reference transport ships one uniform int8 "
+                    "wire per leaf and cannot address a heterogeneous "
+                    "payload — use the packed or pipelined transport")
+            if spec.uniform_codec != "int8":
+                raise ValueError(
+                    f"wire_codec={self.wire_codec!r} requires the packed "
+                    "or pipelined transport; the per-leaf reference path "
+                    "speaks int8 only")
+        if spec.uniform_codec != "int8" and self.algorithm == "compressed_dgd":
             raise ValueError(
                 "compressed_dgd (the Eq. (5) negative control) is pinned "
                 f"to the int8 wire; got wire_codec={self.wire_codec!r}")
@@ -198,23 +209,22 @@ def _ppermute_ring(x, ctx: ParallelContext, shift: int):
                             _flat_ring_perm(ctx, shift))
 
 
-def _pipeline_schedule(chunks: wire.ChunkedLayout, launch, retire,
-                       inspect=None) -> list:
-    """Double-buffered chunk schedule shared by the pipelined exchanges.
+def _pipeline_schedule(n_units: int, launch, retire, inspect=None) -> list:
+    """Double-buffered transfer schedule shared by the wire exchanges.
 
     Emission order at iteration c is ``launch(c+1)`` BEFORE ``retire(c)``,
-    so chunk c's payload transfer has no data dependence on — and can
-    overlap with — chunk c+1's quantize launch; chunk c-1 was retired in
-    the previous iteration while chunk c was in flight.  ``inspect(c,
+    so unit c's payload transfer has no data dependence on — and can
+    overlap with — unit c+1's quantize launch; unit c-1 was retired in
+    the previous iteration while unit c was in flight.  ``inspect(c,
     inflight)`` (optional) observes each in-flight value before it is
     retired (overflow accounting).  Returns ``[retire(c, ...) for c]``.
     """
     outs = []
     inflight = launch(0)
-    for c in range(chunks.n_chunks):
+    for c in range(n_units):
         if inspect is not None:
             inspect(c, inflight)
-        nxt = launch(c + 1) if c + 1 < chunks.n_chunks else None
+        nxt = launch(c + 1) if c + 1 < n_units else None
         outs.append(retire(c, inflight))
         inflight = nxt
     return outs
@@ -226,8 +236,14 @@ class ConsensusRuntime:
     def __init__(self, config: ConsensusConfig, ctx: ParallelContext):
         self.cfg = config
         self.ctx = ctx
-        #: payload format of the packed/pipelined exchange (§Wire codecs)
-        self.codec = wire_codec.by_name(config.wire_codec)
+        #: layout-independent wire-plan recipe (§Wire plans); bare codec
+        #: names normalize to uniform plans (back-compat shim)
+        self.plan_spec = wireplan.parse_spec(config.wire_codec)
+        #: the single codec of a uniform plan (None for mixed plans — use
+        #: ``wire_plan_for(layout)`` for anything geometric)
+        self.codec = (wire_codec.by_name(self.plan_spec.uniform_codec)
+                      if self.plan_spec.is_uniform else None)
+        self._plan_cache: dict = {}
         n = ctx.total_consensus_nodes
         if n > 1 and config.algorithm in ("adc_dgd", "dgd", "compressed_dgd"):
             for s in config.ring_strides:
@@ -274,31 +290,49 @@ class ConsensusRuntime:
         """The static packing plan for a (local) parameter tree."""
         return wire.WireLayout.for_tree(params)
 
+    def wire_plan_for(self, layout: wire.WireLayout) -> wireplan.WirePlan:
+        """The (cached) WirePlan binding this runtime's plan spec to a
+        layout's slots — the single source of payload geometry for the
+        packed/pipelined exchanges and the wire accounting."""
+        plan = self._plan_cache.get(layout)
+        if plan is None:
+            plan = self.plan_spec.build(layout)
+            self._plan_cache[layout] = plan
+        return plan
+
+    def noise_cols_for(self, layout: wire.WireLayout) -> int:
+        """Columns of the quantization-noise buffer one exchange consumes
+        (the max over the plan's codecs; see core.wireplan)."""
+        return self.wire_plan_for(layout).noise_cols(layout.block)
+
     # -- wire accounting (static; used by rooflines & benchmarks) --------
     def wire_bytes_per_step(self, n_params_local: int,
                             layout: wire.WireLayout | None = None) -> float:
         """Bytes this device puts on the ring per step.
 
-        ``layout`` (when available) gives the exact padded row count;
-        otherwise rows are estimated from the contiguous element count
-        (exact when the tree packs as one leaf).  The per-leaf wire path
-        ships each leaf padded to the historical TILE_N-aligned blockify
-        height, so it puts MORE rows on the wire than the row-granular
-        packed payload for the same tree.
+        ``layout`` (when available) gives the exact heterogeneous payload
+        size via the WirePlan prefix sum; otherwise rows are estimated from
+        the contiguous element count (exact when the tree packs as one
+        leaf; mixed plans without a layout fall back to the hot codec's
+        width — an upper bound).  The per-leaf wire path ships each leaf
+        padded to the historical TILE_N-aligned blockify height, so it
+        puts MORE rows on the wire than the row-granular packed payload
+        for the same tree.
         """
-        if layout is not None:
-            if self.cfg.wire_packing == "per_leaf":
+        if self.cfg.algorithm in ("adc_dgd", "compressed_dgd"):
+            if layout is not None and self.cfg.wire_packing == "per_leaf":
                 rows = sum(kops.padded_block_rows(s.size)
                            for s in layout.slots)
-            else:
+                total = 2.0 * rows * kops.payload_width()
+            elif layout is not None:
+                total = 2.0 * self.wire_plan_for(layout).payload_bytes
                 rows = layout.n_rows
-        else:
-            rows = kops.padded_block_rows(n_params_local)
-        if self.cfg.algorithm in ("adc_dgd", "compressed_dgd"):
-            # one byte payload per ring direction, width set by the wire
-            # codec (int8: BLOCK codes + fp32 scale; sub-byte/top-k: see
-            # core.codec payload layouts)
-            total = 2.0 * rows * self.codec.payload_width()
+            else:
+                rows = kops.padded_block_rows(n_params_local)
+                width = (self.codec.payload_width() if self.codec is not None
+                         else wire_codec.by_name(self.plan_spec.hot_codec)
+                         .payload_width())
+                total = 2.0 * rows * width
             if self.cfg.algorithm == "adc_dgd" and len(self.cfg.ring_strides) > 1:
                 # amortized epoch-boundary resync: one fp32 x_tilde exchange
                 # per re-wiring (both ring directions)
@@ -311,18 +345,22 @@ class ConsensusRuntime:
         return 0.0
 
     def _chunks_for(self, layout: wire.WireLayout) -> wire.ChunkedLayout:
-        """The (single) chunk split this runtime's exchange uses for a
-        layout: the tile-count-clamped configured count for
-        ``wire_packing="pipelined"``, one chunk for the monolithic paths."""
+        """Uniform-int8 chunk split for the compressed_dgd packed path (the
+        ADC exchange chunks through its WirePlan instead): the
+        tile-count-clamped configured count for ``wire_packing=
+        "pipelined"``, one chunk for the monolithic paths."""
         return wire.ChunkedLayout.split(
             layout, self.cfg.pipeline_chunks
             if self.cfg.wire_packing == "pipelined" else 1)
 
     def pipeline_chunks_for(self, layout: wire.WireLayout) -> int:
         """Effective pipeline chunk count for a layout: 1 for the
-        monolithic paths, the (tile-count-clamped) configured chunk count
-        for ``wire_packing="pipelined"``."""
-        return self._chunks_for(layout).n_chunks
+        monolithic paths; for ``wire_packing="pipelined"`` the plan's
+        snapped chunk count (tile-clamped, >= the plan's codec-run count —
+        chunks never straddle a codec change)."""
+        if self.cfg.wire_packing != "pipelined":
+            return 1
+        return self.wire_plan_for(layout).n_chunks(self.cfg.pipeline_chunks)
 
     def collectives_per_step(self, n_leaves: int = 1,
                              n_chunks: int | None = None,
@@ -478,28 +516,32 @@ class ConsensusRuntime:
     def _adc_exchange(self, x_prev, x_half, state, step, key, stride=1,
                       noise=None, layout=None):
         """Packed / pipelined ADC-DGD exchange: the whole parameter tree as
-        ONE wire problem, optionally software-pipelined over tile-aligned
-        chunks of the packed buffer.
+        ONE wire problem whose payload geometry comes from the runtime's
+        :class:`~repro.core.wireplan.WirePlan`.
 
-        ``wire_packing="packed"`` (chunks == 1) degenerates to the
-        monolithic PR 2 path: one quantize launch over the packed
-        differential, one byte-payload ``ppermute`` per ring direction,
-        one fused dequant-combine launch.  ``wire_packing="pipelined"``
-        splits the buffer into ``pipeline_chunks`` row slices
-        (:class:`repro.core.wire.ChunkedLayout`) and double-buffers the
-        stages — chunk i+1's payload is quantized and put on the wire
-        BEFORE chunk i's in-flight payload is consumed, so in steady state
-        the interconnect moves chunk i while the VPU quantizes chunk i+1
-        and dequant-combines chunk i-1 (see DESIGN.md §Hardware adaptation
-        for the timeline).  Rows are whole quantization blocks, so every
-        chunk count is bit-identical to the monolithic path given the same
-        noise buffer — and therefore to ``_adc_exchange_per_leaf`` too.
+        ``wire_packing="packed"`` moves ONE flat byte payload per ring
+        direction per step: every codec run of the plan is encoded with one
+        grouped kernel launch over its contiguous row range and the
+        flattened run payloads concatenate at the plan's prefix-sum byte
+        offsets — two collectives per step no matter how many codecs the
+        plan mixes (for a uniform plan this is exactly the monolithic PR 2
+        path).  ``wire_packing="pipelined"`` splits the buffer into
+        ``pipeline_chunks`` row slices — snapped so no chunk straddles a
+        codec change — and double-buffers the stages: chunk i+1's payload
+        is quantized and put on the wire BEFORE chunk i's in-flight payload
+        is consumed, so in steady state the interconnect moves chunk i
+        while the VPU quantizes chunk i+1 and dequant-combines chunk i-1
+        (DESIGN.md §Hardware adaptation).  Every codec is row-local, so
+        every chunking is bit-identical to the monolithic path given the
+        same noise buffer — and, for uniform int8 plans, to
+        ``_adc_exchange_per_leaf`` too.
         """
         cfg, ctx = self.cfg, self.ctx
-        codec = self.codec
         if layout is None:
             layout = wire.WireLayout.for_tree(x_half)
-        chunks = self._chunks_for(layout)
+        plan = self.wire_plan_for(layout)
+        units = plan.transfer_units(
+            cfg.pipeline_chunks if cfg.wire_packing == "pipelined" else None)
         resync = self._resync_flag(step)
         step_k = self._step_k(step)
         key = _device_key(key, ctx)
@@ -509,65 +551,86 @@ class ConsensusRuntime:
         xh_p = layout.pack(x_half)
         y = xh_p - xt                               # packed differential
         if noise is None:
-            # noise column count is codec-specific (top-k consumes a second
-            # BLOCK-wide region for its selection race — core.codec)
+            # ONE noise buffer sized for the plan's widest codec (top-k
+            # consumes a second BLOCK-wide region for its selection race);
+            # each run's kernels read their leading columns in place
             noise = jax.random.uniform(
-                key, (layout.n_rows, codec.noise_cols(layout.block)),
+                key, (layout.n_rows, plan.noise_cols(layout.block)),
                 jnp.float32)
 
         def launch(c):
-            """Encode chunk c straight out of the full differential (the
-            kernel reads the row range in place) and put its byte payload
-            on both ring directions: 2 collectives per chunk, same total
-            wire bytes as the monolithic path."""
-            start, rows = chunks.bounds[c]
-            pay = codec.encode_payload(y, noise, fixed_step=step_k,
-                                       use_pallas=cfg.use_pallas,
-                                       row_offset=start, n_rows=rows)
+            """Encode unit c straight out of the full differential (one
+            grouped launch per codec run; the kernels read the row ranges
+            in place), flatten to the unit's 1-D wire buffer and put it on
+            both ring directions: 2 collectives per unit regardless of how
+            many codec runs the unit carries."""
+            pay = plan.encode_unit(units[c], y, noise, fixed_step=step_k,
+                                   use_pallas=cfg.use_pallas)
             return (pay, _ppermute_ring(pay, ctx, +stride),
                     _ppermute_ring(pay, ctx, -stride))
 
         def retire(c, inflight):
-            """Fused dequant + shadow update + combine for chunk c's
-            in-flight payloads (persistent shadows viewed at the chunk
-            offset in-kernel; chunk-aware epoch-boundary m_agg resync)."""
+            """Per-fragment fused dequant + shadow update + combine for
+            unit c's in-flight payloads (persistent shadows viewed at each
+            fragment's row offset; unit-level epoch-boundary m_agg
+            resync)."""
             pay, p_l, p_r = inflight
-            start, rows = chunks.bounds[c]
-            mb_c = mb
+            unit = units[c]
+            mb_u = None
             if resync is not None:
-                xt_c = chunks.slice_rows(xt, c)
+                xt_u = jax.lax.slice_in_dim(xt, unit.row_start, unit.row_end)
 
-                def _rebuild(xt_c=xt_c):
-                    xt_l = _ppermute_ring(xt_c, ctx, +stride)
-                    xt_r = _ppermute_ring(xt_c, ctx, -stride)
+                def _rebuild(xt_u=xt_u):
+                    xt_l = _ppermute_ring(xt_u, ctx, +stride)
+                    xt_r = _ppermute_ring(xt_u, ctx, -stride)
                     return jnp.float32(cfg.side_weight) * (xt_l + xt_r)
 
-                mb_c = jax.lax.cond(
-                    resync, _rebuild, lambda c=c: chunks.slice_rows(mb, c))
-            return codec.decode_combine(
-                pay, p_l, p_r, xt, mb_c, cfg.self_weight, cfg.side_weight,
-                jnp.float32(1.0), use_pallas=cfg.use_pallas,
-                row_offset=start, n_rows=rows)
+                mb_u = jax.lax.cond(
+                    resync, _rebuild,
+                    lambda u=unit: jax.lax.slice_in_dim(
+                        mb, u.row_start, u.row_end))
+            outs = []
+            for f in unit.fragments:
+                cd = wire_codec.by_name(f.codec)
+                if mb_u is None:
+                    m_in = mb                       # full-height in-kernel view
+                else:
+                    m_in = jax.lax.slice_in_dim(
+                        mb_u, f.row_start - unit.row_start,
+                        f.row_end - unit.row_start)
+                outs.append(cd.decode_combine(
+                    plan.fragment_payload(pay, f, unit.byte_start),
+                    plan.fragment_payload(p_l, f, unit.byte_start),
+                    plan.fragment_payload(p_r, f, unit.byte_start),
+                    xt, m_in, cfg.self_weight, cfg.side_weight,
+                    jnp.float32(1.0), use_pallas=cfg.use_pallas,
+                    row_offset=f.row_start, n_rows=f.n_rows))
+            return tuple(
+                wire.lift_concat([o[i] for o in outs]) for i in range(3))
 
         clipped = [jnp.zeros((), jnp.float32)]
 
         def count_overflow(c, inflight):
             # overflow monitoring (paper §IV-D: bounded transmitted
-            # values); integer counts, so chunk sums are exact.  Sub-byte
-            # codecs count grid saturation from the differential itself —
-            # on coarse alphabets boundary codes are usually legitimate
-            # values, not clips (core.codec.count_saturated)
-            clipped[0] = clipped[0] + codec.count_saturated(
-                chunks.slice_rows(y, c), step_k, inflight[0], layout.block)
+            # values); integer counts, so per-fragment sums are exact.
+            # Sub-byte codecs count grid saturation from the differential
+            # itself — on coarse alphabets boundary codes are usually
+            # legitimate values, not clips (core.codec.count_saturated)
+            unit = units[c]
+            for f in unit.fragments:
+                cd = wire_codec.by_name(f.codec)
+                clipped[0] = clipped[0] + cd.count_saturated(
+                    jax.lax.slice_in_dim(y, f.row_start, f.row_end), step_k,
+                    plan.fragment_payload(inflight[0], f, unit.byte_start),
+                    layout.block)
 
         parts = _pipeline_schedule(
-            chunks, launch, retire,
+            len(units), launch, retire,
             inspect=count_overflow if cfg.quant_mode == "fixed" else None)
-        xt_new = chunks.concat([p[0] for p in parts])
-        m_new = chunks.concat([p[1] for p in parts])
-        comb = chunks.concat([p[2] for p in parts])
-        overflow = clipped[0] / float(
-            layout.n_rows * codec.codes_per_row(layout.block))
+        xt_new = wire.lift_concat([p[0] for p in parts])
+        m_new = wire.lift_concat([p[1] for p in parts])
+        comb = wire.lift_concat([p[2] for p in parts])
+        overflow = clipped[0] / float(plan.codes_total(layout.block))
         # gradient step applied per leaf while unpacking (x_prev never
         # needs packing; identical elementwise ops to the per-leaf path)
         comb_leaves = layout.unpack(comb, cast=False)
@@ -706,7 +769,8 @@ class ConsensusRuntime:
             return (cfg.self_weight * chunks.slice_rows(xp_p, c)
                     + cfg.side_weight * (left + right))
 
-        mixed = chunks.concat(_pipeline_schedule(chunks, launch, retire))
+        mixed = chunks.concat(
+            _pipeline_schedule(chunks.n_chunks, launch, retire))
         mixed_leaves = layout.unpack(mixed, cast=False)
         x_next = jax.tree.map(
             lambda m, h, p: (m + (h.astype(jnp.float32)

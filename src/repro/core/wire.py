@@ -41,7 +41,8 @@ import numpy as np
 
 from repro.kernels import ops as kops
 
-__all__ = ["LeafSlot", "WireLayout", "ChunkedLayout", "pvary_to"]
+__all__ = ["LeafSlot", "WireLayout", "ChunkedLayout", "pvary_to",
+           "lift_concat"]
 
 
 def pvary_to(x, axes):
@@ -77,6 +78,29 @@ def _lift_common_vma(arrays):
     return out
 
 
+def _flatten_with_paths(tree):
+    """(leaves, treedef, path strings) — path strings via keystr where this
+    jax has tree_flatten_with_path (>= 0.4.6); positional fallbacks
+    (``leaf[i]``) otherwise so WirePlan rules degrade, never crash."""
+    flatten_wp = getattr(jax.tree_util, "tree_flatten_with_path", None)
+    if flatten_wp is not None:
+        keyed, treedef = flatten_wp(tree)
+        keystr = getattr(jax.tree_util, "keystr", lambda kp: str(kp))
+        return ([leaf for _, leaf in keyed], treedef,
+                [keystr(kp) for kp, _ in keyed])
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef, [f"leaf[{i}]" for i in range(len(leaves))]
+
+
+def lift_concat(parts, axis: int = 0):
+    """vma-lifted concatenation of buffer parts (a single part passes
+    through) — THE reassembly idiom of every packed-wire path: per-chunk
+    results (ChunkedLayout), per-fragment payloads/results (wireplan,
+    distributed)."""
+    parts = _lift_common_vma(list(parts))
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=axis)
+
+
 @dataclasses.dataclass(frozen=True)
 class LeafSlot:
     """Where one leaf lives inside the packed buffer (all static)."""
@@ -86,6 +110,9 @@ class LeafSlot:
     size: int                  # number of real elements
     row_start: int             # first block row of this leaf
     n_rows: int                # whole BLOCK-rows owned by this leaf (ceil)
+    #: leaf path name (jax.tree_util.keystr), e.g. "['layers'][0]['norm1']"
+    #: — what WirePlan rules pattern-match against (core.wireplan)
+    path: str = ""
 
     @property
     def row_end(self) -> int:
@@ -112,15 +139,16 @@ class WireLayout:
     @classmethod
     def for_tree(cls, tree: Any, block: int = kops.BLOCK) -> "WireLayout":
         import math
-        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        leaves, treedef, paths = _flatten_with_paths(tree)
         slots = []
         row = 0
-        for leaf in leaves:
+        for leaf, path in zip(leaves, paths):
             shape = tuple(int(s) for s in leaf.shape)
             size = int(np.prod(shape, dtype=np.int64)) if shape else 1
             n_rows = int(math.ceil(max(size, 1) / block))
             slots.append(LeafSlot(shape=shape, dtype=jnp.dtype(leaf.dtype),
-                                  size=size, row_start=row, n_rows=n_rows))
+                                  size=size, row_start=row, n_rows=n_rows,
+                                  path=path))
             row += n_rows
         total = int(math.ceil(max(row, 1) / kops.TILE_N) * kops.TILE_N)
         return cls(slots=tuple(slots), treedef=treedef, n_rows=total,
@@ -259,7 +287,6 @@ class ChunkedLayout:
         """Reassemble the full-height buffer from per-chunk results."""
         if len(parts) != self.n_chunks:
             raise ValueError(f"{len(parts)} chunk parts != {self.n_chunks}")
-        parts = _lift_common_vma(list(parts))
-        out = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
+        out = lift_concat(parts)
         assert out.shape[0] == self.n_rows, out.shape
         return out

@@ -1,0 +1,629 @@
+"""WirePlan: per-leaf mixed-precision codec maps behind one transport API.
+
+ADC-DGD's convergence guarantee (Theorem 1) holds for *any* unbiased
+compression operator, so nothing forces the whole packed buffer through ONE
+:class:`~repro.core.codec.WireCodec` — norm/embedding rows tolerate far
+fewer bits than hot projection rows (the per-layer sensitivity driving
+QSGD-style bucket schemes, arXiv:1610.02132).  This module makes the codec
+assignment a first-class, per-leaf axis (DESIGN.md §Wire plans):
+
+    compressors (core.compression)  —  WHAT noise model the math assumes
+    WireCodec   (core.codec)        —  HOW a block row becomes wire bytes
+    WirePlan    (this module)       —  WHICH codec each leaf's rows use,
+                                       and where its bytes live
+    WireLayout / ChunkedLayout      —  WHERE rows live in the packed buffer
+    ConsensusRuntime (distributed)  —  WHEN the bytes move (packed/pipelined)
+
+A :class:`WirePlan` binds a :class:`~repro.core.wire.WireLayout` to one
+codec **per leaf slot** and owns the resulting heterogeneous payload
+geometry:
+
+* adjacent same-codec slots merge into contiguous **codec runs**; each run
+  encodes with one grouped kernel launch over its row range;
+* per-run payload **byte offsets are a prefix sum** of ``n_rows *
+  payload_width`` — the whole heterogeneous payload is ONE flat uint8
+  buffer, so the packed transport still issues exactly one ``ppermute``
+  per ring direction regardless of how many codecs the plan mixes;
+* pipeline **chunk boundaries are snapped so no chunk straddles a codec
+  change** (each chunk is a contiguous row range inside one run), which
+  keeps every chunk a single-width 2-D payload and keeps the pipelined
+  exchange bit-identical to the packed one for every chunk count;
+* static ``payload_bytes`` / ``noise_cols`` / ``codes_total`` accounting
+  replaces the uniform-codec math in ``ConsensusRuntime``.
+
+Plan specs (:func:`parse_spec`) keep ``ConsensusConfig.wire_codec`` a plain
+string:
+
+    "int8"                               — uniform plan (back-compat: every
+                                           bare codec name still works)
+    "mixed:norm=int2,embed=int4,*=int8"  — rule list matched against leaf
+                                           path names, first match wins;
+                                           "*" (or the implicit default)
+                                           catches the rest
+
+Patterns containing ``*``/``?``/``[`` are fnmatch globs against the full
+leaf path (e.g. ``['layers'][0]['norm1']['w']``); anything else is a plain
+substring match.  :meth:`WirePlan.from_rules` is the programmatic
+equivalent.
+
+:class:`WirePlanCompressor` adapts a plan to the reference
+:class:`~repro.core.compression.Compressor` interface so the single-process
+algorithms (``ADCDGD``, ``CHOCOGossip``) route their gossip wire through
+the SAME plan encode/decode — the ``choco_vs_adc`` benchmark finally
+compares algorithms at equal bytes/step, not equal nominal bits.
+"""
+from __future__ import annotations
+
+import dataclasses
+from fnmatch import fnmatchcase
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import codec as wire_codec
+from repro.core import wire
+from repro.core.compression import Compressor
+from repro.kernels import ops as kops
+
+__all__ = ["PlanSpec", "parse_spec", "CodecRun", "Fragment", "TransferUnit",
+           "WirePlan", "WirePlanCompressor"]
+
+
+# ---------------------------------------------------------------------------
+# Plan specs: the string grammar behind ConsensusConfig.wire_codec
+# ---------------------------------------------------------------------------
+
+_MIXED_PREFIX = "mixed:"
+
+
+def _check_codec_name(name: str) -> None:
+    """Validate a codec name with the ValueError contract every plan
+    entry point shares (codec.by_name raises KeyError)."""
+    try:
+        wire_codec.by_name(name)
+    except KeyError:
+        raise ValueError(
+            f"unknown wire codec {name!r} in plan; have "
+            f"{wire_codec.CODEC_NAMES}") from None
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanSpec:
+    """A layout-independent plan recipe: ordered (pattern, codec) rules.
+
+    ``rules`` are tried in order against each leaf's path name; the first
+    match wins and unmatched slots fall back to ``default``.  A spec with
+    no rules (or whose rules all name ``default``'s codec) is *uniform* —
+    the back-compat image of a bare codec name.
+    """
+
+    rules: tuple[tuple[str, str], ...] = ()
+    default: str = "int8"
+
+    def __post_init__(self):
+        _check_codec_name(self.default)
+        for pat, name in self.rules:
+            if not pat:
+                raise ValueError("empty pattern in wire plan rule")
+            _check_codec_name(name)
+
+    # -- uniform back-compat --------------------------------------------
+    @property
+    def is_uniform(self) -> bool:
+        return all(name == self.default for _, name in self.rules)
+
+    @property
+    def uniform_codec(self) -> str | None:
+        """The single codec of a uniform plan, else None."""
+        return self.default if self.is_uniform else None
+
+    def to_string(self) -> str:
+        if self.is_uniform:
+            return self.default
+        body = ",".join(f"{p}={n}" for p, n in self.rules)
+        return f"{_MIXED_PREFIX}{body},*={self.default}"
+
+    # -- slot resolution -------------------------------------------------
+    def codec_for_path(self, path: str) -> str:
+        for pat, name in self.rules:
+            if _pattern_matches(pat, path):
+                return name
+        return self.default
+
+    def build(self, layout: wire.WireLayout) -> "WirePlan":
+        return WirePlan.from_slot_codecs(
+            layout, tuple(self.codec_for_path(s.path) for s in layout.slots))
+
+    # -- controller support ----------------------------------------------
+    @property
+    def hot_codec(self) -> str:
+        """The spec's highest-fidelity codec over rule names + default.
+
+        Layout-independent and therefore only an upper-bound proxy: a rule
+        (or the default) may match no slot of a concrete layout.  Anything
+        driving a BUILT plan (the adaptive controller's trainer loop) must
+        use ``WirePlan.hot_codec`` — the max over codecs that actually
+        ship — and pass it to :meth:`with_hot_tier` as ``hot``.
+        """
+        names = {name for _, name in self.rules} | {self.default}
+        return max(names, key=lambda n: (wire_codec.by_name(n).code_max,
+                                         wire_codec.by_name(n).payload_width()))
+
+    def with_hot_tier(self, name: str, hot: str | None = None) -> "PlanSpec":
+        """Re-tier the hot slots: every rule (and the default) currently
+        assigning the hot codec now assigns ``name``; cold rules pinned.
+        ``hot`` (usually the BUILT plan's ``WirePlan.hot_codec``) overrides
+        the layout-independent spec-level proxy so the rewritten rules are
+        exactly the ones whose codec actually ships — a rule matching no
+        slot cannot silently absorb the re-tier."""
+        _check_codec_name(name)
+        hot = self.hot_codec if hot is None else hot
+        rules = tuple((p, name if n == hot else n) for p, n in self.rules)
+        default = name if self.default == hot else self.default
+        return PlanSpec(rules=rules, default=default)
+
+
+def _pattern_matches(pat: str, path: str) -> bool:
+    if pat == "*":
+        return True
+    if any(c in pat for c in "*?["):
+        return fnmatchcase(path, pat)
+    return pat in path
+
+
+def parse_spec(spec: str) -> PlanSpec:
+    """Parse a ``wire_codec`` string: a bare codec name (uniform plan) or
+    ``mixed:pattern=codec,...`` (first match wins; ``*=codec`` or a
+    trailing ``default=codec`` sets the fallback, else int8)."""
+    if not isinstance(spec, str):
+        raise ValueError(f"wire plan spec must be a string, got {spec!r}")
+    if not spec.startswith(_MIXED_PREFIX):
+        try:
+            wire_codec.by_name(spec)
+        except KeyError:
+            raise ValueError(
+                f"wire_codec must be a codec name "
+                f"{wire_codec.CODEC_NAMES} or a 'mixed:<rules>' plan spec, "
+                f"got {spec!r}") from None
+        return PlanSpec(rules=(), default=spec)
+    body = spec[len(_MIXED_PREFIX):]
+    rules: list[tuple[str, str]] = []
+    default = None
+    for item in body.split(","):
+        item = item.strip()
+        if not item:
+            continue
+        if "=" not in item:
+            raise ValueError(
+                f"wire_codec plan rule {item!r} is not 'pattern=codec' "
+                f"(spec {spec!r})")
+        pat, _, name = item.partition("=")
+        pat, name = pat.strip(), name.strip()
+        try:
+            wire_codec.by_name(name)
+        except KeyError:
+            raise ValueError(
+                f"wire_codec plan rule {item!r} names unknown codec "
+                f"{name!r}; have {wire_codec.CODEC_NAMES}") from None
+        if pat in ("*", "default"):
+            if default is not None:
+                raise ValueError(
+                    f"wire_codec plan spec {spec!r} has two default rules")
+            default = name
+        else:
+            rules.append((pat, name))
+    if not rules and default is None:
+        raise ValueError(f"wire_codec plan spec {spec!r} has no rules")
+    return PlanSpec(rules=tuple(rules), default=default or "int8")
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous payload geometry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CodecRun:
+    """A maximal contiguous row range sharing one codec (all static)."""
+
+    codec: str
+    row_start: int
+    n_rows: int
+    byte_start: int              # prefix sum of preceding runs' payloads
+
+    @property
+    def row_end(self) -> int:
+        return self.row_start + self.n_rows
+
+
+@dataclasses.dataclass(frozen=True)
+class Fragment:
+    """One contiguous single-codec row range of a transfer — either a whole
+    run (packed transport) or a pipeline chunk's slice of a run."""
+
+    codec: str
+    row_start: int
+    n_rows: int
+    byte_start: int              # absolute offset in the full flat payload
+
+    @property
+    def row_end(self) -> int:
+        return self.row_start + self.n_rows
+
+
+@dataclasses.dataclass(frozen=True)
+class TransferUnit:
+    """What one ring ``ppermute`` carries: >= 1 contiguous fragments whose
+    flattened payloads concatenate into one 1-D uint8 buffer.  The packed
+    transport uses ONE unit holding every run; the pipelined transport uses
+    one unit per chunk (each a single fragment)."""
+
+    fragments: tuple[Fragment, ...]
+
+    @property
+    def row_start(self) -> int:
+        return self.fragments[0].row_start
+
+    @property
+    def row_end(self) -> int:
+        return self.fragments[-1].row_end
+
+    @property
+    def n_rows(self) -> int:
+        return self.row_end - self.row_start
+
+    @property
+    def byte_start(self) -> int:
+        return self.fragments[0].byte_start
+
+
+@dataclasses.dataclass(frozen=True)
+class WirePlan:
+    """A WireLayout bound to one codec per leaf slot (hashable; static).
+
+    Geometry invariants (tests/test_wireplan.py):
+      * runs are contiguous, cover ``[0, layout.n_rows)``, and merge
+        adjacent same-codec slots (the TILE_N alignment tail extends the
+        last run — padding rows encode to zero payload under every codec);
+      * ``run.byte_start`` is the prefix sum of preceding runs'
+        ``n_rows * payload_width`` — the flat-payload addressing the
+        packed transport's single ``ppermute`` relies on;
+      * no pipeline chunk straddles a codec run.
+    """
+
+    layout: wire.WireLayout
+    slot_codecs: tuple[str, ...]
+    runs: tuple[CodecRun, ...]
+
+    # -- construction ----------------------------------------------------
+    @classmethod
+    def from_slot_codecs(cls, layout: wire.WireLayout,
+                         slot_codecs: tuple[str, ...]) -> "WirePlan":
+        if len(slot_codecs) != len(layout.slots):
+            raise ValueError(
+                f"{len(slot_codecs)} slot codecs != {len(layout.slots)} "
+                "layout slots")
+        for name in slot_codecs:
+            _check_codec_name(name)
+        runs: list[CodecRun] = []
+        byte = 0
+        for slot, name in zip(layout.slots, slot_codecs):
+            if runs and runs[-1].codec == name:
+                prev = runs[-1]
+                runs[-1] = CodecRun(codec=name, row_start=prev.row_start,
+                                    n_rows=prev.n_rows + slot.n_rows,
+                                    byte_start=prev.byte_start)
+            else:
+                runs.append(CodecRun(codec=name, row_start=slot.row_start,
+                                     n_rows=slot.n_rows, byte_start=byte))
+            byte = (runs[-1].byte_start + runs[-1].n_rows
+                    * wire_codec.by_name(name).payload_width(layout.block))
+        if not runs:                                # empty tree: one run
+            runs.append(CodecRun(codec="int8", row_start=0, n_rows=0,
+                                 byte_start=0))
+        # TILE_N alignment tail rides on the last run (zero rows encode to
+        # zero payload under every codec, same as leaf padding rows)
+        tail = layout.n_rows - runs[-1].row_end
+        if tail:
+            last = runs[-1]
+            runs[-1] = CodecRun(codec=last.codec, row_start=last.row_start,
+                                n_rows=last.n_rows + tail,
+                                byte_start=last.byte_start)
+        return cls(layout=layout, slot_codecs=tuple(slot_codecs),
+                   runs=tuple(runs))
+
+    @classmethod
+    def uniform(cls, layout: wire.WireLayout, name: str) -> "WirePlan":
+        return cls.from_slot_codecs(layout, (name,) * len(layout.slots))
+
+    @classmethod
+    def from_rules(cls, layout: wire.WireLayout,
+                   rules: list | tuple, default: str = "int8") -> "WirePlan":
+        """Programmatic :func:`parse_spec`: ordered ``(pattern, codec)``
+        pairs matched against leaf path names, first match wins."""
+        return PlanSpec(rules=tuple((p, n) for p, n in rules),
+                        default=default).build(layout)
+
+    # -- static geometry --------------------------------------------------
+    @property
+    def n_runs(self) -> int:
+        return len(self.runs)
+
+    @property
+    def is_uniform(self) -> bool:
+        return len({r.codec for r in self.runs}) <= 1
+
+    def run_width(self, run: CodecRun) -> int:
+        return wire_codec.by_name(run.codec).payload_width(self.layout.block)
+
+    @property
+    def payload_bytes(self) -> int:
+        """Flat wire bytes of one encoded buffer (one ring direction)."""
+        last = self.runs[-1]
+        return last.byte_start + last.n_rows * self.run_width(last)
+
+    def noise_cols(self, block: int | None = None) -> int:
+        """Columns of the shared uniform-noise buffer: the max any codec in
+        the plan consumes; each run's kernels read their leading columns
+        in place (kernels/bitpack.py)."""
+        block = self.layout.block if block is None else block
+        return max(wire_codec.by_name(n).noise_cols(block)
+                   for n in {r.codec for r in self.runs})
+
+    def codes_total(self, block: int | None = None) -> int:
+        """Transmitted codes per encoded buffer (clip-fraction denominator)."""
+        block = self.layout.block if block is None else block
+        return sum(r.n_rows * wire_codec.by_name(r.codec).codes_per_row(block)
+                   for r in self.runs)
+
+    # -- controller support -----------------------------------------------
+    @property
+    def hot_codec(self) -> str:
+        """Highest-fidelity codec in the plan (the adaptive controller's
+        shiftable tier; all other slots are pinned 'cold')."""
+        names = {r.codec for r in self.runs}
+        return max(names, key=lambda n: (wire_codec.by_name(n).code_max,
+                                         wire_codec.by_name(n)
+                                         .payload_width(self.layout.block)))
+
+    def retier_hot(self, name: str) -> "WirePlan":
+        """The candidate plan with hot slots shifted to ``name`` and cold
+        slots pinned (AdaptiveBitController plan mode)."""
+        hot = self.hot_codec
+        return WirePlan.from_slot_codecs(
+            self.layout,
+            tuple(name if c == hot else c for c in self.slot_codecs))
+
+    # -- chunking: pipeline bounds never straddle a codec run --------------
+    def _run_pieces(self, run: CodecRun, tile: int) -> list[tuple[int, int]]:
+        """The run's indivisible (row_start, n_rows) pieces, split at
+        absolute TILE_N boundaries: pieces are the finest chunking that
+        keeps tile-aligned runs Pallas-launchable chunk views."""
+        if run.n_rows == 0:
+            return []
+        pts = [run.row_start]
+        t = (run.row_start // tile + 1) * tile
+        while t < run.row_end:
+            pts.append(t)
+            t += tile
+        pts.append(run.row_end)
+        return [(pts[i], pts[i + 1] - pts[i]) for i in range(len(pts) - 1)]
+
+    def chunk_bounds(self, pipeline_chunks: int,
+                     tile: int = kops.TILE_N) -> tuple[tuple[int, int], ...]:
+        """Static (row_start, n_rows) pipeline chunk bounds.
+
+        Every chunk lies inside ONE codec run (boundaries snap to run
+        edges), run interiors split on tile boundaries, and the chunk
+        budget is spread over runs proportionally to their row counts
+        (every run gets at least one chunk; the requested count clamps to
+        the available piece count).  A uniform plan reproduces
+        :meth:`repro.core.wire.ChunkedLayout.split` bounds exactly.
+        """
+        if pipeline_chunks < 1:
+            raise ValueError(f"pipeline_chunks must be >= 1, got "
+                             f"{pipeline_chunks}")
+        live = [r for r in self.runs if r.n_rows > 0]
+        pieces = {id(r): self._run_pieces(r, tile) for r in live}
+        counts = {id(r): 1 for r in live}
+        budget = pipeline_chunks - len(live)
+        while budget > 0:
+            # grow the run with the largest rows-per-chunk that can still
+            # be subdivided (deterministic: ties break to the earlier run)
+            best = None
+            for r in live:
+                if counts[id(r)] >= len(pieces[id(r)]):
+                    continue
+                key = r.n_rows / counts[id(r)]
+                if best is None or key > best[0]:
+                    best = (key, r)
+            if best is None:
+                break
+            counts[id(best[1])] += 1
+            budget -= 1
+        bounds: list[tuple[int, int]] = []
+        for r in live:
+            ps = pieces[id(r)]
+            c = counts[id(r)]
+            base, rem = divmod(len(ps), c)
+            i = 0
+            for j in range(c):
+                take = base + (1 if j < rem else 0)
+                seg = ps[i:i + take]
+                i += take
+                bounds.append((seg[0][0], sum(n for _, n in seg)))
+        return tuple(bounds)
+
+    def transfer_units(self, pipeline_chunks: int | None = None,
+                       tile: int = kops.TILE_N) -> tuple[TransferUnit, ...]:
+        """The ring transfers of one exchange step.
+
+        ``None`` (the packed transport): ONE unit carrying every run as a
+        fragment — the whole heterogeneous payload concatenates into one
+        flat buffer and a single ``ppermute`` per ring direction moves it.
+        An int ``pipeline_chunks``: one single-fragment unit per chunk
+        (chunks never straddle runs, so each unit's payload keeps one
+        uniform row width on the wire).
+        """
+        if pipeline_chunks is None:
+            frags = tuple(f for r in self.runs if r.n_rows > 0
+                          for f in self._run_fragments(r, tile))
+            return (TransferUnit(fragments=frags),)
+        units = []
+        for start, rows in self.chunk_bounds(pipeline_chunks, tile):
+            run = self.run_at(start)
+            width = self.run_width(run)
+            frag = Fragment(codec=run.codec, row_start=start, n_rows=rows,
+                            byte_start=run.byte_start
+                            + (start - run.row_start) * width)
+            units.append(TransferUnit(fragments=(frag,)))
+        return tuple(units)
+
+    def _run_fragments(self, run: CodecRun, tile: int) -> list[Fragment]:
+        """A run as 1-3 contiguous fragments: ragged head up to the first
+        TILE_N boundary, the tile-aligned interior, ragged tail.  Mixed
+        plans put codec-run edges at leaf boundaries (row-granular), and
+        only tile-aligned views launch as Pallas grids (kernels/ops.py
+        falls back to the jnp refs otherwise) — splitting here keeps the
+        kernels on every aligned row instead of dropping them for the
+        whole run.  An aligned run stays ONE fragment (the uniform packed
+        path keeps its single grouped launch)."""
+        width = self.run_width(run)
+
+        def frag(start: int, rows: int) -> Fragment:
+            return Fragment(codec=run.codec, row_start=start, n_rows=rows,
+                            byte_start=run.byte_start
+                            + (start - run.row_start) * width)
+
+        start, end = run.row_start, run.row_end
+        head_end = min(-(-start // tile) * tile, end)
+        mid_end = max((end // tile) * tile, head_end)
+        out = []
+        if head_end > start:
+            out.append(frag(start, head_end - start))
+        if mid_end > head_end:
+            out.append(frag(head_end, mid_end - head_end))
+        if end > mid_end:
+            out.append(frag(mid_end, end - mid_end))
+        return out
+
+    def n_chunks(self, pipeline_chunks: int) -> int:
+        """Effective pipelined chunk count (>= n_runs, clamped to the
+        available tile pieces)."""
+        return len(self.chunk_bounds(pipeline_chunks))
+
+    def run_at(self, row: int) -> CodecRun:
+        for r in self.runs:
+            if r.row_start <= row < r.row_end or (r.n_rows == 0
+                                                  and row == r.row_start):
+                return r
+        raise ValueError(f"row {row} outside plan rows "
+                         f"[0, {self.layout.n_rows})")
+
+    # -- wire transformation ----------------------------------------------
+    def encode_fragment(self, frag: Fragment, y, noise, fixed_step=None,
+                        use_pallas: bool = False):
+        """One grouped launch for a fragment's contiguous row range:
+        (full-height y, noise) -> (frag.n_rows, width) uint8."""
+        cd = wire_codec.by_name(frag.codec)
+        return cd.encode_payload(y, noise, fixed_step=fixed_step,
+                                 use_pallas=use_pallas,
+                                 row_offset=frag.row_start,
+                                 n_rows=frag.n_rows)
+
+    def encode_unit(self, unit: TransferUnit, y, noise, fixed_step=None,
+                    use_pallas: bool = False):
+        """Encode every fragment of a transfer unit and concatenate the
+        flattened payloads into the unit's 1-D wire buffer."""
+        return wire.lift_concat(
+            [self.encode_fragment(f, y, noise, fixed_step=fixed_step,
+                                  use_pallas=use_pallas).reshape(-1)
+             for f in unit.fragments])
+
+    def encode(self, y, noise, fixed_step=None, use_pallas: bool = False):
+        """The whole buffer as one flat payload (the packed transport's
+        single-``ppermute`` wire image)."""
+        return self.encode_unit(self.transfer_units(None)[0], y, noise,
+                                fixed_step=fixed_step, use_pallas=use_pallas)
+
+    def fragment_payload(self, payload_1d, frag: Fragment,
+                         base_byte: int = 0):
+        """A fragment's (n_rows, width) uint8 view of a flat unit payload."""
+        width = wire_codec.by_name(frag.codec).payload_width(self.layout.block)
+        start = frag.byte_start - base_byte
+        seg = jax.lax.slice_in_dim(payload_1d, start,
+                                   start + frag.n_rows * width)
+        return seg.reshape(frag.n_rows, width)
+
+    def decode_dense(self, payload_1d):
+        """Flat payload -> dense (n_rows, block) f32 (jnp path: tests, the
+        reference-algorithm wire, offline tools)."""
+        unit = self.transfer_units(None)[0]
+        return wire.lift_concat(
+            [wire_codec.by_name(f.codec).decode_payload(
+                self.fragment_payload(payload_1d, f), self.layout.block)
+             for f in unit.fragments])
+
+    def count_saturated(self, y, fixed_step, payload_1d):
+        """Plan-wide grid-saturation census (the overflow_frac numerator):
+        per-run codec semantics, summed (integer counts, so run sums are
+        exact)."""
+        total = jnp.zeros((), jnp.float32)
+        for f in self.transfer_units(None)[0].fragments:
+            cd = wire_codec.by_name(f.codec)
+            y_f = jax.lax.slice_in_dim(y, f.row_start, f.row_end)
+            total = total + cd.count_saturated(
+                y_f, fixed_step, self.fragment_payload(payload_1d, f),
+                self.layout.block)
+        return total
+
+
+# ---------------------------------------------------------------------------
+# Reference-algorithm adapter: the gossip wire of CHOCO / ADC references
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class WirePlanCompressor(Compressor):
+    """A :class:`WirePlan` as a reference :class:`Compressor`.
+
+    ``apply(key, z)`` packs the flat iterate into the plan's layout,
+    encodes it to the plan's heterogeneous wire payload, and decodes back —
+    ``decode(encode(z))`` IS the value the receiver reconstructs, so the
+    single-process algorithms (``ADCDGD``, ``CHOCOGossip``) exchange
+    exactly the bytes the packed transport would ship.  ``wire_bytes``
+    reports the plan's true flat payload size, which makes
+    ``choco_vs_adc`` an equal-bytes comparison by construction.
+
+    Adaptive (per-row absmax) scaling is used — every plan codec is an
+    unbiased compressor in that mode (Definition 1), so the references'
+    convergence theory applies unchanged.
+    """
+
+    plan: WirePlan
+
+    def apply(self, key, z):
+        layout = self.plan.layout
+        if z.shape != (layout.n_elements,):
+            raise ValueError(f"iterate shape {z.shape} != "
+                             f"({layout.n_elements},) for this plan")
+        zf = z.astype(jnp.float32)
+        leaves, off = [], 0
+        for slot in layout.slots:
+            leaves.append(jax.lax.slice_in_dim(zf, off, off + slot.size)
+                          .reshape(slot.shape))
+            off += slot.size
+        tree = jax.tree_util.tree_unflatten(layout.treedef, leaves)
+        buf = layout.pack(tree)
+        noise = jax.random.uniform(
+            key, (layout.n_rows, self.plan.noise_cols()), jnp.float32)
+        dense = self.plan.decode_dense(self.plan.encode(buf, noise))
+        back = layout.unpack(dense, cast=False)
+        flat = jnp.concatenate([l.reshape(-1) for l in
+                                jax.tree_util.tree_leaves(back)])
+        return flat.astype(z.dtype)
+
+    def wire_bytes(self, n_elements: int) -> float:
+        if n_elements != self.plan.layout.n_elements:
+            raise ValueError(
+                f"problem dim {n_elements} != plan elements "
+                f"{self.plan.layout.n_elements}")
+        return float(self.plan.payload_bytes)

@@ -328,7 +328,10 @@ def _encode_pallas(core, width, noise_cols, y, noise, fixed_step,
         interpret = default_interpret()
     n_full, b = y.shape
     assert b % 128 == 0, f"block {b} must be lane-aligned (x128)"
-    assert noise.shape[1] == noise_cols, (noise.shape, noise_cols)
+    # >= not ==: mixed WirePlans share ONE noise buffer sized for the
+    # widest codec in the plan (core.wireplan.noise_cols); the BlockSpec
+    # below reads this codec's leading noise_cols columns in place
+    assert noise.shape[1] >= noise_cols, (noise.shape, noise_cols)
     n, tile_off = _chunk_view(n_full, n_rows, row_offset)
     grid = (n // TILE_N,)
     y_spec = pl.BlockSpec((TILE_N, b), _row_index_map(y.shape[0], n, tile_off))

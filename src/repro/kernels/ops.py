@@ -109,6 +109,25 @@ def _chunk_rows(a: jax.Array, row_offset: int, n_rows: int | None):
     return jax.lax.slice_in_dim(a, row_offset, row_offset + n_rows, axis=0)
 
 
+def _tile_aligned(n_full: int, row_offset: int, n_rows: int | None) -> bool:
+    """Whether a chunk view is launchable as a Pallas grid (TILE_N-aligned
+    offset and height).  Mixed WirePlans produce row-granular codec runs at
+    leaf boundaries; unaligned runs take the bit-identical jnp reference
+    path instead (ref == pallas is pinned by tests/test_codec.py)."""
+    n = n_full if n_rows is None else n_rows
+    return row_offset % TILE_N == 0 and n % TILE_N == 0 and n > 0
+
+
+def _noise_lead(noise: jax.Array, cols: int) -> jax.Array:
+    """The leading noise columns a codec consumes: mixed WirePlans share
+    one noise buffer sized for the plan's widest codec; the jnp refs need
+    the exact column count (the Pallas launches read the leading columns
+    in place via their BlockSpecs)."""
+    if noise.shape[1] == cols:
+        return noise
+    return jax.lax.slice_in_dim(noise, 0, cols, axis=1)
+
+
 def quantize_payload(y_blocks: jax.Array, noise: jax.Array,
                      fixed_step=None, use_pallas: bool = False,
                      row_offset: int = 0,
@@ -120,12 +139,14 @@ def quantize_payload(y_blocks: jax.Array, noise: jax.Array,
     full-height operands (the pipelined exchange unit): the Pallas path
     reads the chunk in-kernel via BlockSpec index offsets, the jnp path
     takes a static slice; both emit only the chunk's payload rows."""
-    if use_pallas and not _vma_carrying(y_blocks, noise):
+    if use_pallas and not _vma_carrying(y_blocks, noise) \
+            and _tile_aligned(y_blocks.shape[0], row_offset, n_rows):
         return quantize_payload_pallas(y_blocks, noise, fixed_step=fixed_step,
                                        row_offset=row_offset, n_rows=n_rows)
     codes, scales = ref.quantize_blocks_ref(
         _chunk_rows(y_blocks, row_offset, n_rows),
-        _chunk_rows(noise, row_offset, n_rows), fixed_step=fixed_step)
+        _chunk_rows(_noise_lead(noise, y_blocks.shape[1]), row_offset,
+                    n_rows), fixed_step=fixed_step)
     return pack_payload(codes, scales)
 
 
@@ -140,14 +161,15 @@ def subbyte_encode_payload(y_blocks: jax.Array, noise: jax.Array,
     """Bit-packed sub-byte quantize-to-wire: (rows, BLOCK) f32 ->
     (rows, BLOCK // (8 // code_bits) + 2) uint8 (packed codes || bf16
     scale).  Same chunk-view contract as :func:`quantize_payload`."""
-    if use_pallas and not _vma_carrying(y_blocks, noise):
+    if use_pallas and not _vma_carrying(y_blocks, noise) \
+            and _tile_aligned(y_blocks.shape[0], row_offset, n_rows):
         return bitpack.subbyte_encode_pallas(
             y_blocks, noise, code_bits, fixed_step=fixed_step,
             row_offset=row_offset, n_rows=n_rows)
     return bitpack.subbyte_encode_ref(
         _chunk_rows(y_blocks, row_offset, n_rows),
-        _chunk_rows(noise, row_offset, n_rows), code_bits,
-        fixed_step=fixed_step)
+        _chunk_rows(_noise_lead(noise, y_blocks.shape[1]), row_offset,
+                    n_rows), code_bits, fixed_step=fixed_step)
 
 
 def subbyte_decode_payload(payload: jax.Array, code_bits: int,
@@ -178,7 +200,8 @@ def subbyte_decode_combine(payload_self, payload_left, payload_right,
                            row_offset: int = 0, n_rows: int | None = None):
     """Sub-byte receive side (unpack + shadow update + combine fused);
     same chunk-view contract as :func:`dequant_combine_payload`."""
-    if use_pallas and not _vma_carrying(payload_self, x_tilde, m_agg):
+    if use_pallas and not _vma_carrying(payload_self, x_tilde, m_agg) \
+            and _tile_aligned(x_tilde.shape[0], row_offset, n_rows):
         return bitpack.subbyte_combine_pallas(
             payload_self, payload_left, payload_right, x_tilde, m_agg,
             w_self, w_side, deamp, code_bits, row_offset=row_offset,
@@ -197,13 +220,15 @@ def topk_encode_payload(y_blocks: jax.Array, noise: jax.Array, k: int,
     noise -> (rows, BLOCK // 8 + k + 2) uint8 (bitmap || int8 values ||
     bf16 scale).  Noise columns [0, BLOCK) drive the magnitude-proportional
     selection, [BLOCK, BLOCK + k) the value rounding."""
-    if use_pallas and not _vma_carrying(y_blocks, noise):
+    if use_pallas and not _vma_carrying(y_blocks, noise) \
+            and _tile_aligned(y_blocks.shape[0], row_offset, n_rows):
         return bitpack.topk_encode_pallas(
             y_blocks, noise, k, fixed_step=fixed_step,
             row_offset=row_offset, n_rows=n_rows)
     return bitpack.topk_encode_ref(
         _chunk_rows(y_blocks, row_offset, n_rows),
-        _chunk_rows(noise, row_offset, n_rows), k, fixed_step=fixed_step)
+        _chunk_rows(_noise_lead(noise, 2 * y_blocks.shape[1]), row_offset,
+                    n_rows), k, fixed_step=fixed_step)
 
 
 def topk_decode_payload(payload: jax.Array, k: int,
@@ -218,7 +243,8 @@ def topk_decode_combine(payload_self, payload_left, payload_right,
                         n_rows: int | None = None):
     """Top-k receive side (bitmap scatter + shadow update + combine fused);
     same chunk-view contract as :func:`dequant_combine_payload`."""
-    if use_pallas and not _vma_carrying(payload_self, x_tilde, m_agg):
+    if use_pallas and not _vma_carrying(payload_self, x_tilde, m_agg) \
+            and _tile_aligned(x_tilde.shape[0], row_offset, n_rows):
         return bitpack.topk_combine_pallas(
             payload_self, payload_left, payload_right, x_tilde, m_agg,
             w_self, w_side, deamp, k, row_offset=row_offset, n_rows=n_rows)
@@ -265,7 +291,8 @@ def dequant_combine_payload(payload_self, payload_left, payload_right,
     resync-rebuilt m_agg slice) are used as-is, full-height persistent
     shadows are viewed at the chunk offset; all three results come back
     chunk-height."""
-    if use_pallas and not _vma_carrying(payload_self, x_tilde, m_agg):
+    if use_pallas and not _vma_carrying(payload_self, x_tilde, m_agg) \
+            and _tile_aligned(x_tilde.shape[0], row_offset, n_rows):
         return dequant_combine_payload_pallas(
             payload_self, payload_left, payload_right, x_tilde, m_agg,
             w_self, w_side, deamp, row_offset=row_offset, n_rows=n_rows)

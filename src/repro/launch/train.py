@@ -185,7 +185,7 @@ def build_train_setup(
     schedule_period: int = 1,              # steps between ring re-wirings
     wire_packing: str = "packed",          # packed | pipelined | per_leaf
     pipeline_chunks: int = 4,              # chunks for wire_packing="pipelined"
-    wire_codec: str = "int8",              # int8 | int4 | int2 | topk
+    wire_codec: str = "int8",              # codec name | "mixed:..." plan spec
     byte_budget: float | None = None,      # bytes/step target (controller)
     seed: int = 0,                         # consensus quantization-noise seed
 ) -> TrainSetup:
@@ -389,7 +389,16 @@ def main(argv=None):
                          "codecs); 'adaptive' hands the choice to the "
                          "AdaptiveBitController, which re-selects the bit "
                          "budget every --codec-period steps from residual/"
-                         "overflow feedback and --byte-budget")
+                         "overflow/consensus-error feedback and "
+                         "--byte-budget")
+    ap.add_argument("--wire-plan", default=None,
+                    help="wire-plan spec (DESIGN.md §Wire plans): a codec "
+                         "name or 'mixed:pattern=codec,...' mapping leaf "
+                         "paths to codecs, e.g. "
+                         "'mixed:norm=int2,embed=int4,*=int8'.  Overrides "
+                         "--wire-codec; with --wire-codec adaptive the "
+                         "controller shifts the plan's hot-slot tier and "
+                         "pins the cold slots")
     ap.add_argument("--byte-budget", type=float, default=None,
                     help="bytes/step ring budget (both directions) for the "
                          "adaptive controller's candidate filter")
@@ -433,8 +442,28 @@ def main(argv=None):
                 track_consensus_error=(args.algorithm != "allreduce"))
         return setups[codec_name]
 
+    from repro.core import wireplan
+    plan_spec = (wireplan.parse_spec(args.wire_plan)
+                 if args.wire_plan else None)
+
+    def spec_for(tier: str) -> str:
+        """Map a controller ladder tier to the wire_codec string the setup
+        is built with (plan mode: shift the hot slots, pin the cold).
+        The hot codec comes from the BUILT plan when the controller holds
+        one — a spec rule that matches no slot of the real layout must not
+        absorb the re-tier while the shipped slots stay pinned."""
+        if plan_spec is None:
+            return tier
+        hot = (controller.plan.hot_codec
+               if controller is not None and controller.plan is not None
+               else None)
+        return plan_spec.with_hot_tier(tier, hot=hot).to_string()
+
     controller = None
+    n_elements_global = None
     codec_name = args.wire_codec
+    if plan_spec is not None and args.wire_codec != "adaptive":
+        codec_name = plan_spec.to_string()
     if args.wire_codec == "adaptive":
         from repro.core.codec import AdaptiveBitController
         if args.algorithm != "adc_dgd":
@@ -446,10 +475,17 @@ def main(argv=None):
                              "pipelined transport (per_leaf is int8-only)")
         probe_ctx = make_context(mesh, args.nodes)
         probe_defs = T.build_defs(cfg, probe_ctx)
-        n_rows = consensus_wire_layout(probe_defs, probe_ctx).n_rows
+        probe_layout = consensus_wire_layout(probe_defs, probe_ctx)
+        n_rows = probe_layout.n_rows
+        n_elements_global = (probe_layout.n_elements * probe_ctx.fsdp
+                             * probe_ctx.tp)
         controller = AdaptiveBitController(byte_budget=args.byte_budget,
                                            gamma=args.gamma)
-        codec_name = controller.initial(n_rows)
+        if plan_spec is not None and not plan_spec.is_uniform:
+            # plan mode: candidates re-tier the hot slots of this plan
+            controller.plan = plan_spec.build(probe_layout)
+        tier = controller.initial(n_rows)
+        codec_name = spec_for(tier)
         print(f"[codec] controller start: {codec_name} "
               f"(budget={args.byte_budget})")
 
@@ -462,26 +498,36 @@ def main(argv=None):
                             n_shards=setup.ctx.dp, **ds_kw)
 
     t0 = time.time()
-    ep_res, ep_ovf = [], []
+    ep_res, ep_ovf, ep_ce = [], [], []
     for step in range(args.steps):
         batch = jax.device_put(ds.global_batch_arrays(step), setup.batch_sharding)
         state, metrics = setup.train_step(state, batch)
         if controller is not None:
             ep_res.append(float(metrics["residual_norm"]))
             ep_ovf.append(float(metrics["overflow_frac"]))
+            if "consensus_err" in metrics:
+                # squared disagreement summed over shards -> per-element
+                # RMS, the scale target()'s fidelity need works on
+                ep_ce.append(float(np.sqrt(
+                    max(float(metrics["consensus_err"]), 0.0)
+                    / max(n_elements_global, 1))))
             if (step + 1) % args.codec_period == 0:
-                new = controller.select(
+                tier = controller.select(
                     next_step=step + 2,
                     residual_rms=float(np.mean(ep_res)),
                     overflow_frac=float(np.mean(ep_ovf)),
-                    n_rows=n_rows)
+                    n_rows=n_rows,
+                    consensus_err=(float(np.mean(ep_ce)) if ep_ce else None))
+                new = spec_for(tier)
                 if new != codec_name:
                     print(f"[codec] step {step + 1}: {codec_name} -> {new} "
                           f"(residual_rms={np.mean(ep_res):.3g}, "
-                          f"overflow={np.mean(ep_ovf):.3g})")
+                          f"overflow={np.mean(ep_ovf):.3g}"
+                          + (f", consensus_rms={np.mean(ep_ce):.3g}"
+                             if ep_ce else "") + ")")
                     codec_name = new
                     setup = setup_for(new)
-                ep_res, ep_ovf = [], []
+                ep_res, ep_ovf, ep_ce = [], [], []
         if step % max(1, args.steps // 10) == 0 or step == args.steps - 1:
             m = jax.tree.map(float, metrics)
             extra = " ".join(f"{k}={v:.4g}" for k, v in m.items() if k != "loss")

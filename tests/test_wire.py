@@ -290,13 +290,13 @@ def run_sub(body: str, timeout: int = 1500) -> dict:
         def shared_noise(rt, xh, k):
             # one uniform buffer from the device-folded key, injected into
             # BOTH wire paths so the transformation is compared bit-for-bit
-            # (column count is codec-specific: top-k consumes a second
+            # (column count is plan-specific: top-k consumes a second
             # BLOCK-wide region for its selection race)
             layout = wire.WireLayout.for_tree(xh)
             dk = _device_key(jax.random.fold_in(jax.random.PRNGKey(7), k),
                              rt.ctx)
             return jax.random.uniform(
-                dk, (layout.n_rows, rt.codec.noise_cols(layout.block)),
+                dk, (layout.n_rows, rt.noise_cols_for(layout)),
                 jnp.float32)
 
         def build(rt, tree):
@@ -534,6 +534,67 @@ print("RESULT", json.dumps(out))
     assert len(r) == 2 * 4
     for k, v in r.items():
         assert v == 0.0, f"{codec_name}/{k}: pipelined vs packed diff {v}"
+
+
+def test_mixed_plan_packed_and_pipelined_bit_identical():
+    """Acceptance (DESIGN.md §Wire plans): a mixed per-leaf plan (norms ->
+    int2, one leaf -> int4, projections -> int8) runs end-to-end through
+    BOTH the packed and pipelined transports, bit-identically across chunk
+    counts {1, 2, 4, 7} for adaptive and fixed quantization; the packed
+    transport still traces EXACTLY 2 ring ppermutes (one flat
+    heterogeneous payload per direction); pipeline chunk counts never drop
+    below the plan's codec-run count (chunks never straddle a codec
+    change); and the plan ships strictly fewer wire bytes/step than
+    uniform int8."""
+    body = """
+import sys
+sys.path.insert(0, os.path.join(%r, "benchmarks"))
+from consensus_step import count_eqns
+
+MIX = "mixed:scalar=int2,deep=int2,['b']=int4,*=int8"
+tree = make_tree(jax.random.PRNGKey(5), big=150000)
+local = jax.tree.map(lambda a: a[0], tree)
+layout = wire.WireLayout.for_tree(local)
+out = {"n_tiles": layout.n_rows // 32}
+int8_rt = ConsensusRuntime(ConsensusConfig(algorithm="adc_dgd"), ctx)
+out["bytes_int8"] = int8_rt.wire_bytes_per_step(layout.n_elements,
+                                                layout=layout)
+rt = ConsensusRuntime(ConsensusConfig(algorithm="adc_dgd",
+                                      wire_codec=MIX), ctx)
+out["bytes_mixed"] = rt.wire_bytes_per_step(layout.n_elements, layout=layout)
+out["n_runs"] = rt.wire_plan_for(layout).n_runs
+init_f, step_f = build(rt, tree)
+st = init_f(tree)
+jaxpr = jax.make_jaxpr(step_f)(tree, tree, st, jnp.asarray(2, jnp.int32))
+out["pp_packed"] = count_eqns(jaxpr, "ppermute")
+for qm in ("adaptive", "fixed"):
+    kw = dict(algorithm="adc_dgd", quant_mode=qm, fixed_step0=1e-2,
+              wire_codec=MIX)
+    ref = trajectory({**kw, "wire_packing": "packed"}, tree, steps=4)
+    for chunks in (1, 2, 4, 7):
+        prt = ConsensusRuntime(
+            ConsensusConfig(**kw, wire_packing="pipelined",
+                            pipeline_chunks=chunks), ctx)
+        out[f"eff_{qm}_{chunks}"] = prt.pipeline_chunks_for(layout)
+        got = trajectory({**kw, "wire_packing": "pipelined",
+                          "pipeline_chunks": chunks}, tree, steps=4)
+        out[f"{qm}_c{chunks}"] = max_diff(got, ref)
+print("RESULT", json.dumps(out))
+""" % REPO
+    r = run_sub(body)
+    assert r.pop("n_tiles") >= 8
+    n_runs = r.pop("n_runs")
+    assert n_runs >= 3                      # a genuinely heterogeneous plan
+    assert r.pop("pp_packed") == 2          # one flat payload per direction
+    assert r.pop("bytes_mixed") < r.pop("bytes_int8")
+    for qm in ("adaptive", "fixed"):
+        for chunks in (1, 2, 4, 7):
+            # snapped chunk counts: each codec run needs >= 1 chunk, and
+            # this tree's int8 run has tiles to spare for the budget
+            assert r.pop(f"eff_{qm}_{chunks}") == max(chunks, n_runs)
+    assert len(r) == 2 * 4
+    for k, v in r.items():
+        assert v == 0.0, f"mixed-plan {k}: pipelined vs packed diff {v}"
 
 
 def test_pipelined_collectives_scale_with_chunks():

@@ -1,0 +1,426 @@
+"""WirePlan subsystem (core.wireplan): per-leaf mixed-precision codec maps.
+
+Covered invariants:
+  * plan-spec grammar: bare codec names normalize to uniform plans
+    (back-compat shim), "mixed:<rules>" parses/round-trips, junk raises
+  * slot -> codec resolution: first matching rule wins, substring and
+    glob patterns, default fallback; WirePlan.from_rules matches leaf
+    path names recorded by WireLayout
+  * payload-offset algebra: run byte offsets are EXACTLY the prefix sum of
+    run payload widths, runs are contiguous/merged/cover the buffer
+    (property-based under hypothesis when installed, deterministic cases
+    always)
+  * chunk snapping: no pipeline chunk ever straddles a codec run; uniform
+    plans reproduce ChunkedLayout.split bounds exactly
+  * mixed-plan pack/unpack roundtrips bit-identically across pipeline
+    chunk counts {1, 2, 4, 7} on both kernel paths, and decode_dense
+    matches each run's own codec decode
+  * ConsensusConfig normalization/validation: mixed plans rejected on the
+    per-leaf reference transport, runtime wire accounting uses the plan's
+    heterogeneous payload size
+  * AdaptiveBitController plan mode: candidates price re-tiered plans
+    (hot slots shift, cold slots pinned) under the byte budget
+  * WirePlanCompressor: reference-algorithm adapter — wire_bytes equals
+    the plan payload, decode error bounded by the adaptive grid, and
+    CHOCOGossip runs its error-feedback wire through the plan end to end
+    at equal bytes with ADC-DGD
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import codec as C
+from repro.core import consensus, problems, topology, wire, wireplan
+from repro.kernels import ops as kops
+
+BLOCK, TILE = kops.BLOCK, kops.TILE_N
+
+
+def _layout(sizes: dict) -> wire.WireLayout:
+    tree = {k: jax.ShapeDtypeStruct((int(v),), jnp.float32)
+            for k, v in sizes.items()}
+    return wire.WireLayout.for_tree(tree)
+
+
+MIXED_SIZES = {"embed": 3000, "norm1": 513, "norm2": 7, "proj": 70000}
+MIXED_SPEC = "mixed:norm=int2,embed=int4,*=int8"
+
+
+# ---------------------------------------------------------------------------
+# spec grammar + slot resolution
+# ---------------------------------------------------------------------------
+
+def test_parse_spec_uniform_backcompat():
+    for name in C.CODEC_NAMES:
+        spec = wireplan.parse_spec(name)
+        assert spec.is_uniform and spec.uniform_codec == name
+        assert spec.to_string() == name
+    with pytest.raises(ValueError, match="wire_codec"):
+        wireplan.parse_spec("int3")
+    with pytest.raises(ValueError, match="wire_codec"):
+        wireplan.parse_spec("mixed:norm=fp8")
+    with pytest.raises(ValueError, match="pattern=codec"):
+        wireplan.parse_spec("mixed:norm")
+    with pytest.raises(ValueError, match="no rules"):
+        wireplan.parse_spec("mixed:")
+    with pytest.raises(ValueError, match="two default"):
+        wireplan.parse_spec("mixed:*=int8,default=int4")
+
+
+def test_programmatic_paths_share_valueerror_contract():
+    """WirePlan.from_rules / from_slot_codecs / PlanSpec raise ValueError
+    (not by_name's KeyError) for unknown codecs, matching parse_spec."""
+    layout = _layout(MIXED_SIZES)
+    with pytest.raises(ValueError, match="unknown wire codec"):
+        wireplan.WirePlan.from_rules(layout, [("norm", "int3")])
+    with pytest.raises(ValueError, match="unknown wire codec"):
+        wireplan.WirePlan.from_slot_codecs(layout, ("int8", "fp8", "int8",
+                                                    "int8"))
+    with pytest.raises(ValueError, match="unknown wire codec"):
+        wireplan.PlanSpec(rules=(("norm", "int3"),))
+    with pytest.raises(ValueError, match="unknown wire codec"):
+        wireplan.parse_spec(MIXED_SPEC).with_hot_tier("int3")
+
+
+def test_with_hot_tier_follows_built_plan_when_rules_dead():
+    """A spec rule (here the int8 default) that matches NO slot of the
+    real layout must not absorb the re-tier: the trainer passes the BUILT
+    plan's hot codec, so the rules that actually ship are the ones that
+    shift — keeping the controller's candidate pricing (retier_hot) and
+    the trainer's setup specs (with_hot_tier) in agreement."""
+    layout = _layout(MIXED_SIZES)
+    # every leaf path matches a rule -> the int8 default ships nowhere
+    spec = wireplan.parse_spec("mixed:norm=int2,embed=int2,proj=int2,*=int8")
+    plan = spec.build(layout)
+    assert plan.hot_codec == "int2"          # what actually ships
+    assert spec.hot_codec == "int8"          # the dead default's proxy
+    # naive (spec-proxy) re-tier only rewrites the unused default: every
+    # built plan would ship identical bytes while the controller priced
+    # different ones
+    naive = spec.with_hot_tier("int4").build(layout)
+    assert naive.payload_bytes == plan.payload_bytes
+    # built-plan hot override shifts the shipped slots, exactly like the
+    # controller candidate
+    shifted = spec.with_hot_tier("int4", hot=plan.hot_codec).build(layout)
+    assert shifted.payload_bytes == plan.retier_hot("int4").payload_bytes
+    assert shifted.payload_bytes > plan.payload_bytes
+
+
+def test_parse_spec_mixed_roundtrip_and_hot_tier():
+    spec = wireplan.parse_spec(MIXED_SPEC)
+    assert not spec.is_uniform and spec.uniform_codec is None
+    assert wireplan.parse_spec(spec.to_string()).rules == spec.rules
+    assert spec.hot_codec == "int8"
+    shifted = spec.with_hot_tier("int4")
+    # hot rules (the int8 default) shift; cold rules stay pinned
+    assert shifted.default == "int4"
+    assert dict(shifted.rules) == {"norm": "int2", "embed": "int4"}
+    # a fully-shifted uniform spec stays parseable
+    wireplan.parse_spec(shifted.to_string())
+
+
+def test_slot_resolution_first_match_and_globs():
+    layout = _layout(MIXED_SIZES)
+    assert [s.path for s in layout.slots] == [
+        "['embed']", "['norm1']", "['norm2']", "['proj']"]
+    spec = wireplan.parse_spec(MIXED_SPEC)
+    plan = spec.build(layout)
+    assert plan.slot_codecs == ("int4", "int2", "int2", "int8")
+    # first match wins: norm1 hits the earlier rule even when both match
+    p2 = wireplan.parse_spec("mixed:norm1=topk,norm=int2,*=int8") \
+        .build(layout)
+    assert p2.slot_codecs == ("int8", "topk", "int2", "int8")
+    # glob patterns go through fnmatch against the full path
+    p3 = wireplan.WirePlan.from_rules(
+        layout, [("*norm?*", "int2")], default="int4")
+    assert p3.slot_codecs == ("int4", "int2", "int2", "int4")
+
+
+# ---------------------------------------------------------------------------
+# payload-offset algebra (prefix sum) + chunk snapping
+# ---------------------------------------------------------------------------
+
+def _check_plan_algebra(layout, plan):
+    """The geometric invariants every plan must satisfy."""
+    # runs: contiguous, cover [0, n_rows), adjacent runs differ in codec
+    row = 0
+    for i, r in enumerate(plan.runs):
+        assert r.row_start == row
+        row += r.n_rows
+        if i:
+            assert r.codec != plan.runs[i - 1].codec
+    assert row == layout.n_rows
+    # byte offsets: EXACTLY the prefix sum of run payload widths
+    byte = 0
+    for r in plan.runs:
+        assert r.byte_start == byte
+        byte += r.n_rows * C.by_name(r.codec).payload_width(layout.block)
+    assert plan.payload_bytes == byte
+    # slot -> run consistency: every slot's rows carry its assigned codec
+    for slot, name in zip(layout.slots, plan.slot_codecs):
+        if slot.n_rows == 0:
+            continue
+        run = plan.run_at(slot.row_start)
+        assert run.codec == name
+        assert run.row_start <= slot.row_start
+        assert slot.row_start + slot.n_rows <= run.row_end
+    # chunk snapping: bounds contiguous, cover, never straddle a run
+    for k in (1, 2, 4, 7):
+        bounds = plan.chunk_bounds(k)
+        assert len(bounds) == plan.n_chunks(k) >= min(
+            k, sum(1 for r in plan.runs if r.n_rows))
+        row = 0
+        for start, rows in bounds:
+            assert start == row and rows > 0
+            run = plan.run_at(start)
+            assert start + rows <= run.row_end, \
+                f"chunk ({start}, {rows}) straddles run boundary {run}"
+            row += rows
+        assert row == layout.n_rows
+
+
+def test_plan_offsets_and_chunks_deterministic():
+    layout = _layout(MIXED_SIZES)
+    for spec in ("int8", "int4", MIXED_SPEC, "mixed:norm=topk,*=int4",
+                 "mixed:embed=int2,norm1=int8,norm2=int4,proj=int8"):
+        _check_plan_algebra(layout, wireplan.parse_spec(spec).build(layout))
+
+
+def test_uniform_plan_chunks_match_chunkedlayout():
+    """The back-compat contract the pipelined transport's accounting rests
+    on: a uniform plan's chunk bounds == ChunkedLayout.split exactly
+    (tile-even split, ragged extra tiles on the leading chunks, clamp)."""
+    layout = _layout({"big": 10 * TILE * BLOCK - 5})
+    plan = wireplan.WirePlan.uniform(layout, "int8")
+    for k in (1, 2, 4, 7, 10, 64):
+        cl = wire.ChunkedLayout.split(layout, k)
+        assert plan.chunk_bounds(k) == cl.bounds
+        assert plan.n_chunks(k) == cl.n_chunks
+
+
+def test_plan_property_based_offsets():
+    """Property-based slice of the algebra: random slot sizes x random
+    codec assignments keep the prefix-sum/coverage/snap invariants."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    names = st.sampled_from(C.CODEC_NAMES)
+
+    @given(st.lists(st.tuples(st.integers(1, 3 * BLOCK * TILE), names),
+                    min_size=1, max_size=12))
+    @settings(max_examples=40, deadline=None)
+    def check(slots):
+        layout = _layout({f"leaf{i:02d}": n for i, (n, _) in enumerate(slots)})
+        plan = wireplan.WirePlan.from_slot_codecs(
+            layout, tuple(name for _, name in slots))
+        _check_plan_algebra(layout, plan)
+
+    check()
+
+
+# ---------------------------------------------------------------------------
+# mixed-plan encode/decode roundtrips across chunkings
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_mixed_plan_roundtrip_bit_identical_across_chunkings(use_pallas):
+    """Acceptance: the flat mixed payload is bit-identical whether encoded
+    monolithically (packed transport) or as {1, 2, 4, 7} snapped pipeline
+    chunks, on both kernel paths; decode_dense inverts it run-by-run with
+    each run's own codec."""
+    layout = _layout(MIXED_SIZES)
+    plan = wireplan.parse_spec(MIXED_SPEC).build(layout)
+    rng = np.random.default_rng(3)
+    y = jnp.asarray(rng.standard_normal((layout.n_rows, BLOCK)), jnp.float32)
+    noise = jnp.asarray(rng.random((layout.n_rows, plan.noise_cols())),
+                        jnp.float32)
+    for step in (None, jnp.float32(1e-2)):
+        full = plan.encode(y, noise, fixed_step=step, use_pallas=use_pallas)
+        assert full.shape == (plan.payload_bytes,) and full.dtype == jnp.uint8
+        for k in (1, 2, 4, 7):
+            units = plan.transfer_units(k)
+            parts = [plan.encode_unit(u, y, noise, fixed_step=step,
+                                      use_pallas=use_pallas) for u in units]
+            np.testing.assert_array_equal(
+                np.asarray(jnp.concatenate(parts)), np.asarray(full))
+        # decode_dense == per-run codec decode of the same byte ranges
+        dense = plan.decode_dense(full)
+        assert dense.shape == (layout.n_rows, BLOCK)
+        for r in plan.runs:
+            cd = C.by_name(r.codec)
+            width = cd.payload_width(BLOCK)
+            seg = full[r.byte_start:r.byte_start + r.n_rows * width]
+            want = cd.decode_payload(seg.reshape(r.n_rows, width), BLOCK)
+            np.testing.assert_array_equal(
+                np.asarray(dense[r.row_start:r.row_end]), np.asarray(want))
+
+
+def test_count_saturated_sums_over_runs():
+    layout = _layout(MIXED_SIZES)
+    plan = wireplan.parse_spec(MIXED_SPEC).build(layout)
+    rng = np.random.default_rng(4)
+    y = jnp.asarray(rng.standard_normal((layout.n_rows, BLOCK)), jnp.float32)
+    noise = jnp.asarray(rng.random((layout.n_rows, plan.noise_cols())),
+                        jnp.float32)
+    step = jnp.float32(1e-2)
+    pay = plan.encode(y, noise, fixed_step=step)
+    got = float(plan.count_saturated(y, step, pay))
+    want = 0.0
+    for r in plan.runs:
+        cd = C.by_name(r.codec)
+        width = cd.payload_width(BLOCK)
+        seg = pay[r.byte_start:r.byte_start + r.n_rows * width]
+        want += float(cd.count_saturated(
+            y[r.row_start:r.row_end], step, seg.reshape(r.n_rows, width),
+            BLOCK))
+    assert got == want
+    assert got > 0  # a 1e-2 fixed grid on N(0,1) rows does saturate int2
+
+
+# ---------------------------------------------------------------------------
+# ConsensusConfig normalization / runtime accounting
+# ---------------------------------------------------------------------------
+
+def test_config_plan_validation_and_backcompat_shim():
+    from repro.core.distributed import ConsensusConfig, ConsensusRuntime
+    from repro.models.sharding import ParallelContext
+    ctx = ParallelContext(tp=1, data_size=4, n_nodes=4)
+    # bare names still work and normalize to uniform plans
+    rt = ConsensusRuntime(ConsensusConfig(algorithm="adc_dgd",
+                                          wire_codec="int4"), ctx)
+    assert rt.plan_spec.is_uniform and rt.codec is not None
+    assert rt.codec.name == "int4"
+    # mixed plans: accepted on packed/pipelined, runtime codec is None
+    rt2 = ConsensusRuntime(ConsensusConfig(algorithm="adc_dgd",
+                                           wire_codec=MIXED_SPEC), ctx)
+    assert rt2.codec is None and not rt2.plan_spec.is_uniform
+    # ... and REJECTED on the per-leaf reference transport
+    with pytest.raises(ValueError, match="per-leaf"):
+        ConsensusConfig(wire_codec=MIXED_SPEC, wire_packing="per_leaf")
+    with pytest.raises(ValueError, match="wire_codec"):
+        ConsensusConfig(wire_codec="mixed:norm=fp8")
+    with pytest.raises(ValueError, match="compressed_dgd"):
+        ConsensusConfig(algorithm="compressed_dgd", wire_codec=MIXED_SPEC)
+
+
+def test_runtime_accounting_uses_plan_geometry():
+    from repro.core.distributed import ConsensusConfig, ConsensusRuntime
+    from repro.models.sharding import ParallelContext
+    ctx = ParallelContext(tp=1, data_size=4, n_nodes=4)
+    layout = _layout(MIXED_SIZES)
+    plan = wireplan.parse_spec(MIXED_SPEC).build(layout)
+    rt = ConsensusRuntime(ConsensusConfig(algorithm="adc_dgd",
+                                          wire_codec=MIXED_SPEC), ctx)
+    got = rt.wire_bytes_per_step(layout.n_elements, layout=layout)
+    assert got == 2.0 * plan.payload_bytes
+    int8 = ConsensusRuntime(ConsensusConfig(algorithm="adc_dgd"), ctx) \
+        .wire_bytes_per_step(layout.n_elements, layout=layout)
+    assert got < int8                     # the mixed plan genuinely shrinks
+    # pipelined chunk count comes from the plan's snapped bounds
+    rtp = ConsensusRuntime(ConsensusConfig(
+        algorithm="adc_dgd", wire_codec=MIXED_SPEC,
+        wire_packing="pipelined", pipeline_chunks=4), ctx)
+    assert rtp.pipeline_chunks_for(layout) == plan.n_chunks(4)
+    assert rtp.noise_cols_for(layout) == plan.noise_cols()
+
+
+# ---------------------------------------------------------------------------
+# AdaptiveBitController plan mode
+# ---------------------------------------------------------------------------
+
+def test_controller_plan_mode_prices_retiered_plans():
+    layout = _layout(MIXED_SIZES)
+    plan = wireplan.parse_spec(MIXED_SPEC).build(layout)
+    n = layout.n_rows
+    ctl = C.AdaptiveBitController(plan=plan)
+    # candidate wire bytes price the WHOLE heterogeneous payload of the
+    # hot-shifted plan (cold slots pinned), not a uniform codec
+    for name in ("int2", "int4", "int8"):
+        assert ctl.wire_bytes(name, n) \
+            == 2.0 * plan.retier_hot(name).payload_bytes
+        assert ctl.wire_bytes(name, n) \
+            != 2.0 * C.by_name(name).payload_bytes(n)
+    # budget just below the full plan: the int8 hot tier no longer fits,
+    # the int4-hot candidate does
+    budget = 2.0 * plan.payload_bytes - 1
+    ctl2 = C.AdaptiveBitController(plan=plan, byte_budget=budget)
+    cands = ctl2.candidates(n)
+    assert "int8" not in cands and "int4" in cands
+    assert ctl2.initial(n) == "int4"
+
+
+def test_controller_consensus_err_signal():
+    """ROADMAP 'Controller driven by consensus error': a large node
+    disagreement forces a finer grid than the local residual alone
+    suggests — same policy, one extra fidelity input."""
+    n = 640
+    ctl = C.AdaptiveBitController(fixed_step0=0.1, gamma=1.0, headroom=4.0)
+    ctl.initial(n)
+    # residual alone says int2 suffices (need = 0.01 * 4 / 0.1 = 0.4 <= 1)
+    assert ctl.target(1, residual_rms=0.01, overflow_frac=0.0,
+                      n_rows=n) == "int2"
+    # a drifted network (consensus RMS 1.0 -> need 40 > 7) forces int8
+    assert ctl.target(1, residual_rms=0.01, overflow_frac=0.0, n_rows=n,
+                      consensus_err=1.0) == "int8"
+    # and a small consensus error changes nothing
+    assert ctl.target(1, residual_rms=0.01, overflow_frac=0.0, n_rows=n,
+                      consensus_err=0.001) == "int2"
+    # select() threads it through the same state machine
+    ctl2 = C.AdaptiveBitController(fixed_step0=0.1, gamma=1.0, patience=1)
+    ctl2.initial(n)
+    assert ctl2.select(1, 0.01, 0.0, n, consensus_err=1.0) == "int8"
+
+
+# ---------------------------------------------------------------------------
+# WirePlanCompressor: the reference-algorithm gossip wire
+# ---------------------------------------------------------------------------
+
+def _small_plan(spec=MIXED_SPEC):
+    layout = _layout({"proj": 4 * BLOCK, "norm1": 200})
+    return wireplan.parse_spec(spec).build(layout)
+
+
+def test_wireplan_compressor_bytes_and_decode_error():
+    plan = _small_plan()
+    comp = wireplan.WirePlanCompressor(plan)
+    dim = plan.layout.n_elements
+    assert comp.wire_bytes(dim) == plan.payload_bytes
+    with pytest.raises(ValueError, match="plan elements"):
+        comp.wire_bytes(dim + 1)
+    z = jax.random.normal(jax.random.PRNGKey(0), (dim,))
+    out = comp.apply(jax.random.PRNGKey(1), z)
+    assert out.shape == z.shape and out.dtype == z.dtype
+    # adaptive scales never clip: per-element error is bounded by each
+    # row's grid step (absmax / code_max, generous int2 bound)
+    err = np.abs(np.asarray(out) - np.asarray(z))
+    assert float(err.max()) <= float(np.abs(np.asarray(z)).max()) / 1.0 + 1e-6
+    assert float(err.mean()) < float(np.abs(np.asarray(z)).mean())
+
+
+def test_choco_and_adc_gossip_through_plan_equal_bytes():
+    """Acceptance: CHOCOGossip encodes/decodes its error-feedback wire
+    through the same WirePlan as ADC-DGD — equal bytes/step by
+    construction — and both still converge on the reference problem."""
+    plan = _small_plan()
+    dim = plan.layout.n_elements
+    prob = problems.paper_circle_problem(4, seed=0, dim=dim)
+    mix = topology.ring(4)
+    ss = consensus.StepSize(0.05, 0.5)
+    adc = consensus.on_wire_plan("adc_dgd", mix, plan, ss, gamma=1.0)
+    # lam = 0.1: the int2 norm slot's compression noise is large relative
+    # to its signal, and CHOCO's damped gossip needs the smaller consensus
+    # step to keep the error-feedback loop contractive on this plan
+    choco = consensus.on_wire_plan("choco", mix, plan, ss, consensus_lr=0.1)
+    assert isinstance(choco, consensus.CHOCOGossip)
+    assert adc.bytes_per_iteration(prob) == choco.bytes_per_iteration(prob)
+    assert adc.bytes_per_iteration(prob) \
+        == 2 * mix.n_edges * plan.payload_bytes
+    r_adc = consensus.run(adc, prob, 300, key=11)
+    r_choco = consensus.run(choco, prob, 300, key=11)
+    assert np.asarray(r_adc["bytes"])[-1] == np.asarray(r_choco["bytes"])[-1]
+    # both optimize; ADC's amplification should beat CHOCO's noise floor
+    assert r_adc["grad_norm"][-1] < r_adc["grad_norm"][0]
+    assert r_choco["grad_norm"][-1] < r_choco["grad_norm"][0]
+    assert np.mean(r_adc["consensus"][-50:]) \
+        <= 10 * np.mean(r_choco["consensus"][-50:])
