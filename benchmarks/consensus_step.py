@@ -62,7 +62,13 @@ artifact tracked from PR 2 onward) plus a copy under
     guard for the _adc_exchange rewrite),
   * any sub-byte/sparse codec NOT strictly below int8's wire bytes/step,
     int4 or topk below the 2x reduction the sub-byte formats promise,
-  * the adaptive controller not switching codecs across the demo epochs.
+  * the adaptive controller not switching codecs across the demo epochs,
+  * the **packet-loss sweep** (directed-ring push-sum gossip under
+    ``LOSS_SWEEP`` link-loss rates): any rate failing to contract the
+    consensus error, rate 0.0 not bit-identical to the lossless path, the
+    push-sum weight drifting off 1.0 on the homogeneous ring, or the
+    delivered-bytes total not matching the ``faults.LossModel`` host
+    oracle exactly (dropped payloads must be excluded from accounting).
 
 Run standalone (sets up its own host devices):
 
@@ -103,7 +109,16 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 ARCHS = ("smollm-135m", "qwen3-0.6b")
 PROD_TP, PROD_FSDP, NODES = 16, 16, 4
 STEPS_TIMED = 3
-REPEATS = 2
+#: timed repeats per path: the reported seconds/step is the MEDIAN of the
+#: repeats (PR 3's best-of-2 minimum let one lucky scheduling window pick
+#: the winner on the noisy CI host and the best chunk count wandered
+#: run-to-run); the per-repeat samples also feed the variance-aware
+#: pipelined-vs-packed gate below
+REPEATS = 5
+#: untimed steps after compile, before the first timed repeat: the first
+#: post-compile iterations run cold (allocator growth, instruction-cache
+#: misses) and were previously charged to whichever path ran first
+WARMUP_STEPS = 2
 #: pipelined-path chunk counts swept per arch (1 == monolithic packed
 #: structure, so the best swept config tracks packed within timing noise
 #: even when chunking does not pay on this interconnect)
@@ -142,11 +157,29 @@ CONTROLLER_EPOCH_STEPS = 5
 CONTROLLER_STEP0 = 0.02
 #: timing-noise floor for the pipelined-vs-packed gate: chunks=1 traces a
 #: program identical to packed yet has measured up to ~45% faster/slower
-#: on the shared CI host (the packed denominator is a single such noisy
-#: sample), so the timing gate's honest resolution is catching ~2x
-#: genuine regressions — anything finer is delegated to the
-#: deterministic chunks=1 structural check below
+#: on the shared CI host, so the timing gate's honest resolution is
+#: catching ~2x genuine regressions — anything finer is delegated to the
+#: deterministic chunks=1 structural check below.  The effective gate is
+#: variance-aware: this floor is loosened further by the measured
+#: per-repeat spread of the two paths being compared (_timing_gate).
 NOISE_TOL = 0.5
+#: packet-loss sweep (directed-ring push-sum gossip, smollm-135m): per
+#: rate, a pure-gossip run must still contract consensus error, and the
+#: delivered-bytes accounting must match the LossModel's host oracle
+#: exactly; rate 0.0 must be bit-identical to the lossless (link_loss=
+#: None) trace
+LOSS_SWEEP = (0.0, 0.05, 0.2)
+LOSS_GOSSIP_STEPS = 8
+LOSS_SEED = 1
+
+
+def _timing_gate(*paths) -> float:
+    """Variance-aware lower bound for a speed-ratio gate: the NOISE_TOL
+    floor loosened by the worst relative per-repeat spread among the
+    compared paths (a host noisy enough to blur its own repeats cannot
+    support a tighter verdict)."""
+    spread = max(p.get("timing_spread", 0.0) for p in paths)
+    return NOISE_TOL / (1.0 + 3.0 * spread)
 
 
 def count_eqns(jaxpr, prim_name: str) -> int:
@@ -230,11 +263,17 @@ def time_path(rt, mesh, xp, xh, noise, label: str, built=None) -> dict:
     k = jnp.asarray(2, jnp.int32)
     jaxpr = jax.make_jaxpr(step_f)(xp, xh, st, noise, k)
     collectives = count_eqns(jaxpr, "ppermute")
-    # warmup (compile) then best-of-repeats timed loops (robust to CI load)
+    # compile, then untimed warmup, then median-of-repeats timed loops
+    # (median + warmup deflakes the chunk sweep on the noisy CI host —
+    # the old best-of-2 minimum let one lucky scheduling window pick the
+    # winning chunk count)
     t0 = time.perf_counter()
     x, s = step_f(xp, xh, st, noise, k)
     jax.tree.map(lambda a: a.block_until_ready(), (x, s))
     compile_s = time.perf_counter() - t0
+    for _ in range(WARMUP_STEPS):
+        x, s = step_f(x, xh, s, noise, k)
+    jax.tree.map(lambda a: a.block_until_ready(), (x, s))
     times = []
     for _ in range(REPEATS):
         t0 = time.perf_counter()
@@ -242,11 +281,15 @@ def time_path(rt, mesh, xp, xh, noise, label: str, built=None) -> dict:
             x, s = step_f(x, xh, s, noise, k)
         jax.tree.map(lambda a: a.block_until_ready(), (x, s))
         times.append((time.perf_counter() - t0) / STEPS_TIMED)
-    sec = float(np.min(times))
+    sec = float(np.median(times))
+    spread = float((np.max(times) - np.min(times)) / sec)
     print(f"  {label}: {1.0 / sec:8.2f} steps/s   {collectives} "
-          f"ppermutes/step   (compile {compile_s:.0f}s)", flush=True)
+          f"ppermutes/step   (compile {compile_s:.0f}s, "
+          f"spread {spread:.0%})", flush=True)
     return {"steps_per_s": 1.0 / sec, "seconds_per_step": sec,
-            "collectives_per_step": collectives, "compile_s": compile_s}
+            "collectives_per_step": collectives, "compile_s": compile_s,
+            "timing_spread": spread,
+            "timing_samples": [float(t) for t in times]}
 
 
 def build_step_metrics(rt: ConsensusRuntime, mesh, tree):
@@ -503,6 +546,149 @@ def choco_equal_bytes_section() -> tuple[dict, bool]:
     return out, ok
 
 
+def _build_loss_step(rt: ConsensusRuntime, mesh, tree):
+    """:func:`build_step` variant for the push-sum transport: carries the
+    ``ps_w``/``ps_nbr`` consensus-state entries and surfaces the per-device
+    ``wire_bytes_delivered`` metric (zero when the loss machinery is off,
+    so the compiled signature is rate-independent)."""
+    pspec = jax.tree.map(lambda _: P("data"), tree)
+    cons_spec = {"x_tilde": P("data", None, None),
+                 "m_agg": P("data", None, None),
+                 "ps_w": P("data", None),
+                 "ps_nbr": P("data", None)}
+    noise_spec = P("data", None, None)
+    lossy = rt.cfg.loss_model is not None
+
+    def init(p):
+        return jax.tree.map(lambda a: a[None], rt.init_state(p))
+
+    init_f = jax.jit(shard_map_compat(init, mesh, in_specs=(pspec,),
+                                      out_specs=cons_spec, check=False))
+
+    def step(xp, xh, st, noise, k):
+        st = jax.tree.map(lambda a: a[0], st)
+        x_next, st2, m = rt.exchange(xp, xh, st, k, jax.random.PRNGKey(3),
+                                     noise=noise[0])
+        delivered = (m["wire_bytes_delivered"] if lossy else jnp.zeros(()))
+        return (x_next, jax.tree.map(lambda a: a[None], st2),
+                delivered[None])
+
+    step_f = jax.jit(shard_map_compat(
+        step, mesh, in_specs=(pspec, pspec, cons_spec, noise_spec, P()),
+        out_specs=(pspec, cons_spec, P("data")), check=False))
+    return init_f, step_f
+
+
+def loss_sweep_section(mesh, ctx) -> tuple[dict, bool]:
+    """Packet-loss sweep: directed-ring push-sum ADC gossip under link
+    loss (smollm-135m, packed path).
+
+    Per rate in ``LOSS_SWEEP`` (plus the lossless ``link_loss=None``
+    reference), a ``LOSS_GOSSIP_STEPS`` pure-gossip run from distinct
+    per-device inits.  CI gates:
+
+      * every rate still contracts the consensus error (stale ``x_tilde``
+        reuse degrades but must not break mixing),
+      * rate 0.0 is bit-identical to the lossless trace (the loss
+        machinery at zero rate is a no-op, not a perturbation),
+      * the push-sum weight stays exactly 1.0 on the homogeneous ring,
+      * the delivered-bytes total matches the :class:`~repro.core.faults.
+        LossModel` host oracle EXACTLY (bytes accounting excludes dropped
+        payloads), and is strictly below the shipped total at 20% loss.
+    """
+    from repro.core import faults
+    arch = "smollm-135m"
+    ok = True
+    key = jax.random.PRNGKey(hash(arch) % 2**31)
+    local = local_leaf_tree(arch, key)
+    layout = wire.WireLayout.for_tree(local)
+    leaves, treedef = jax.tree_util.tree_flatten(local)
+    ks = jax.random.split(jax.random.fold_in(key, 2), len(leaves))
+    x0 = jax.tree_util.tree_unflatten(treedef, [
+        (jax.random.normal(k2, (N_DEVICES, *a.shape), jnp.float32) * 0.05)
+        .astype(a.dtype)
+        for k2, a in zip(ks, leaves)])
+    xt0 = np.stack([np.asarray(layout.pack(
+        jax.tree.map(lambda a, d=d: a[d], x0))) for d in range(N_DEVICES)])
+    out = {"rates": [r for r in LOSS_SWEEP], "seed": LOSS_SEED,
+           "gossip_steps": LOSS_GOSSIP_STEPS, "runs": {}}
+    print(f"packet-loss sweep ({arch}, directed-ring push-sum, "
+          f"{LOSS_GOSSIP_STEPS} gossip steps):", flush=True)
+    x_ref = None
+    for rate in (None,) + LOSS_SWEEP:
+        name = "lossless" if rate is None else f"loss_{rate:g}"
+        rt = ConsensusRuntime(
+            ConsensusConfig(algorithm="adc_dgd", quant_mode="adaptive",
+                            topology="directed-ring", link_loss=rate,
+                            loss_seed=LOSS_SEED), ctx)
+        noise = _codec_noise(rt, layout)
+        init_f, step_f = _build_loss_step(rt, mesh, x0)
+        st = init_f(x0)
+        # distinct inits: rebuild m_agg from the actual directed in-weights
+        # (the epoch-boundary resync correction, directed form)
+        w_fwd, w_bwd = rt.cfg.in_weights
+        m0 = (w_fwd * np.roll(xt0, 1, axis=0)
+              + w_bwd * np.roll(xt0, -1, axis=0))
+        st = dict(st, m_agg=jnp.asarray(m0))
+        x = x0
+        r = {"link_loss": 0.0 if rate is None else rate,
+             "machinery": rate is not None,
+             "consensus_err_start": _consensus_err(x)}
+        delivered = 0.0
+        for k2 in range(1, LOSS_GOSSIP_STEPS + 1):
+            x, st, d = step_f(x, x, st, noise, jnp.asarray(k2, jnp.int32))
+            delivered += float(np.sum(np.asarray(d)))
+        r["consensus_err_end"] = _consensus_err(x)
+        plan = rt.wire_plan_for(layout)
+        shipped = (LOSS_GOSSIP_STEPS * N_DEVICES * 2
+                   * plan.wire_bytes(push_sum=True))
+        r["shipped_bytes"] = float(shipped)
+        ps_dev = float(np.max(np.abs(np.asarray(st["ps_w"]) - 1.0)))
+        if ps_dev != 0.0:
+            print(f"FAIL[loss]: {name} push-sum weight drifted off 1.0 "
+                  f"by {ps_dev:g} on the homogeneous ring")
+            ok = False
+        if not r["consensus_err_end"] < r["consensus_err_start"]:
+            print(f"FAIL[loss]: {name} gossip did not contract consensus "
+                  f"error ({r['consensus_err_start']:.3e} -> "
+                  f"{r['consensus_err_end']:.3e})")
+            ok = False
+        if rate is None:
+            x_ref = x
+        else:
+            r["delivered_bytes"] = delivered
+            mask = faults.LossModel(rate=rate, seed=LOSS_SEED) \
+                .keep_mask_host(N_DEVICES, range(1, LOSS_GOSSIP_STEPS + 1))
+            oracle = float(mask.sum()) * plan.wire_bytes(push_sum=True)
+            r["delivered_bytes_oracle"] = oracle
+            if delivered != oracle:
+                print(f"FAIL[loss]: {name} delivered-bytes accounting "
+                      f"{delivered:g} != host oracle {oracle:g}")
+                ok = False
+        if rate == 0.0:
+            diff = max(float(np.max(np.abs(
+                np.asarray(a, np.float64) - np.asarray(b, np.float64))))
+                for a, b in zip(jax.tree_util.tree_leaves(x),
+                                jax.tree_util.tree_leaves(x_ref)))
+            r["vs_lossless_max_diff"] = diff
+            if diff != 0.0:
+                print(f"FAIL[loss]: loss machinery at rate 0.0 is not "
+                      f"bit-identical to the lossless path (diff {diff:g})")
+                ok = False
+        print(f"  {name}: err {r['consensus_err_start']:.3e} -> "
+              f"{r['consensus_err_end']:.3e}"
+              + (f"   delivered {delivered / 1e6:.2f}/"
+                 f"{shipped / 1e6:.2f} MB" if rate is not None else ""),
+              flush=True)
+        out["runs"][name] = r
+    lossy02 = out["runs"]["loss_0.2"]
+    if not lossy02["delivered_bytes"] < lossy02["shipped_bytes"]:
+        print("FAIL[loss]: 20% loss delivered bytes not below shipped "
+              "(drops are not being excluded from accounting)")
+        ok = False
+    return out, ok
+
+
 def main() -> int:
     if jax.device_count() < N_DEVICES:
         print(f"SKIP: need >= {N_DEVICES} devices, have {jax.device_count()} "
@@ -574,10 +760,12 @@ def main() -> int:
         if res["speedup"] < 1.0:
             print(f"FAIL[{arch}]: packed slower than per-leaf reference")
             ok = False
-        if res["pipelined_vs_packed"] < NOISE_TOL:
+        gate = _timing_gate(res["packed"], best)
+        res["pipelined_gate"] = gate
+        if res["pipelined_vs_packed"] < gate:
             print(f"FAIL[{arch}]: pipelined best chunk count slower than "
-                  f"monolithic packed beyond the {NOISE_TOL:.2f} noise "
-                  "tolerance")
+                  f"monolithic packed beyond the variance-aware {gate:.2f} "
+                  "noise tolerance")
             ok = False
         if sweep["1"]["collectives_per_step"] != 2:
             # deterministic structural check alongside the noisy timing
@@ -597,6 +785,8 @@ def main() -> int:
     ok = ok and codec_ok
     choco_eb, choco_ok = choco_equal_bytes_section()
     ok = ok and choco_ok
+    loss_sweep, loss_ok = loss_sweep_section(mesh, ctx)
+    ok = ok and loss_ok
     payload = {"n_devices": N_DEVICES, "nodes": NODES,
                "prod_mesh": f"{PROD_FSDP}x{PROD_TP}",
                "steps_timed": STEPS_TIMED, "chunk_sweep": list(CHUNK_SWEEP),
@@ -604,7 +794,7 @@ def main() -> int:
                "mixed_plan": MIXED_PLAN, "mixed_plan_aggr": MIXED_PLAN_AGGR,
                "mixed_fidelity_tol": MIXED_FIDELITY_TOL,
                "archs": out, "codecs": codecs,
-               "choco_equal_bytes": choco_eb}
+               "choco_equal_bytes": choco_eb, "loss_sweep": loss_sweep}
     with open(os.path.join(REPO, "BENCH_consensus_step.json"), "w") as f:
         json.dump(payload, f, indent=1, default=float)
     art = os.path.join(REPO, "benchmarks", "artifacts")

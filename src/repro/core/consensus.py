@@ -109,11 +109,28 @@ class _Algorithm:
             return jnp.asarray(m.matrix_at(0).w)
         return jnp.asarray(m.w)
 
+    @property
+    def push_sum(self) -> bool:
+        """True when ``mixing`` is directed (column-stochastic only): the
+        algorithm then threads the push-sum weight scalar ``ps_w`` through
+        its state — mixed by the same matrix as ``x`` — and evaluates
+        gradients at the de-biased ratio ``z = x / ps_w`` (ratio consensus;
+        Toghani & Uribe, arXiv:2204.08160)."""
+        return bool(getattr(getattr(self, "mixing", None), "is_directed",
+                            False))
+
+    def _debias(self, state) -> jax.Array:
+        """The de-biased iterate ``z = x / ps_w`` (``x`` itself on
+        undirected mixing, where ps_w stays identically 1)."""
+        ps = state.get("ps_w")
+        return state["x"] if ps is None else state["x"] / ps
+
     def _compressed_broadcast_bytes(self, problem: ConsensusProblem) -> float:
         """Shared accounting for compressor-bearing algorithms: one
-        compressed broadcast per node per iteration, carried on both
-        directions of every undirected edge."""
-        msgs = 2 * self.mixing.n_edges  # type: ignore[attr-defined]
+        compressed broadcast per node per iteration; every undirected edge
+        carries it in both directions, every directed edge exactly once
+        (``n_messages``)."""
+        msgs = self.mixing.n_messages  # type: ignore[attr-defined]
         return msgs * self.compressor.wire_bytes(problem.dim)  # type: ignore[attr-defined]
 
 
@@ -148,11 +165,18 @@ class ADCDGD(_Algorithm):
         # take the first gradient step; xt stays at x0.
         g0 = problem.grad_fn(x0)
         x1 = x0 - self.stepsize(jnp.asarray(1.0)) * g0
-        return {
+        st = {
             "x": x1,
             "x_tilde": x0,
             "k": jnp.asarray(1, jnp.int32),
         }
+        if self.push_sum:
+            # push-sum weight scalar, mixed by the same column-stochastic
+            # W as x; the consensus estimate is z = x / ps_w.  On the wire
+            # (core.distributed) it rides the flat payload as 4 trailer
+            # bytes; here it is mixed exactly.
+            st["ps_w"] = jnp.ones((self.mixing.n, 1))
+        return st
 
     def step(self, state, problem, key, w=None):
         w = self._w(w)
@@ -163,14 +187,20 @@ class ADCDGD(_Algorithm):
         keys = _per_node_keys(key, self.mixing.n)
         d = jax.vmap(self.compressor.apply)(keys, amplified)  # transmitted
         x_tilde = state["x_tilde"] + d / kg
-        grads = problem.grad_fn(state["x"])
+        grads = problem.grad_fn(self._debias(state))
         alpha = self.stepsize(k)
         x_next = w @ x_tilde - alpha * grads
         metrics = {
             "max_transmitted": jnp.max(jnp.abs(d)),           # paper Fig. 8
             "alpha": alpha,
         }
-        return {"x": x_next, "x_tilde": x_tilde, "k": state["k"] + 1}, metrics
+        new_state = {"x": x_next, "x_tilde": x_tilde, "k": state["k"] + 1}
+        if "ps_w" in state:
+            # subgradient-push (Nedic & Olshevsky): the weight follows the
+            # numerator's mixing exactly; gradients (above) are evaluated
+            # at the de-biased z = x / ps_w
+            new_state["ps_w"] = w @ state["ps_w"]
+        return new_state, metrics
 
     def bytes_per_iteration(self, problem):
         return self._compressed_broadcast_bytes(problem)
@@ -207,7 +237,7 @@ class DGD(_Algorithm):
         }
 
     def bytes_per_iteration(self, problem):
-        return 2 * self.mixing.n_edges * self.elem_bytes * problem.dim
+        return self.mixing.n_messages * self.elem_bytes * problem.dim
 
 
 @dataclasses.dataclass(frozen=True)
@@ -257,7 +287,7 @@ class DGDt(_Algorithm):
         }
 
     def bytes_per_iteration(self, problem):
-        return self.t * 2 * self.mixing.n_edges * self.elem_bytes * problem.dim
+        return self.t * self.mixing.n_messages * self.elem_bytes * problem.dim
 
 
 @dataclasses.dataclass(frozen=True)
@@ -342,28 +372,38 @@ class CHOCOGossip(_Algorithm):
         g0 = problem.grad_fn(x0)
         x1 = x0 - self.stepsize(jnp.asarray(1.0)) * g0
         # xh_0 = 0 (the CHOCO paper's init); the first q transmits C(x_1).
-        return {
+        st = {
             "x": x1,
             "x_hat": jnp.zeros((n, p)),
             "k": jnp.asarray(1, jnp.int32),
         }
+        if self.push_sum:
+            st["ps_w"] = jnp.ones((n, 1))
+        return st
 
     def step(self, state, problem, key, w=None):
         w = self._w(w)
         k = state["k"].astype(jnp.float32)
         alpha = self.stepsize(k)
-        grads = problem.grad_fn(state["x"])
+        grads = problem.grad_fn(self._debias(state))
         x_half = state["x"] - alpha * grads
         keys = _per_node_keys(key, self.mixing.n)
         q = jax.vmap(self.compressor.apply)(keys, x_half - state["x_hat"])
         x_hat = state["x_hat"] + q
         # sum_j W_ij (xh_j - xh_i) = (W - I) xh  since rows of W sum to 1
+        # (directed W: the same damped (W - I) gossip applied to numerator
+        # AND push-sum weight keeps sum(x) and sum(ps_w) exactly preserved
+        # — columns of W sum to 1 — so z = x/ps_w de-biases the asymmetry)
         x_next = x_half + self.consensus_lr * (w @ x_hat - x_hat)
         metrics = {
             "max_transmitted": jnp.max(jnp.abs(q)),
             "alpha": alpha,
         }
-        return {"x": x_next, "x_hat": x_hat, "k": state["k"] + 1}, metrics
+        new_state = {"x": x_next, "x_hat": x_hat, "k": state["k"] + 1}
+        if "ps_w" in state:
+            ps = state["ps_w"]
+            new_state["ps_w"] = ps + self.consensus_lr * (w @ ps - ps)
+        return new_state, metrics
 
     def bytes_per_iteration(self, problem):
         return self._compressed_broadcast_bytes(problem)
@@ -417,10 +457,10 @@ def _cumulative_bytes(algorithm: _Algorithm, problem: ConsensusProblem,
     is billed for the edges of the matrix actually used at that step."""
     per_iter = algorithm.bytes_per_iteration(problem)
     sched = _active_schedule(algorithm)
-    if sched is None or per_iter == 0.0 or sched.n_edges == 0.0:
+    if sched is None or per_iter == 0.0 or sched.n_messages == 0.0:
         return per_iter * (np.arange(n_steps, dtype=np.float64) + 1)
-    per_directed_msg = per_iter / (2.0 * sched.n_edges)
-    per_step = 2.0 * sched.edges_per_step(n_steps) * per_directed_msg
+    per_msg = per_iter / sched.n_messages
+    per_step = sched.messages_per_step(n_steps) * per_msg
     return np.cumsum(per_step)
 
 
@@ -442,11 +482,20 @@ def _make_scan(algorithm: _Algorithm, problem: ConsensusProblem,
                                             w=w_stack[i])
         else:
             state, metrics = algorithm.step(state, problem, inp)
-        x_bar = jnp.mean(state["x"], axis=0)
+        ps = state.get("ps_w")
+        if ps is None:
+            z = state["x"]
+            x_bar = jnp.mean(z, axis=0)
+        else:
+            # push-sum metrics: the de-biased iterates z = x/w; their
+            # network average is the mass-preserving ratio sum(x)/sum(w)
+            # (column stochasticity keeps both sums exactly invariant)
+            z = state["x"] / ps
+            x_bar = jnp.sum(state["x"], axis=0) / jnp.sum(ps)
         out = {
             "obj": problem.global_obj(x_bar),
             "grad_norm": jnp.linalg.norm(problem.global_grad(x_bar)) / problem.n_nodes,
-            "consensus": problem.consensus_error(state["x"]),
+            "consensus": problem.consensus_error(z),
             "max_tx": metrics["max_transmitted"],
         }
         if include_alpha:
@@ -491,7 +540,13 @@ def run(
     sl = slice(log_every - 1, None, log_every)
     result = {k: v[sl] for k, v in traj.items()}
     result["bytes"] = _cumulative_bytes(algorithm, problem, n_steps)[sl]
-    result["x_final"] = np.asarray(state["x"])
+    # push-sum runs report the de-biased final iterate z = x / ps_w (equal
+    # to x itself on undirected mixing, where ps_w stays 1)
+    ps = state.get("ps_w")
+    result["x_final"] = np.asarray(state["x"] if ps is None
+                                   else state["x"] / ps)
+    if ps is not None:
+        result["ps_w_final"] = np.asarray(ps)
     return result
 
 

@@ -75,7 +75,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import codec as wire_codec
-from repro.core import wire, wireplan
+from repro.core import faults, wire, wireplan
 from repro.kernels import ops as kops
 from repro.models.sharding import ParallelContext
 
@@ -151,10 +151,56 @@ class ConsensusConfig:
     #: alongside the wire accounting; the static exchange itself never
     #: reads it.
     byte_budget: float | None = None
+    #: consensus graph of the node ring (DESIGN.md §Push-sum wire):
+    #: "ring" is the historical symmetric doubly-stochastic ring;
+    #: "directed-ring" makes the SAME ppermute wiring column-stochastic
+    #: only — the upstream (i - stride) in-edge carries ``forward_weight``
+    #: and the downstream one ``1 - self_weight - forward_weight`` — and
+    #: switches the exchange to push-sum (ratio) consensus, mirroring
+    #: :func:`repro.core.topology.directed_ring`.
+    topology: str = "ring"
+    #: directed-ring in-weight of the payload arriving from the upstream
+    #: neighbor; None = the topology.directed_ring default
+    #: 2 (1 - self_weight) / 3.
+    forward_weight: float | None = None
+    #: per-directed-edge Bernoulli packet-loss rate (core.faults.LossModel).
+    #: ``None`` keeps the loss machinery out of the trace entirely; ``0.0``
+    #: traces it but never drops (bit-identical values — tests pin this).
+    link_loss: float | None = None
+    loss_seed: int = 0
+    #: push-sum weight threading: None = auto (on iff topology is
+    #: directed); True forces the weight machinery on a symmetric ring
+    #: (where it provably stays == 1 — the exactness fixture).
+    push_sum: bool | None = None
 
     @property
     def side_weight(self) -> float:
         return (1.0 - self.self_weight) / 2.0
+
+    @property
+    def in_weights(self) -> tuple[float, float]:
+        """(upstream, downstream) receive weights of the node ring — equal
+        ``side_weight`` for the symmetric ring, (forward, backward) for the
+        directed one.  ``_ppermute_ring(+stride)`` delivers the upstream
+        (i - stride) payload, whose directed-ring weight is the forward
+        edge weight W[i, i-stride]."""
+        if self.topology == "directed-ring":
+            fwd = (2.0 * (1.0 - self.self_weight) / 3.0
+                   if self.forward_weight is None else self.forward_weight)
+            return (fwd, (1.0 - self.self_weight) - fwd)
+        return (self.side_weight, self.side_weight)
+
+    @property
+    def push_sum_enabled(self) -> bool:
+        if self.push_sum is not None:
+            return self.push_sum
+        return self.topology == "directed-ring"
+
+    @property
+    def loss_model(self):
+        if self.link_loss is None:
+            return None
+        return faults.LossModel(rate=self.link_loss, seed=self.loss_seed)
 
     def __post_init__(self):
         if not self.ring_strides:
@@ -188,6 +234,33 @@ class ConsensusConfig:
         if self.byte_budget is not None and self.byte_budget <= 0:
             raise ValueError(f"byte_budget must be positive, got "
                              f"{self.byte_budget}")
+        if self.topology not in ("ring", "directed-ring"):
+            raise ValueError(f"topology must be 'ring' or 'directed-ring', "
+                             f"got {self.topology!r}")
+        directed = self.topology == "directed-ring"
+        if directed and self.push_sum is False:
+            raise ValueError(
+                "directed-ring mixing is column-stochastic only; disabling "
+                "push_sum would leave the iterates biased — drop "
+                "push_sum=False or use topology='ring'")
+        if self.forward_weight is not None:
+            if not directed:
+                raise ValueError("forward_weight only applies to the "
+                                 "directed-ring topology")
+            if not 0.0 < self.forward_weight < 1.0 - self.self_weight:
+                raise ValueError(
+                    f"forward_weight must be in (0, 1 - self_weight) = "
+                    f"(0, {1.0 - self.self_weight}), got "
+                    f"{self.forward_weight}")
+        if self.link_loss is not None and not 0.0 <= self.link_loss < 1.0:
+            raise ValueError(f"link_loss must be in [0, 1), got "
+                             f"{self.link_loss}")
+        if ((directed or self.push_sum or self.link_loss is not None)
+                and self.algorithm != "adc_dgd"):
+            raise ValueError(
+                "directed topology, push_sum and link_loss are features of "
+                f"the adc_dgd wire; algorithm={self.algorithm!r} does not "
+                "support them")
 
 
 def _flat_ring_perm(ctx: ParallelContext, shift: int):
@@ -284,7 +357,15 @@ class ConsensusRuntime:
         side_total = 1.0 - self.cfg.self_weight
         layout = wire.WireLayout.for_tree(params)
         x_tilde = layout.pack(params)
-        return {"x_tilde": x_tilde, "m_agg": side_total * x_tilde}
+        st = {"x_tilde": x_tilde, "m_agg": side_total * x_tilde}
+        if self.cfg.push_sum_enabled:
+            # push-sum weight w_0 = 1 and the last-seen neighbor weights
+            # [upstream, downstream] (the stale fallback under link loss).
+            # x_tilde / m_agg then live in the NUMERATOR domain w * x —
+            # at w == 1 every numerator op is a bitwise identity.
+            st["ps_w"] = jnp.ones((1,), jnp.float32)
+            st["ps_nbr"] = jnp.ones((2,), jnp.float32)
+        return st
 
     def state_layout(self, params: Any) -> wire.WireLayout:
         """The static packing plan for a (local) parameter tree."""
@@ -333,6 +414,11 @@ class ConsensusRuntime:
                          else wire_codec.by_name(self.plan_spec.hot_codec)
                          .payload_width())
                 total = 2.0 * rows * width
+            if self.cfg.algorithm == "adc_dgd" and self.cfg.push_sum_enabled:
+                # the fp32 push-sum weight: a payload trailer on the packed
+                # wire, its own tiny ppermute on the per-leaf reference —
+                # 4 bytes per ring direction either way
+                total += 2.0 * wireplan.PUSH_SUM_TRAILER_BYTES
             if self.cfg.algorithm == "adc_dgd" and len(self.cfg.ring_strides) > 1:
                 # amortized epoch-boundary resync: one fp32 x_tilde exchange
                 # per re-wiring (both ring directions)
@@ -394,9 +480,13 @@ class ConsensusRuntime:
         else:
             chunks = 1.0
         if cfg.algorithm == "adc_dgd":
+            # push-sum weight: free on the packed wire (payload trailer)
+            # except 2 scalar ppermutes inside the amortized resync cond;
+            # 2 scalar ppermutes every step on the per-leaf reference
+            ps = 2.0 if cfg.push_sum_enabled else 0.0
             if cfg.wire_packing in ("packed", "pipelined"):
-                return 2.0 * chunks + 2.0 * chunks * resync_amort
-            return 4.0 * n_leaves + 2.0 * n_leaves * resync_amort
+                return 2.0 * chunks + (2.0 * chunks + ps) * resync_amort
+            return 4.0 * n_leaves + ps + 2.0 * n_leaves * resync_amort
         if cfg.algorithm == "compressed_dgd":
             return (2.0 * chunks if cfg.wire_packing in ("packed", "pipelined")
                     else 4.0 * n_leaves)
@@ -431,6 +521,10 @@ class ConsensusRuntime:
             if alg == "adc_dgd":
                 m["overflow_frac"] = jnp.zeros((), jnp.float32)
                 m["residual_norm"] = jnp.zeros((), jnp.float32)
+                if self.cfg.push_sum_enabled:
+                    m["push_sum_weight"] = jnp.ones((), jnp.float32)
+                if self.cfg.loss_model is not None:
+                    m["wire_bytes_delivered"] = jnp.zeros((), jnp.float32)
             if self.cfg.track_consensus_error:
                 m["consensus_err"] = _consensus_error(x_out, ctx)
             return m
@@ -489,6 +583,31 @@ class ConsensusRuntime:
         return jnp.logical_and(
             (step_i32 - 1) % self.cfg.schedule_period == 0, step_i32 > 1)
 
+    def _node_index(self):
+        """Traced consensus-node index of this device (shared by all its
+        FSDP shards, so one drop decision covers the whole sharded
+        payload) — the LossModel's receiver id.  Matches the flattened
+        (pod, data) // fsdp node numbering of ``_flat_ring_perm``."""
+        ctx = self.ctx
+        idx = jnp.zeros((), jnp.int32)
+        if ctx.data_size > 1:
+            idx = jax.lax.axis_index(ctx.data_axis)
+        if ctx.pod_axis is not None and ctx.pods > 1:
+            idx = idx + ctx.data_size * jax.lax.axis_index(ctx.pod_axis)
+        return idx // ctx.fsdp
+
+    def _keep_flags(self, step):
+        """(keep_upstream, keep_downstream) boolean scalars of this step's
+        loss draw, or (None, None) when no LossModel is configured (the
+        machinery then never enters the trace)."""
+        lm = self.cfg.loss_model
+        if lm is None:
+            return None, None
+        node = self._node_index()
+        s = jnp.asarray(step, jnp.int32)
+        return (lm.keep(s, faults.FROM_UPSTREAM, node),
+                lm.keep(s, faults.FROM_DOWNSTREAM, node))
+
     def _step_k(self, step):
         """fixed mode: effective grid step Delta_k = Delta_0 / k^gamma — this
         IS the amplified-differential trick with amplification folded into
@@ -545,10 +664,25 @@ class ConsensusRuntime:
         resync = self._resync_flag(step)
         step_k = self._step_k(step)
         key = _device_key(key, ctx)
+        push = cfg.push_sum_enabled
+        w_fwd, w_bwd = cfg.in_weights
+        directed = w_fwd != w_bwd
+        keep_up, keep_dn = self._keep_flags(step)
+        last_unit = len(units) - 1
 
         xt = state["x_tilde"]                       # (n_rows, BLOCK) packed
         mb = state["m_agg"]
         xh_p = layout.pack(x_half)
+        if push:
+            # numerator domain: the wire carries w_i * x_i and the weight
+            # scalar; both are mixed by the same column-stochastic W and
+            # the de-biased iterate is their ratio (subgradient-push).
+            # At w == 1 the multiply is a bitwise identity, so the
+            # symmetric exactness contracts survive unchanged.
+            ps_w = state["ps_w"]                    # (1,) fp32
+            xh_p = xh_p * ps_w[0]
+            trailer = jax.lax.bitcast_convert_type(
+                ps_w.astype(jnp.float32), jnp.uint8).reshape(-1)
         y = xh_p - xt                               # packed differential
         if noise is None:
             # ONE noise buffer sized for the plan's widest codec (top-k
@@ -566,8 +700,16 @@ class ConsensusRuntime:
             many codec runs the unit carries."""
             pay = plan.encode_unit(units[c], y, noise, fixed_step=step_k,
                                    use_pallas=cfg.use_pallas)
+            if push and c == last_unit:
+                # the push-sum weight rides the LAST unit's payload as a
+                # 4-byte fp32 trailer — no extra collective; fragment byte
+                # offsets address the payload from 0 and never see it
+                pay = wire.lift_concat([pay, trailer])
             return (pay, _ppermute_ring(pay, ctx, +stride),
                     _ppermute_ring(pay, ctx, -stride))
+
+        recv_w = {}
+        dense = {"l": [], "r": []} if directed else None
 
         def retire(c, inflight):
             """Per-fragment fused dequant + shadow update + combine for
@@ -576,6 +718,19 @@ class ConsensusRuntime:
             resync)."""
             pay, p_l, p_r = inflight
             unit = units[c]
+            if push and c == last_unit:
+                recv_w["l"] = jax.lax.bitcast_convert_type(
+                    p_l[-wireplan.PUSH_SUM_TRAILER_BYTES:],
+                    jnp.float32).reshape(1)
+                recv_w["r"] = jax.lax.bitcast_convert_type(
+                    p_r[-wireplan.PUSH_SUM_TRAILER_BYTES:],
+                    jnp.float32).reshape(1)
+            if keep_up is not None:
+                # a dropped packet zeroes the whole unit payload: every
+                # codec decodes all-zero bytes to a zero differential, so
+                # the receiver reuses its last x_tilde_j estimate
+                p_l = jnp.where(keep_up, p_l, jnp.zeros_like(p_l))
+                p_r = jnp.where(keep_dn, p_r, jnp.zeros_like(p_r))
             mb_u = None
             if resync is not None:
                 xt_u = jax.lax.slice_in_dim(xt, unit.row_start, unit.row_end)
@@ -583,6 +738,9 @@ class ConsensusRuntime:
                 def _rebuild(xt_u=xt_u):
                     xt_l = _ppermute_ring(xt_u, ctx, +stride)
                     xt_r = _ppermute_ring(xt_u, ctx, -stride)
+                    if directed:
+                        return (jnp.float32(w_fwd) * xt_l
+                                + jnp.float32(w_bwd) * xt_r)
                     return jnp.float32(cfg.side_weight) * (xt_l + xt_r)
 
                 mb_u = jax.lax.cond(
@@ -592,6 +750,15 @@ class ConsensusRuntime:
             outs = []
             for f in unit.fragments:
                 cd = wire_codec.by_name(f.codec)
+                if directed:
+                    # the asymmetric correction term needs the two dense
+                    # neighbor differentials (post loss-zeroing)
+                    dense["l"].append(cd.decode_payload(
+                        plan.fragment_payload(p_l, f, unit.byte_start),
+                        layout.block))
+                    dense["r"].append(cd.decode_payload(
+                        plan.fragment_payload(p_r, f, unit.byte_start),
+                        layout.block))
                 if mb_u is None:
                     m_in = mb                       # full-height in-kernel view
                 else:
@@ -631,6 +798,40 @@ class ConsensusRuntime:
         m_new = wire.lift_concat([p[1] for p in parts])
         comb = wire.lift_concat([p[2] for p in parts])
         overflow = clipped[0] / float(plan.codes_total(layout.block))
+        if directed:
+            # asymmetric in-weights WITHOUT touching the symmetric fused
+            # kernels: they mixed both sides at side_weight s, so adding
+            # the antisymmetric term t = (w_fwd - s)(d_l - d_r) to both
+            # the aggregate and the combine realizes (w_fwd, w_bwd)
+            # exactly (w_bwd = 2s - w_fwd); symmetric paths never pay it
+            d_l = wire.lift_concat(dense["l"])
+            d_r = wire.lift_concat(dense["r"])
+            t = jnp.float32(w_fwd - cfg.side_weight) * (d_l - d_r)
+            m_new = m_new + t
+            comb = comb + t
+        if push:
+            w_l, w_r = recv_w["l"], recv_w["r"]
+            if keep_up is not None:
+                # stale-weight fallback mirrors the stale-x_tilde reuse
+                w_l = jnp.where(keep_up, w_l, state["ps_nbr"][0:1])
+                w_r = jnp.where(keep_dn, w_r, state["ps_nbr"][1:2])
+            if resync is not None:
+                # epoch boundary: new neighbors — refresh the weights over
+                # the reliable control plane alongside the m_agg rebuild
+                w_l, w_r = jax.lax.cond(
+                    resync,
+                    lambda: (_ppermute_ring(ps_w, ctx, +stride),
+                             _ppermute_ring(ps_w, ctx, -stride)),
+                    lambda: (w_l, w_r))
+            # w + fwd (w_l - w) + bwd (w_r - w) == self w + fwd w_l +
+            # bwd w_r (column-stochastic), but is EXACT (x + 0 = x) when
+            # all weights agree — on the homogeneous device ring w stays
+            # bit-identically 1 forever, even under loss
+            ps_new = ps_w + (jnp.float32(w_fwd) * (w_l - ps_w)
+                             + jnp.float32(w_bwd) * (w_r - ps_w))
+            # de-bias: the combine lives in the numerator domain w * x;
+            # the parameters handed back are the ratio z = (W x) / (W w)
+            comb = comb / ps_new[0]
         # gradient step applied per leaf while unpacking (x_prev never
         # needs packing; identical elementwise ops to the per-leaf path)
         comb_leaves = layout.unpack(comb, cast=False)
@@ -639,6 +840,9 @@ class ConsensusRuntime:
                                   - p.astype(jnp.float32))).astype(h.dtype),
             comb_leaves, x_half, x_prev)
         new_state = {"x_tilde": xt_new, "m_agg": m_new}
+        if push:
+            new_state["ps_w"] = ps_new
+            new_state["ps_nbr"] = jnp.concatenate([w_l, w_r])
         # residual RMS of the packed differential: the controller's fidelity
         # feedback (core.codec.AdaptiveBitController) and a convergence
         # diagnostic in its own right (padding rows are exact zeros)
@@ -646,6 +850,15 @@ class ConsensusRuntime:
                             / float(layout.n_rows * layout.block))
         metrics = {"overflow_frac": overflow, "residual_norm": residual,
                    **self._wire_metrics(layout)}
+        if push:
+            metrics["push_sum_weight"] = ps_new[0]
+        if keep_up is not None:
+            # bytes accounting excludes dropped payloads (one flat payload
+            # + trailer per surviving ring direction)
+            metrics["wire_bytes_delivered"] = (
+                float(plan.wire_bytes(push))
+                * (keep_up.astype(jnp.float32)
+                   + keep_dn.astype(jnp.float32)))
         if cfg.track_consensus_error:
             metrics["consensus_err"] = _consensus_error(x_next, self.ctx)
         return x_next, new_state, metrics
@@ -667,6 +880,29 @@ class ConsensusRuntime:
         resync = self._resync_flag(step)
         step_k = self._step_k(step)
         key = _device_key(key, ctx)
+        push = cfg.push_sum_enabled
+        w_fwd, w_bwd = cfg.in_weights
+        directed = w_fwd != w_bwd
+        keep_up, keep_dn = self._keep_flags(step)
+        if push:
+            # reference path: the weight scalar is its own (tiny) ppermute
+            # pair instead of the packed payload trailer — same received
+            # values bit-for-bit (the trailer is an fp32 bitcast roundtrip)
+            ps_w = state["ps_w"]
+            fresh_l = _ppermute_ring(ps_w, ctx, +stride)
+            fresh_r = _ppermute_ring(ps_w, ctx, -stride)
+            w_l, w_r = fresh_l, fresh_r
+            if keep_up is not None:
+                w_l = jnp.where(keep_up, fresh_l, state["ps_nbr"][0:1])
+                w_r = jnp.where(keep_dn, fresh_r, state["ps_nbr"][1:2])
+            if resync is not None:
+                # reliable control-plane refresh at epoch boundaries (the
+                # fresh ppermute already ran on this path, so no extra
+                # collective inside a cond)
+                w_l = jnp.where(resync, fresh_l, w_l)
+                w_r = jnp.where(resync, fresh_r, w_r)
+            ps_new = ps_w + (jnp.float32(w_fwd) * (w_l - ps_w)
+                             + jnp.float32(w_bwd) * (w_r - ps_w))
         leaves, treedef = jax.tree_util.tree_flatten(x_half)
         prev_leaves = jax.tree_util.tree_flatten(x_prev)[0]
         leaf_keys = (jax.random.split(key, len(leaves))
@@ -685,6 +921,8 @@ class ConsensusRuntime:
             slot = layout.slots[i]
             full = kops.padded_block_rows(slot.size)
             xh_b = kops.blockify(leaf_half.astype(jnp.float32).reshape(-1))
+            if push:
+                xh_b = xh_b * ps_w[0]       # numerator domain (cf. packed)
             xtb = rowpad(layout.leaf_rows(state["x_tilde"], i), full)
             mb = rowpad(layout.leaf_rows(state["m_agg"], i), full)
             yb = xh_b - xtb
@@ -705,16 +943,39 @@ class ConsensusRuntime:
             s_l = _ppermute_ring(scales, ctx, +stride)
             c_r = _ppermute_ring(codes, ctx, -stride)
             s_r = _ppermute_ring(scales, ctx, -stride)
+            if keep_up is not None:
+                # dropped packet == zero codes AND zero scales: exactly
+                # what decoding the packed path's zeroed payload yields
+                c_l = jnp.where(keep_up, c_l, jnp.zeros_like(c_l))
+                s_l = jnp.where(keep_up, s_l, jnp.zeros_like(s_l))
+                c_r = jnp.where(keep_dn, c_r, jnp.zeros_like(c_r))
+                s_r = jnp.where(keep_dn, s_r, jnp.zeros_like(s_r))
             if resync is not None:
                 def _rebuild(xtb=xtb):
                     xt_l = _ppermute_ring(xtb, ctx, +stride)
                     xt_r = _ppermute_ring(xtb, ctx, -stride)
+                    if directed:
+                        return (jnp.float32(w_fwd) * xt_l
+                                + jnp.float32(w_bwd) * xt_r)
                     return jnp.float32(cfg.side_weight) * (xt_l + xt_r)
                 mb = jax.lax.cond(resync, _rebuild, lambda mb=mb: mb)
             xt_new_b, m_new_b, comb_b = kops.dequant_combine(
                 codes, scales, c_l, s_l, c_r, s_r, xtb, mb,
                 cfg.self_weight, cfg.side_weight, jnp.float32(1.0),
                 use_pallas=cfg.use_pallas)
+            if directed:
+                # same antisymmetric out-of-kernel correction as the
+                # packed path (see _adc_exchange)
+                d_l = c_l.astype(jnp.float32) * s_l
+                d_r = c_r.astype(jnp.float32) * s_r
+                # barrier pins rounding (no fma contraction) so the
+                # reference stays bit-identical to the packed transport
+                t = jax.lax.optimization_barrier(
+                    jnp.float32(w_fwd - cfg.side_weight) * (d_l - d_r))
+                m_new_b = m_new_b + t
+                comb_b = comb_b + t
+            if push:
+                comb_b = comb_b / ps_new[0]         # de-bias z = num / w
             grad_step = (leaf_half.astype(jnp.float32)
                          - leaf_prev.astype(jnp.float32))
             combined = kops.unblockify(comb_b, slot.size).reshape(slot.shape)
@@ -725,11 +986,23 @@ class ConsensusRuntime:
         x_next = jax.tree_util.tree_unflatten(treedef, new_x)
         new_state = {"x_tilde": layout.from_leaf_rows(new_xt_rows),
                      "m_agg": layout.from_leaf_rows(new_m_rows)}
+        if push:
+            new_state["ps_w"] = ps_new
+            new_state["ps_nbr"] = jnp.concatenate([w_l, w_r])
         overflow = clipped_acc / float(layout.n_rows * layout.block)
         residual = jnp.sqrt(residual_sq
                             / float(layout.n_rows * layout.block))
         metrics = {"overflow_frac": overflow, "residual_norm": residual,
                    **self._wire_metrics(layout)}
+        if push:
+            metrics["push_sum_weight"] = ps_new[0]
+        if keep_up is not None:
+            rows = sum(kops.padded_block_rows(s.size) for s in layout.slots)
+            shipped = rows * kops.payload_width() + (
+                wireplan.PUSH_SUM_TRAILER_BYTES if push else 0)
+            metrics["wire_bytes_delivered"] = (
+                float(shipped) * (keep_up.astype(jnp.float32)
+                                  + keep_dn.astype(jnp.float32)))
         if cfg.track_consensus_error:
             metrics["consensus_err"] = _consensus_error(x_next, self.ctx)
         return x_next, new_state, metrics

@@ -1,0 +1,94 @@
+"""Deterministic link-fault injection for the consensus exchange.
+
+Real federated/edge networks drop packets; the differential ADC wire is
+naturally robust to this: a receiver that misses a round simply keeps its
+last estimate of the sender's ``x_tilde`` (the missed differential has
+magnitude ~ Delta_k -> 0), and the epoch-boundary ``m_agg`` resync of
+time-varying rings repairs any accumulated drift exactly.
+
+:class:`LossModel` realizes per-directed-edge Bernoulli drops that are
+
+  * **deterministic and seedable** — the drop decision for (step, ring
+    direction, receiving node) is a pure counter-based PRNG function, so
+    every retrace, every chunking of the pipelined transport and every
+    host-side oracle sees the SAME mask (tests/test_faults.py pins this);
+  * **traceable** — ``keep`` works on traced step / node indices inside
+    shard_map (``jax.random.fold_in`` chains);
+  * **packet-level** — one decision per direction per step covers the whole
+    flat payload (all pipeline chunks of a step drop together, which is
+    what keeps packed and pipelined transports bit-identical under loss).
+
+Dropped payloads are zeroed at the receiver (every wire codec decodes the
+all-zero payload to an exact zero differential), which implements
+stale-``x_tilde`` reuse; bytes accounting excludes them (the runtime's
+``wire_bytes_delivered`` metric).  The epoch-boundary resync exchange is
+control-plane traffic and modeled as reliable.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["LossModel"]
+
+#: direction ids folded into the drop key: 0 = payload arriving from the
+#: upstream (+stride ppermute) neighbor, 1 = from the downstream one
+FROM_UPSTREAM = 0
+FROM_DOWNSTREAM = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class LossModel:
+    """Per-directed-edge Bernoulli packet loss, rate in [0, 1).
+
+    A directed edge is identified by its *receiving* node and the ring
+    direction the payload travels — together with the step index these
+    three integers address one packet, and its drop decision is
+    ``uniform(fold(seed, step, direction, node)) < rate``.
+
+    ``rate=0.0`` keeps the loss machinery in the trace but never drops:
+    the exchange must be bit-identical to a trace without the machinery
+    (tests/test_faults.py), which is why the runtime distinguishes
+    ``link_loss=None`` (no machinery) from ``link_loss=0.0``.
+    """
+
+    rate: float
+    seed: int = 0
+
+    def __post_init__(self):
+        if not 0.0 <= self.rate < 1.0:
+            raise ValueError(f"loss rate must be in [0, 1), got {self.rate}")
+
+    # -- traced path (inside shard_map) ---------------------------------
+    def _key(self, step, direction, node):
+        key = jax.random.PRNGKey(self.seed)
+        key = jax.random.fold_in(key, jnp.asarray(step, jnp.int32))
+        key = jax.random.fold_in(key, jnp.asarray(direction, jnp.int32))
+        return jax.random.fold_in(key, jnp.asarray(node, jnp.int32))
+
+    def keep(self, step, direction, node):
+        """Boolean scalar: does the payload of ``step`` travelling in ring
+        ``direction`` toward receiving ``node`` arrive?  All arguments may
+        be traced."""
+        u = jax.random.uniform(self._key(step, direction, node))
+        return u >= jnp.float32(self.rate)
+
+    # -- host-side oracle (tests, accounting) ---------------------------
+    def keep_mask_host(self, n_nodes: int, steps,
+                       directions: int = 2) -> np.ndarray:
+        """The full keep mask as a concrete ``(len(steps), directions,
+        n_nodes)`` bool array — the same PRNG chain as :meth:`keep`, so
+        tests can predict exactly which packets a traced exchange drops."""
+        steps = np.atleast_1d(np.asarray(steps, np.int32))
+        out = np.empty((len(steps), directions, n_nodes), dtype=bool)
+        for si, s in enumerate(steps):
+            for d in range(directions):
+                for v in range(n_nodes):
+                    out[si, d, v] = bool(self.keep(int(s), d, v))
+        return out
+
+    def expected_delivered_frac(self) -> float:
+        return 1.0 - self.rate

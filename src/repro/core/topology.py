@@ -9,6 +9,15 @@ The consensus matrix ``W`` must satisfy the paper's three properties
 
 ``beta = max(|lam_2|, |lam_N|) < 1`` is the mixing rate that appears in every
 convergence bound of the paper (error ball ``alpha*D/(1-beta)`` etc.).
+
+Directed networks (DESIGN.md §Push-sum wire): a :class:`DirectedMixingMatrix`
+is only **column** stochastic — each sender splits unit mass over its
+out-edges (``out_degree_weights``) but in-mass need not sum to 1, so plain
+DGD converges to a *reweighted* average.  Push-sum (ratio consensus; Toghani
+& Uribe, arXiv:2204.08160 compose it with arbitrary unbiased compression)
+repairs this with a weight scalar ``w`` mixed by the same matrix: the
+de-biased iterate is ``z = x / w``.  The directed mixing rate is the
+second-largest eigenvalue *modulus* (eigenvalues are complex in general).
 """
 from __future__ import annotations
 
@@ -19,6 +28,7 @@ import numpy as np
 
 __all__ = [
     "MixingMatrix",
+    "DirectedMixingMatrix",
     "ring",
     "fully_connected",
     "star",
@@ -27,19 +37,28 @@ __all__ = [
     "expander",
     "paper_fig3",
     "paper_circle",
+    "directed_ring",
+    "directed_cycle",
+    "directed_erdos_renyi",
     "metropolis_weights",
     "lazy_metropolis_weights",
+    "out_degree_weights",
     "spectral_beta",
     "validate_mixing_matrix",
+    "validate_column_stochastic",
     "TopologySchedule",
     "StaticSchedule",
     "PeriodicSchedule",
     "ErdosRenyiSchedule",
     "RandomGeometricSchedule",
+    "DirectedErdosRenyiSchedule",
     "as_schedule",
     "erdos_renyi_graph",
     "random_geometric_graph",
+    "directed_erdos_renyi_graph",
     "is_connected",
+    "is_strongly_connected",
+    "push_sum_weights",
     "schedule_by_name",
 ]
 
@@ -66,11 +85,63 @@ class MixingMatrix:
         np.fill_diagonal(off, 0.0)
         return int((np.abs(off) > 1e-12).sum() // 2)
 
+    @property
+    def is_directed(self) -> bool:
+        return False
+
+    @property
+    def n_messages(self) -> int:
+        """Point-to-point messages one gossip round puts on the wire: every
+        undirected edge carries the broadcast in both directions."""
+        return 2 * self.n_edges
+
     def neighbors(self, i: int) -> list[int]:
         return [j for j in range(self.n) if j != i and abs(self.w[i, j]) > 1e-12]
 
     def validate(self) -> None:
         validate_mixing_matrix(self.w)
+
+
+@dataclasses.dataclass(frozen=True)
+class DirectedMixingMatrix(MixingMatrix):
+    """A column-stochastic consensus matrix over a *directed* graph.
+
+    ``w[i, j] > 0`` iff the directed edge ``j -> i`` exists (or ``i == j``):
+    column ``j`` is how sender ``j`` splits its unit mass over its
+    out-neighbors.  Rows need NOT sum to 1 — that asymmetry is exactly what
+    the push-sum weight scalar corrects (``push_sum_weights``).  ``beta`` is
+    the second-largest eigenvalue modulus (complex spectrum in general).
+    """
+
+    @property
+    def is_directed(self) -> bool:
+        return True
+
+    @property
+    def n_edges(self) -> int:
+        """Number of *directed* communication edges (excluding self loops)."""
+        off = self.w.copy()
+        np.fill_diagonal(off, 0.0)
+        return int((np.abs(off) > 1e-12).sum())
+
+    @property
+    def n_messages(self) -> int:
+        """Each directed edge carries exactly one message per round."""
+        return self.n_edges
+
+    def in_neighbors(self, i: int) -> list[int]:
+        """Senders node ``i`` hears from (support of row i)."""
+        return [j for j in range(self.n) if j != i and abs(self.w[i, j]) > 1e-12]
+
+    def out_neighbors(self, j: int) -> list[int]:
+        """Receivers node ``j`` pushes to (support of column j)."""
+        return [i for i in range(self.n) if i != j and abs(self.w[i, j]) > 1e-12]
+
+    def neighbors(self, i: int) -> list[int]:
+        return self.in_neighbors(i)
+
+    def validate(self) -> None:
+        validate_column_stochastic(self.w)
 
 
 def validate_mixing_matrix(w: np.ndarray, atol: float = 1e-8) -> None:
@@ -89,10 +160,36 @@ def validate_mixing_matrix(w: np.ndarray, atol: float = 1e-8) -> None:
         raise ValueError(f"lambda_1(W) = {lam[-1]} must equal 1")
 
 
+def validate_column_stochastic(w: np.ndarray, atol: float = 1e-8) -> None:
+    """Section III-A requirements relaxed to the push-sum (directed) setting:
+    non-negative, columns sum to 1, strictly positive diagonal (every node
+    keeps some of its own mass — this is what keeps push-sum weights
+    strictly positive along any matrix product: w' = A w >= A_ii * w_i)."""
+    if w.ndim != 2 or w.shape[0] != w.shape[1]:
+        raise ValueError(f"W must be square, got {w.shape}")
+    if (w < -atol).any():
+        raise ValueError("column-stochastic W must be non-negative")
+    if not np.allclose(w.sum(axis=0), 1.0, atol=atol):
+        raise ValueError("W must be column stochastic (column sums == 1)")
+    if (np.diag(w) <= atol).any():
+        raise ValueError(
+            "column-stochastic W needs a strictly positive diagonal "
+            "(push-sum weight positivity; add a self loop / self_weight > 0)")
+
+
 def spectral_beta(w: np.ndarray) -> float:
-    """beta = max(|lambda_2|, |lambda_N|) — the mixing rate of W."""
-    lam = np.sort(np.linalg.eigvalsh(np.asarray(w, dtype=np.float64)))
-    return float(max(abs(lam[0]), abs(lam[-2]))) if len(lam) > 1 else 0.0
+    """beta = max(|lambda_2|, |lambda_N|) — the mixing rate of W.
+
+    Symmetric matrices use the (exact, ordered) Hermitian eigensolver; an
+    asymmetric (directed, column-stochastic) W has a complex spectrum, so
+    beta is the second-largest eigenvalue *modulus*.
+    """
+    w = np.asarray(w, dtype=np.float64)
+    if np.allclose(w, w.T, atol=1e-12):
+        lam = np.sort(np.linalg.eigvalsh(w))
+        return float(max(abs(lam[0]), abs(lam[-2]))) if len(lam) > 1 else 0.0
+    mods = np.sort(np.abs(np.linalg.eigvals(w)))
+    return float(mods[-2]) if len(mods) > 1 else 0.0
 
 
 # ---------------------------------------------------------------------------
@@ -122,6 +219,33 @@ def lazy_metropolis_weights(adj: np.ndarray, laziness: float = 0.5) -> np.ndarra
     w = metropolis_weights(adj)
     n = w.shape[0]
     return (1.0 - laziness) * np.eye(n) + laziness * w
+
+
+def out_degree_weights(adj: np.ndarray,
+                       self_weight: float = 0.5) -> np.ndarray:
+    """Column-stochastic push weights for a directed adjacency.
+
+    ``adj[i, j]`` is the directed edge ``j -> i``.  Sender ``j`` keeps
+    ``self_weight`` and splits ``1 - self_weight`` equally over its
+    out-neighbors: ``W_ij = (1 - self_weight) / outdeg(j)``.  A sink
+    (outdeg 0) keeps all its mass.  This is the standard push-sum weight
+    rule — each node only needs to KNOW ITS OWN out-degree, never the
+    global graph (the reason push-sum works over directed networks at all).
+    """
+    if not 0.0 < self_weight < 1.0:
+        raise ValueError(f"self_weight must be in (0, 1), got {self_weight}")
+    adj = np.asarray(adj, dtype=bool).copy()
+    np.fill_diagonal(adj, False)
+    n = adj.shape[0]
+    outdeg = adj.sum(axis=0)                      # column sums = out-degrees
+    w = np.zeros((n, n), dtype=np.float64)
+    for j in range(n):
+        if outdeg[j] == 0:
+            w[j, j] = 1.0
+            continue
+        w[:, j] = adj[:, j] * ((1.0 - self_weight) / outdeg[j])
+        w[j, j] = self_weight
+    return w
 
 
 # ---------------------------------------------------------------------------
@@ -238,6 +362,78 @@ def paper_circle(n: int) -> MixingMatrix:
     return ring(n, self_weight=0.5)
 
 
+def _dmm(w: np.ndarray, name: str) -> DirectedMixingMatrix:
+    m = DirectedMixingMatrix(w=np.asarray(w, dtype=np.float64), name=name)
+    m.validate()
+    return m
+
+
+def directed_ring(n: int, self_weight: float = 0.5,
+                  forward_weight: float | None = None) -> DirectedMixingMatrix:
+    """Asymmetric circulant ring: node i pushes ``forward_weight`` to i+1 and
+    the remainder ``1 - self_weight - forward_weight`` to i-1 (mod n).
+
+    With ``forward_weight != (1 - self_weight)/2`` the matrix is genuinely
+    asymmetric (complex spectrum, push-sum analysis applies) while remaining
+    — like every constant-weight circulant — doubly stochastic, so it is the
+    natural bridge case between the paper's symmetric ring and arbitrary
+    directed graphs; the default sends 2/3 of the leaving mass forward.
+    This is the matrix the distributed runtime's ``topology="directed-ring"``
+    realizes on the device ring (core.distributed).
+    """
+    if not 0.0 < self_weight < 1.0:
+        raise ValueError(f"self_weight must be in (0, 1), got {self_weight}")
+    if forward_weight is None:
+        forward_weight = 2.0 * (1.0 - self_weight) / 3.0
+    backward = 1.0 - self_weight - forward_weight
+    if forward_weight <= 0.0 or backward < 0.0:
+        raise ValueError(
+            f"forward_weight must be in (0, 1 - self_weight]; got "
+            f"{forward_weight} with self_weight={self_weight}")
+    if n < 2:
+        return _dmm(np.ones((1, 1)), f"directed_ring{n}")
+    w = np.zeros((n, n))
+    for j in range(n):
+        w[j, j] = self_weight
+        w[(j + 1) % n, j] += forward_weight
+        w[(j - 1) % n, j] += backward
+    return _dmm(w, f"directed_ring{n}")
+
+
+def directed_cycle(n: int, self_weight: float = 0.5) -> DirectedMixingMatrix:
+    """Pure one-directional push ring: i sends ONLY to i+1 (mod n) — the
+    minimal strongly connected digraph (diameter n-1, slowest mixing)."""
+    return directed_ring(n, self_weight=self_weight,
+                         forward_weight=1.0 - self_weight)
+
+
+def directed_erdos_renyi(n: int, p: float, seed: int = 0,
+                         self_weight: float = 0.5,
+                         ensure_connected: bool = True
+                         ) -> DirectedMixingMatrix:
+    """One directed G(n, p) sample with out-degree-normalized push weights.
+
+    Generic draws have non-uniform in-degrees, so the matrix is column- but
+    not row-stochastic — plain DGD would converge to a biased average and
+    push-sum correction is *required* (the property the reference push-sum
+    tests pin).  ``ensure_connected`` rejection-samples until strongly
+    connected (every per-sample beta < 1).
+    """
+    rng = np.random.default_rng(seed)
+    adj = directed_erdos_renyi_graph(n, p, rng)
+    attempts = 0
+    while ensure_connected and not is_strongly_connected(adj):
+        adj = directed_erdos_renyi_graph(n, p, rng)
+        attempts += 1
+        if attempts > 1000:
+            raise RuntimeError(
+                f"directed_erdos_renyi(n={n}, p={p}): no strongly connected "
+                "draw in 1000 tries — increase p or set "
+                "ensure_connected=False")
+    return _dmm(out_degree_weights(adj, self_weight),
+                f"directed_er(n={n},p={p})")
+
+
 def by_name(name: str, n: int | None = None, **kw) -> MixingMatrix:
     """Topology registry used by configs / CLI (--topology ring --nodes 8)."""
     builders = {
@@ -248,6 +444,11 @@ def by_name(name: str, n: int | None = None, **kw) -> MixingMatrix:
         "expander": lambda: expander(n, **kw),
         "paper_fig3": paper_fig3,
         "paper_circle": lambda: paper_circle(n),
+        "directed-ring": lambda: directed_ring(n, **kw),
+        "directed_ring": lambda: directed_ring(n, **kw),
+        "directed-cycle": lambda: directed_cycle(n, **kw),
+        "directed_cycle": lambda: directed_cycle(n, **kw),
+        "directed_er": lambda: directed_erdos_renyi(n, **kw),
     }
     if name.startswith("torus"):
         r, c = name[5:].split("x")
@@ -294,6 +495,64 @@ def random_geometric_graph(n: int, radius: float,
     adj = d2 <= radius**2
     np.fill_diagonal(adj, False)
     return adj
+
+
+def directed_erdos_renyi_graph(n: int, p: float,
+                               rng: np.random.Generator) -> np.ndarray:
+    """One directed G(n, p) sample: each *ordered* pair (j, i), i != j, is
+    an edge j -> i (``adj[i, j]``) i.i.d. w.p. ``p`` — edge directions are
+    independent, so asymmetric links are the typical case."""
+    adj = rng.random((n, n)) < p
+    np.fill_diagonal(adj, False)
+    return adj
+
+
+def is_strongly_connected(adj: np.ndarray) -> bool:
+    """Strong connectivity of a directed adjacency (``adj[i, j]`` = edge
+    j -> i): node 0 must reach every node following edges forward AND
+    backward (one BFS on adj and one on its transpose)."""
+    adj = np.asarray(adj, dtype=bool)
+
+    def _reaches_all(a: np.ndarray) -> bool:
+        n = a.shape[0]
+        if n == 0:
+            return True
+        seen = np.zeros(n, dtype=bool)
+        frontier = np.zeros(n, dtype=bool)
+        seen[0] = frontier[0] = True
+        while frontier.any():
+            nxt = a[:, frontier].any(axis=1) & ~seen
+            seen |= nxt
+            frontier = nxt
+        return bool(seen.all())
+
+    return _reaches_all(adj) and _reaches_all(adj.T)
+
+
+def push_sum_weights(matrices: "Sequence[MixingMatrix] | TopologySchedule",
+                     horizon: int | None = None) -> np.ndarray:
+    """Push-sum weight trajectory ``w_k = W^(k-1) ... W^(0) 1`` over a
+    matrix sequence — the scalar the consensus layer threads through the
+    wire.  Returns ``(horizon + 1, N)`` with ``w_0 = 1``.  Column
+    stochasticity preserves ``sum(w_k) == N``; a strictly positive diagonal
+    keeps every entry strictly positive (``validate_column_stochastic``) —
+    the two invariants the property-based tests check over long sampled
+    horizons."""
+    if isinstance(matrices, TopologySchedule):
+        sched = matrices
+        steps = sched.period if horizon is None else horizon
+        mats = [sched.matrix_at(i).w for i in range(steps)]
+    else:
+        mats = [m.w for m in matrices]
+        if horizon is not None:
+            mats = [mats[i % len(mats)] for i in range(horizon)]
+    n = mats[0].shape[0]
+    w = np.ones(n, dtype=np.float64)
+    out = [w.copy()]
+    for a in mats:
+        w = np.asarray(a, dtype=np.float64) @ w
+        out.append(w.copy())
+    return np.stack(out)
 
 
 # ---------------------------------------------------------------------------
@@ -346,6 +605,18 @@ class TopologySchedule:
         return float(np.mean([m.n_edges for m in self.matrices]))
 
     @property
+    def is_directed(self) -> bool:
+        """True when any matrix of the schedule is column-stochastic only —
+        the consensus layer then threads the push-sum weight scalar."""
+        return any(m.is_directed for m in self.matrices)
+
+    @property
+    def n_messages(self) -> float:
+        """Mean point-to-point message count per round (bytes accounting):
+        2E for undirected matrices, E for directed ones."""
+        return float(np.mean([m.n_messages for m in self.matrices]))
+
+    @property
     def beta(self) -> float:
         """Spectral gap of the *mean* matrix E[W] — the quantity governing
         convergence of consensus over i.i.d. random graphs (CHOCO-SGD /
@@ -365,6 +636,12 @@ class TopologySchedule:
     def edges_per_step(self, n_steps: int) -> np.ndarray:
         """Undirected edge count of the matrix used at each iteration."""
         counts = np.array([m.n_edges for m in self.matrices], dtype=np.float64)
+        return counts[self.indices_for(n_steps)]
+
+    def messages_per_step(self, n_steps: int) -> np.ndarray:
+        """Wire message count of the matrix used at each iteration."""
+        counts = np.array([m.n_messages for m in self.matrices],
+                          dtype=np.float64)
         return counts[self.indices_for(n_steps)]
 
     def validate(self) -> None:
@@ -445,6 +722,35 @@ class RandomGeometricSchedule(TopologySchedule):
         super().__init__(mats, name)
 
 
+class DirectedErdosRenyiSchedule(TopologySchedule):
+    """i.i.d. *directed* G(n, p) samples with out-degree-normalized
+    (column-stochastic) push weights — the time-varying directed-network
+    model push-sum consensus targets.  Individual draws may fail to be
+    strongly connected (only joint connectivity matters) unless
+    ``ensure_connected``; every sample keeps ``self_weight`` on the
+    diagonal, so push-sum weights stay strictly positive along any sampled
+    horizon (the property-based tests' invariant)."""
+
+    def __init__(self, n: int, p: float, horizon: int = 64, seed: int = 0,
+                 ensure_connected: bool = True, self_weight: float = 0.5):
+        name = f"directed_er(n={n},p={p})"
+        rng = np.random.default_rng(seed)
+        mats: list[MixingMatrix] = []
+        for t in range(horizon):
+            adj = directed_erdos_renyi_graph(n, p, rng)
+            attempts = 0
+            while ensure_connected and not is_strongly_connected(adj):
+                adj = directed_erdos_renyi_graph(n, p, rng)
+                attempts += 1
+                if attempts > 1000:
+                    raise RuntimeError(
+                        f"{name}: no strongly connected draw in 1000 tries "
+                        "— increase p or set ensure_connected=False")
+            mats.append(_dmm(out_degree_weights(adj, self_weight),
+                             f"{name}[{t}]"))
+        super().__init__(mats, name)
+
+
 def as_schedule(mixing: "MixingMatrix | TopologySchedule") -> TopologySchedule:
     """Normalize a static W or an existing schedule to a TopologySchedule."""
     if isinstance(mixing, TopologySchedule):
@@ -473,4 +779,6 @@ def schedule_by_name(name: str, n: int | None = None, **kw) -> TopologySchedule:
         return ErdosRenyiSchedule(n, **kw)
     if name == "rgg":
         return RandomGeometricSchedule(n, **kw)
+    if name == "directed_erdos_renyi":
+        return DirectedErdosRenyiSchedule(n, **kw)
     raise KeyError(f"unknown schedule {name!r}")

@@ -66,7 +66,13 @@ from repro.core.compression import Compressor
 from repro.kernels import ops as kops
 
 __all__ = ["PlanSpec", "parse_spec", "CodecRun", "Fragment", "TransferUnit",
-           "WirePlan", "WirePlanCompressor"]
+           "WirePlan", "WirePlanCompressor", "PUSH_SUM_TRAILER_BYTES"]
+
+#: the push-sum weight scalar rides the packed payload as an fp32 bitcast
+#: appended AFTER the last codec run's fragment (core.distributed), so the
+#: directed transport still issues exactly one ppermute per ring direction;
+#: fragment byte offsets are prefix sums from 0 and never see the trailer
+PUSH_SUM_TRAILER_BYTES = 4
 
 
 # ---------------------------------------------------------------------------
@@ -360,6 +366,13 @@ class WirePlan:
         """Flat wire bytes of one encoded buffer (one ring direction)."""
         last = self.runs[-1]
         return last.byte_start + last.n_rows * self.run_width(last)
+
+    def wire_bytes(self, push_sum: bool = False) -> int:
+        """One ring direction's shipped bytes: the flat payload plus, for
+        the push-sum transport, the fp32 weight trailer riding the last
+        transfer unit (no extra collective)."""
+        return self.payload_bytes + (PUSH_SUM_TRAILER_BYTES if push_sum
+                                     else 0)
 
     def noise_cols(self, block: int | None = None) -> int:
         """Columns of the shared uniform-noise buffer: the max any codec in

@@ -149,6 +149,15 @@ def train_state_specs(defs: T.ModelDefs, ctx: ParallelContext,
         state_shape["consensus"] = {"x_tilde": packed, "m_agg": packed}
         state_spec["consensus"] = {"x_tilde": packed_spec,
                                    "m_agg": packed_spec}
+        if consensus.cfg.push_sum_enabled:
+            # push-sum weight scalar + last-seen neighbor weights (the
+            # stale fallback under link loss) — per device, device-major
+            state_shape["consensus"]["ps_w"] = jax.ShapeDtypeStruct(
+                (n_dev, 1), jnp.float32)
+            state_shape["consensus"]["ps_nbr"] = jax.ShapeDtypeStruct(
+                (n_dev, 2), jnp.float32)
+            state_spec["consensus"]["ps_w"] = P(lead, None)
+            state_spec["consensus"]["ps_nbr"] = P(lead, None)
     else:
         state_shape["consensus"] = {}
         state_spec["consensus"] = {}
@@ -188,6 +197,11 @@ def build_train_setup(
     wire_codec: str = "int8",              # codec name | "mixed:..." plan spec
     byte_budget: float | None = None,      # bytes/step target (controller)
     seed: int = 0,                         # consensus quantization-noise seed
+    topology: str = "ring",                # ring | directed-ring (push-sum)
+    forward_weight: float | None = None,   # directed-ring upstream in-weight
+    link_loss: float | None = None,        # Bernoulli packet-loss rate
+    loss_seed: int = 0,                    # loss-mask seed (core.faults)
+    push_sum: bool | None = None,          # force push-sum weight threading
 ) -> TrainSetup:
     ctx = make_context(mesh, consensus_nodes)
     defs = T.build_defs(cfg, ctx, dtype=compute_dtype)
@@ -197,7 +211,9 @@ def build_train_setup(
         track_consensus_error=track_consensus_error,
         ring_strides=tuple(ring_strides), schedule_period=schedule_period,
         wire_packing=wire_packing, pipeline_chunks=pipeline_chunks,
-        wire_codec=wire_codec, byte_budget=byte_budget)
+        wire_codec=wire_codec, byte_budget=byte_budget,
+        topology=topology, forward_weight=forward_weight,
+        link_loss=link_loss, loss_seed=loss_seed, push_sum=push_sum)
     consensus = ConsensusRuntime(ccfg, ctx)
     opt = opt_by_name(optimizer)
     if schedule == "constant":
@@ -291,6 +307,10 @@ def build_train_setup(
                               **({"aux": P()} if cfg.router_aux_weight and microbatches == 1 else {}),
                               **({"overflow_frac": P(), "residual_norm": P()}
                                  if algorithm == "adc_dgd" else {}),
+                              **({"push_sum_weight": P()}
+                                 if ccfg.push_sum_enabled else {}),
+                              **({"wire_bytes_delivered": P()}
+                                 if ccfg.loss_model is not None else {}),
                               **({"consensus_err": P()} if track_consensus_error else {})})
 
     step_sm = shard_map_compat(step_body, mesh, in_specs=in_specs,
@@ -404,6 +424,21 @@ def main(argv=None):
                          "adaptive controller's candidate filter")
     ap.add_argument("--codec-period", type=int, default=25,
                     help="steps per adaptive-controller epoch")
+    ap.add_argument("--topology", default="ring",
+                    choices=["ring", "directed-ring"],
+                    help="consensus graph of the node ring: directed-ring "
+                         "is column-stochastic only and switches the "
+                         "exchange to push-sum (ratio) consensus "
+                         "(DESIGN.md §Push-sum wire)")
+    ap.add_argument("--forward-weight", type=float, default=None,
+                    help="directed-ring upstream in-weight in "
+                         "(0, 1 - self_weight); default 2(1-w_ii)/3")
+    ap.add_argument("--link-loss", type=float, default=None,
+                    help="per-directed-edge Bernoulli packet-loss rate in "
+                         "[0, 1); dropped payloads fall back to the stale "
+                         "x_tilde estimate (core.faults.LossModel)")
+    ap.add_argument("--loss-seed", type=int, default=0,
+                    help="seed of the deterministic loss masks")
     ap.add_argument("--seed", type=int, default=0,
                     help="run seed: parameter init AND the consensus "
                          "quantization-noise stream")
@@ -438,7 +473,9 @@ def main(argv=None):
                 wire_packing=args.wire_packing,
                 pipeline_chunks=args.pipeline_chunks,
                 wire_codec=codec_name, byte_budget=args.byte_budget,
-                seed=args.seed,
+                seed=args.seed, topology=args.topology,
+                forward_weight=args.forward_weight,
+                link_loss=args.link_loss, loss_seed=args.loss_seed,
                 track_consensus_error=(args.algorithm != "allreduce"))
         return setups[codec_name]
 

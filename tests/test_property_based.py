@@ -10,6 +10,7 @@ pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import compression as C  # noqa: E402
+from repro.core import topology as topo  # noqa: E402
 from repro.kernels import ref  # noqa: E402
 from repro.kernels.quantize import TILE_N  # noqa: E402
 
@@ -57,3 +58,36 @@ def test_quantize_unbiased_property(seed):
     # show zero empirical variance; allow the binomial 3/n * scale slack
     scale_b = np.asarray(scales[0], np.float64)  # (rows, 1)
     assert np.all(np.abs(err) < 6 * se + scale_b * (18.0 / n_trials) + 2e-6)
+
+
+@given(st.integers(2, 12), st.floats(0.15, 0.9), st.integers(0, 2**31 - 1),
+       st.floats(0.05, 0.95))
+@settings(max_examples=40, deadline=None)
+def test_directed_er_column_stochastic_support(n, p, seed, self_weight):
+    """Out-degree push weights of ANY directed G(n, p) sample are a valid
+    column-stochastic matrix whose off-diagonal support is exactly the
+    sampled adjacency (no phantom or missing links on the wire)."""
+    rng = np.random.default_rng(seed)
+    adj = topo.directed_erdos_renyi_graph(n, p, rng)
+    w = topo.out_degree_weights(adj, self_weight=self_weight)
+    topo.validate_column_stochastic(w)
+    np.testing.assert_allclose(w.sum(axis=0), 1.0, atol=1e-12)
+    off = w.copy()
+    np.fill_diagonal(off, 0.0)
+    np.testing.assert_array_equal(off > 0.0, adj)
+
+
+@given(st.integers(2, 10), st.floats(0.2, 0.8), st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_push_sum_weights_positive_long_horizon(n, p, seed):
+    """Push-sum weights stay strictly positive and mass-conserving over a
+    long horizon of i.i.d. directed samples — even when individual draws
+    are NOT strongly connected (the positive diagonal is what guarantees
+    it: w' = W w >= W_ii * w_i > 0)."""
+    sched = topo.DirectedErdosRenyiSchedule(n, p, horizon=16, seed=seed,
+                                            ensure_connected=False)
+    ws = topo.push_sum_weights(sched, horizon=100)
+    assert ws.shape == (101, n)
+    np.testing.assert_allclose(ws[0], 1.0)
+    assert (ws > 0.0).all()
+    np.testing.assert_allclose(ws.sum(axis=1), float(n), atol=1e-8)

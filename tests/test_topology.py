@@ -49,3 +49,109 @@ def test_registry():
     assert topo.by_name("torus4x4").n == 16
     with pytest.raises(KeyError):
         topo.by_name("nope", n=3)
+
+
+# ---------------------------------------------------------------------------
+# Directed (column-stochastic / push-sum) topologies
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dm", [
+    topo.directed_ring(4), topo.directed_ring(9, forward_weight=0.4),
+    topo.directed_cycle(5), topo.directed_erdos_renyi(12, 0.3, seed=1),
+])
+def test_directed_matrices_column_stochastic(dm):
+    dm.validate()
+    assert dm.is_directed
+    np.testing.assert_allclose(dm.w.sum(axis=0), 1.0, atol=1e-12)
+    assert (np.diag(dm.w) > 0).all()
+    assert 0.0 <= dm.beta < 1.0
+
+
+def test_directed_ring_weight_placement():
+    dm = topo.directed_ring(5)          # default: 2/3 of leaving mass forward
+    for j in range(5):
+        assert dm.w[j, j] == pytest.approx(0.5)
+        assert dm.w[(j + 1) % 5, j] == pytest.approx(1.0 / 3.0)
+        assert dm.w[(j - 1) % 5, j] == pytest.approx(1.0 / 6.0)
+    assert not np.allclose(dm.w, dm.w.T)           # genuinely asymmetric
+    # ...but circulant constant weights stay doubly stochastic
+    np.testing.assert_allclose(dm.w.sum(axis=1), 1.0, atol=1e-12)
+    with pytest.raises(ValueError, match="forward_weight"):
+        topo.directed_ring(4, self_weight=0.5, forward_weight=0.6)
+
+
+def test_directed_cycle_minimal_strongly_connected():
+    dm = topo.directed_cycle(5)
+    for j in range(5):
+        assert dm.w[(j + 1) % 5, j] == pytest.approx(0.5)
+        assert dm.w[(j - 1) % 5, j] == 0.0
+    assert dm.n_edges == 5
+    assert dm.n_messages == 5           # one message per directed edge
+    assert topo.is_strongly_connected(np.abs(dm.w - np.diag(np.diag(dm.w)))
+                                      > 1e-12)
+
+
+def test_directed_er_needs_push_sum():
+    dm = topo.directed_erdos_renyi(12, 0.3, seed=1)
+    # column- but NOT row-stochastic: plain DGD would converge to a biased
+    # average — exactly why the push-sum weight exists
+    assert not np.allclose(dm.w.sum(axis=1), 1.0)
+    assert dm.n_messages == dm.n_edges
+
+
+@pytest.mark.parametrize("w,msg", [
+    (np.array([[1.5, 0.0], [-0.5, 1.0]]), "non-negative"),
+    (np.array([[0.5, 0.3], [0.5, 0.6]]), "column"),
+    (np.array([[0.0, 0.5], [1.0, 0.5]]), "diagonal"),
+])
+def test_validate_column_stochastic_rejects(w, msg):
+    with pytest.raises(ValueError, match=msg):
+        topo.validate_column_stochastic(w)
+
+
+def test_out_degree_weights_concrete():
+    adj = np.zeros((4, 4), dtype=bool)
+    adj[1, 0] = adj[2, 0] = True        # 0 -> {1, 2}
+    adj[0, 3] = True                    # 3 -> 0
+    w = topo.out_degree_weights(adj, self_weight=0.6)
+    np.testing.assert_allclose(w[:, 0], [0.6, 0.2, 0.2, 0.0])
+    np.testing.assert_allclose(w[:, 3], [0.4, 0.0, 0.0, 0.6])
+    assert w[1, 1] == 1.0 and w[2, 2] == 1.0       # sinks keep all mass
+    topo.validate_column_stochastic(w)
+    with pytest.raises(ValueError, match="self_weight"):
+        topo.out_degree_weights(adj, self_weight=1.0)
+
+
+def test_is_strongly_connected():
+    n = 6
+    adj = np.zeros((n, n), dtype=bool)
+    for j in range(n):
+        adj[(j + 1) % n, j] = True      # one-directional cycle
+    assert topo.is_strongly_connected(adj)
+    adj[0, n - 1] = False               # break the wrap edge
+    assert not topo.is_strongly_connected(adj)
+    assert topo.is_connected(adj | adj.T)          # still weakly connected
+
+
+def test_push_sum_weights_trajectory():
+    sched = topo.DirectedErdosRenyiSchedule(8, 0.3, horizon=12, seed=0,
+                                            ensure_connected=False)
+    ws = topo.push_sum_weights(sched, horizon=40)
+    assert ws.shape == (41, 8)
+    np.testing.assert_allclose(ws[0], 1.0)
+    np.testing.assert_allclose(ws.sum(axis=1), 8.0, atol=1e-9)  # mass conserved
+    assert (ws > 0.0).all()             # positive diagonal => never collapses
+    # a doubly stochastic circulant has uniform stationary weights: w_k -> 1
+    ws_ring = topo.push_sum_weights([topo.directed_ring(6)], horizon=200)
+    np.testing.assert_allclose(ws_ring[-1], 1.0, atol=1e-9)
+
+
+def test_directed_registry():
+    assert topo.by_name("directed-ring", n=6).is_directed
+    assert topo.by_name("directed_cycle", n=4).n_messages == 4
+    assert topo.by_name("directed_er", n=8, p=0.4, seed=2).is_directed
+    sched = topo.schedule_by_name("directed_erdos_renyi", n=6, p=0.5,
+                                  horizon=9, seed=3)
+    assert sched.period == 9
+    assert sched.is_directed
+    sched.validate()

