@@ -171,6 +171,21 @@ NOISE_TOL = 0.5
 LOSS_SWEEP = (0.0, 0.05, 0.2)
 LOSS_GOSSIP_STEPS = 8
 LOSS_SEED = 1
+#: overlap benchmark (wire_packing="async"): a synthetic-compute load (a
+#: fori_loop matmul chain per device, the model fwd/bwd stand-in) is fused
+#: into the exchange step but kept DATA-INDEPENDENT of it, so XLA may
+#: schedule the ring collectives concurrently with the matmul chain.  The
+#: iteration count is auto-calibrated so compute dominates: roughly
+#: OVERLAP_TARGET_RATIO x the bare packed exchange.
+OVERLAP_MM_DIM = 384
+OVERLAP_TARGET_RATIO = 8.0
+OVERLAP_CAL_ITERS = 8
+OVERLAP_MIN_ITERS = 4
+OVERLAP_MAX_ITERS = 512
+#: ISSUE acceptance: under the compute-dominated load, the async path's
+#: consensus overhead (t_step - t_compute) / t_step must stay below 15%
+OVERLAP_OVERHEAD_BUDGET = 0.15
+OVERLAP_PIPE_CHUNKS = 2
 
 
 def _timing_gate(*paths) -> float:
@@ -689,6 +704,249 @@ def loss_sweep_section(mesh, ctx) -> tuple[dict, bool]:
     return out, ok
 
 
+def _synth_compute(z, iters: int):
+    """The fwd/bwd stand-in: a matmul chain with an RMS renormalization
+    per iteration (keeps magnitudes bounded without letting XLA collapse
+    the loop)."""
+    def body(_, z):
+        z = z @ z
+        return z / (jnp.sqrt(jnp.mean(z * z)) + 1e-6)
+    return jax.lax.fori_loop(0, iters, body, z)
+
+
+def _overlap_tree(key) -> dict:
+    """A small multi-leaf mixed-dtype tree (~0.2 M params): big enough for
+    a real packed wire, small enough that the calibrated compute load —
+    not the exchange — dominates the benchmark's wall clock."""
+    ks = jax.random.split(key, 4)
+    return {
+        "w": jax.random.normal(ks[0], (64, 512), jnp.float32),
+        "b": jax.random.normal(ks[1], (1024,), jnp.bfloat16),
+        "deep": {"m": jax.random.normal(ks[2], (96, 512), jnp.float32)},
+        "tail": jax.random.normal(ks[3], (3, 137), jnp.float32),
+    }
+
+
+def _median_steps(fn, args) -> dict:
+    """compile + warmup + median-of-repeats for an arbitrary jit'd step
+    (same protocol as :func:`time_path`, signature-agnostic)."""
+    out = fn(*args)
+    jax.tree.map(lambda a: a.block_until_ready(), out)
+    for _ in range(WARMUP_STEPS):
+        out = fn(*args)
+    jax.tree.map(lambda a: a.block_until_ready(), out)
+    times = []
+    for _ in range(REPEATS):
+        t0 = time.perf_counter()
+        for _ in range(STEPS_TIMED):
+            out = fn(*args)
+        jax.tree.map(lambda a: a.block_until_ready(), out)
+        times.append((time.perf_counter() - t0) / STEPS_TIMED)
+    sec = float(np.median(times))
+    return {"seconds_per_step": sec, "steps_per_s": 1.0 / sec,
+            "timing_spread": float((np.max(times) - np.min(times)) / sec),
+            "timing_samples": [float(t) for t in times]}
+
+
+def _build_overlap_step(rt: ConsensusRuntime, mesh, tree, iters: int):
+    """Fused compute + exchange step.  The synthetic load reads only the
+    carried ``z`` buffer and the exchange reads only (x, xh, state), so
+    the two are data-independent and the scheduler is free to overlap the
+    ring collectives with the matmul chain — for the async transport the
+    in-flight payload additionally depends on nothing produced this step."""
+    pspec = jax.tree.map(lambda _: P("data"), tree)
+    cons_spec = {"x_tilde": P("data", None, None),
+                 "m_agg": P("data", None, None)}
+    if rt.cfg.wire_packing == "async":
+        for fk in wire.INFLIGHT_KEYS:
+            cons_spec[fk] = P("data", None)
+    noise_spec = P("data", None, None)
+    z_spec = P("data", None, None)
+
+    def init(p):
+        return jax.tree.map(lambda a: a[None], rt.init_state(p))
+
+    init_f = jax.jit(shard_map_compat(init, mesh, in_specs=(pspec,),
+                                      out_specs=cons_spec, check=False))
+
+    def step(xp, xh, st, noise, z, k):
+        st = jax.tree.map(lambda a: a[0], st)
+        z2 = _synth_compute(z[0], iters)
+        x_next, st2, _ = rt.exchange(xp, xh, st, k, jax.random.PRNGKey(3),
+                                     noise=noise[0])
+        return x_next, jax.tree.map(lambda a: a[None], st2), z2[None]
+
+    step_f = jax.jit(shard_map_compat(
+        step, mesh,
+        in_specs=(pspec, pspec, cons_spec, noise_spec, z_spec, P()),
+        out_specs=(pspec, cons_spec, z_spec), check=False))
+    return init_f, step_f
+
+
+def overlap_section(mesh, ctx) -> tuple[dict, bool]:
+    """Async-overlap benchmark (ISSUE 7 tentpole): consensus overhead
+    fraction under a compute-dominated synthetic load.
+
+    Columns: compute-only baseline, then eager packed / pipelined
+    (OVERLAP_PIPE_CHUNKS) / async one-step-stale, each fused with the SAME
+    synthetic load.  ``consensus_overhead_frac = (t_step - t_compute) /
+    t_step`` is the exchange cost NOT hidden behind compute.  CI gates:
+
+      * async consensus_overhead_frac < OVERLAP_OVERHEAD_BUDGET (15%),
+      * async >= pipelined on steps/s within the variance-aware timing
+        gate (the async transport must not lose to the chunked overlap
+        it replaces),
+      * the fused async program still traces EXACTLY 2 ring ppermutes
+        (deterministic structural check — the overlap is scheduling, not
+        extra collectives).
+    """
+    ok = True
+    key = jax.random.PRNGKey(23)
+    tree = _overlap_tree(key)
+    local = jax.tree.map(lambda a: a, tree)
+    layout = wire.WireLayout.for_tree(local)
+    xp = jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (N_DEVICES, *a.shape)), tree)
+    xh = jax.tree.map(
+        lambda a: (a.astype(jnp.float32) + 1e-3).astype(a.dtype), xp)
+    z0 = jax.random.normal(jax.random.fold_in(key, 1),
+                           (N_DEVICES, OVERLAP_MM_DIM, OVERLAP_MM_DIM),
+                           jnp.float32) * 0.05
+
+    # -- calibrate: bare packed exchange, then per-iteration compute cost
+    rt_cal = ConsensusRuntime(
+        ConsensusConfig(algorithm="adc_dgd", quant_mode="adaptive"), ctx)
+    noise = _codec_noise(rt_cal, layout, seed=5)
+    init_f, step_f = build_step(rt_cal, mesh, xp)
+    st = init_f(xp)
+    k2 = jnp.asarray(2, jnp.int32)
+    t_exch = _median_steps(step_f, (xp, xh, st, noise, k2))
+    z_spec = P("data", None, None)
+    compute_f = {}
+    for iters in {OVERLAP_CAL_ITERS}:
+        compute_f[iters] = jax.jit(shard_map_compat(
+            lambda z, it=iters: _synth_compute(z[0], it)[None], mesh,
+            in_specs=(z_spec,), out_specs=z_spec, check=False))
+    t_cal = _median_steps(compute_f[OVERLAP_CAL_ITERS], (z0,))
+    per_iter = t_cal["seconds_per_step"] / OVERLAP_CAL_ITERS
+    iters = int(np.clip(round(
+        OVERLAP_TARGET_RATIO * t_exch["seconds_per_step"] / per_iter),
+        OVERLAP_MIN_ITERS, OVERLAP_MAX_ITERS))
+    compute_f[iters] = jax.jit(shard_map_compat(
+        lambda z: _synth_compute(z[0], iters)[None], mesh,
+        in_specs=(z_spec,), out_specs=z_spec, check=False))
+    t_comp = _median_steps(compute_f[iters], (z0,))
+    out = {"tree_params": layout.n_elements, "mm_dim": OVERLAP_MM_DIM,
+           "synth_iters": iters, "target_ratio": OVERLAP_TARGET_RATIO,
+           "overhead_budget": OVERLAP_OVERHEAD_BUDGET,
+           "pipeline_chunks": OVERLAP_PIPE_CHUNKS,
+           "exchange_only": t_exch, "compute_only": t_comp, "modes": {}}
+    print(f"overlap bench: {layout.n_elements:,} params, bare exchange "
+          f"{t_exch['seconds_per_step'] * 1e3:.1f} ms, compute load "
+          f"{iters} x {OVERLAP_MM_DIM}^2 matmuls = "
+          f"{t_comp['seconds_per_step'] * 1e3:.1f} ms/step", flush=True)
+
+    modes = (
+        ("packed", {"wire_packing": "packed"}),
+        ("pipelined", {"wire_packing": "pipelined",
+                       "pipeline_chunks": OVERLAP_PIPE_CHUNKS}),
+        ("async", {"wire_packing": "async", "staleness": 1}),
+    )
+    for name, kw in modes:
+        rt = ConsensusRuntime(
+            ConsensusConfig(algorithm="adc_dgd", quant_mode="adaptive",
+                            **kw), ctx)
+        noise_m = _codec_noise(rt, layout, seed=5)
+        init_m, step_m = _build_overlap_step(rt, mesh, xp, iters)
+        st_m = init_m(xp)
+        jaxpr = jax.make_jaxpr(step_m)(xp, xh, st_m, noise_m, z0, k2)
+        r = _median_steps(step_m, (xp, xh, st_m, noise_m, z0, k2))
+        r["collectives_per_step"] = count_eqns(jaxpr, "ppermute")
+        r["consensus_overhead_frac"] = max(
+            0.0, (r["seconds_per_step"] - t_comp["seconds_per_step"])
+            / r["seconds_per_step"])
+        print(f"  {name}: {r['steps_per_s']:8.2f} steps/s   overhead "
+              f"{r['consensus_overhead_frac']:.1%}   "
+              f"{r['collectives_per_step']} ppermutes/step   "
+              f"(spread {r['timing_spread']:.0%})", flush=True)
+        out["modes"][name] = r
+
+    a, p = out["modes"]["async"], out["modes"]["pipelined"]
+    if a["collectives_per_step"] != 2:
+        print(f"FAIL[overlap]: fused async step traced "
+              f"{a['collectives_per_step']} ppermutes (want 2)")
+        ok = False
+    if a["consensus_overhead_frac"] >= OVERLAP_OVERHEAD_BUDGET:
+        print(f"FAIL[overlap]: async consensus overhead "
+              f"{a['consensus_overhead_frac']:.1%} exceeds the "
+              f"{OVERLAP_OVERHEAD_BUDGET:.0%} budget under the "
+              "compute-dominated load")
+        ok = False
+    gate = _timing_gate(a, p)
+    out["async_vs_pipelined"] = a["steps_per_s"] / p["steps_per_s"]
+    out["async_gate"] = gate
+    if out["async_vs_pipelined"] < gate:
+        print(f"FAIL[overlap]: async {out['async_vs_pipelined']:.2f}x vs "
+              f"pipelined, below the variance-aware {gate:.2f} gate")
+        ok = False
+    return out, ok
+
+
+def _git_sha() -> str | None:
+    import subprocess
+    try:
+        r = subprocess.run(["git", "rev-parse", "HEAD"], cwd=REPO,
+                           capture_output=True, text=True, timeout=10)
+        return r.stdout.strip() or None
+    except Exception:
+        return None
+
+
+def _config_hash(payload: dict) -> str:
+    """Digest of the benchmark *configuration* (constants, sweeps, plans —
+    everything but the measurements), so a series reader can tell apart
+    'same config re-measured' from 'the benchmark itself changed'."""
+    import hashlib
+    cfg = {k: v for k, v in payload.items()
+           if k not in ("archs", "codecs", "choco_equal_bytes",
+                        "loss_sweep", "overlap")}
+    return hashlib.sha256(
+        json.dumps(cfg, sort_keys=True, default=float).encode()).hexdigest()[:12]
+
+
+def append_run(path: str, payload: dict, ok: bool) -> dict:
+    """Append-mode artifact series: ``BENCH_consensus_step.json`` holds
+    ``{"schema": "bench-series/v1", "runs": [...]}`` with every prior run
+    retained; each run is stamped with the git sha and a config hash.  A
+    pre-series flat payload found at ``path`` is preserved as a legacy
+    first entry.  Cross-run comparisons should use each run's
+    median-of-repeats timings with the variance-aware gate
+    (:func:`_timing_gate`) — single-sample deltas on the shared CI host
+    are noise."""
+    series = {"schema": "bench-series/v1", "runs": []}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                prev = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            prev = None
+        if isinstance(prev, dict) and isinstance(prev.get("runs"), list):
+            series["runs"] = prev["runs"]
+        elif isinstance(prev, dict) and prev:
+            series["runs"] = [{"legacy": True, "git_sha": None,
+                               "config_hash": None, "gates_ok": None,
+                               "payload": prev}]
+    series["runs"].append({
+        "git_sha": _git_sha(),
+        "config_hash": _config_hash(payload),
+        "gates_ok": ok,
+        "payload": payload,
+    })
+    with open(path, "w") as f:
+        json.dump(series, f, indent=1, default=float)
+    return series
+
+
 def main() -> int:
     if jax.device_count() < N_DEVICES:
         print(f"SKIP: need >= {N_DEVICES} devices, have {jax.device_count()} "
@@ -787,6 +1045,8 @@ def main() -> int:
     ok = ok and choco_ok
     loss_sweep, loss_ok = loss_sweep_section(mesh, ctx)
     ok = ok and loss_ok
+    overlap, overlap_ok = overlap_section(mesh, ctx)
+    ok = ok and overlap_ok
     payload = {"n_devices": N_DEVICES, "nodes": NODES,
                "prod_mesh": f"{PROD_FSDP}x{PROD_TP}",
                "steps_timed": STEPS_TIMED, "chunk_sweep": list(CHUNK_SWEEP),
@@ -794,11 +1054,17 @@ def main() -> int:
                "mixed_plan": MIXED_PLAN, "mixed_plan_aggr": MIXED_PLAN_AGGR,
                "mixed_fidelity_tol": MIXED_FIDELITY_TOL,
                "archs": out, "codecs": codecs,
-               "choco_equal_bytes": choco_eb, "loss_sweep": loss_sweep}
-    with open(os.path.join(REPO, "BENCH_consensus_step.json"), "w") as f:
-        json.dump(payload, f, indent=1, default=float)
+               "choco_equal_bytes": choco_eb, "loss_sweep": loss_sweep,
+               "overlap": overlap}
+    series = append_run(os.path.join(REPO, "BENCH_consensus_step.json"),
+                        payload, ok)
+    print(f"bench series: {len(series['runs'])} run(s) recorded "
+          f"(sha {series['runs'][-1]['git_sha']}, config "
+          f"{series['runs'][-1]['config_hash']})", flush=True)
     art = os.path.join(REPO, "benchmarks", "artifacts")
     os.makedirs(art, exist_ok=True)
+    # the artifacts/ copy stays the flat LATEST-run payload (the series
+    # lives at the repo root; this one is for quick single-run inspection)
     with open(os.path.join(art, "consensus_step_latency.json"), "w") as f:
         json.dump(payload, f, indent=1, default=float)
     if not ok:

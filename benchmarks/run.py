@@ -571,11 +571,18 @@ def bench_consensus_step_latency() -> None:
         return
     with open(os.path.join(repo, "BENCH_consensus_step.json")) as f:
         payload = json.load(f)
+    if isinstance(payload.get("runs"), list):
+        # append-mode series (PR 7): summarize the run just recorded
+        payload = payload["runs"][-1]["payload"]
     derived = " ".join(
         f"{a}:{v['speedup']:.1f}x({int(v['per_leaf']['collectives_per_step'])}"
         f"->{int(v['packed']['collectives_per_step'])}coll,"
         f"pipe{v['pipelined_vs_packed']:.2f}x@c{v['pipelined']['best_chunks']})"
         for a, v in payload["archs"].items())
+    ov = payload.get("overlap")
+    if ov:
+        derived += (f" async_ovh:"
+                    f"{ov['modes']['async']['consensus_overhead_frac']:.0%}")
     _row("consensus_step_latency", time.time() - t0, derived)
 
 

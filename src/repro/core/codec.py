@@ -269,19 +269,35 @@ class TopKCodec(WireCodec):
                        .astype(jnp.float32))
 
 
-CODEC_NAMES = ("int8", "int4", "int2", "topk")
+#: every entry is a valid ``by_name`` spec; "topk:k=128" stands in for the
+#: whole ``topk:k=<int>`` parameter family (any k >= 1 dividing BLOCK)
+CODEC_NAMES = ("int8", "int4", "int2", "topk", "topk:k=128")
 
 
 def by_name(name: str) -> WireCodec:
+    """Codec registry.  Besides the bare names, ``"topk:k=<int>"``
+    parameterizes the sparse codec's per-row sample count (bytes scale as
+    ``block // 8 + k + 2``); the instance's ``name`` round-trips the spec
+    string so WirePlan run-merging and fragment lookups stay name-keyed."""
     reg = {
         "int8": Int8Codec,
         "int4": lambda: SubByteCodec(code_bits=4),
         "int2": lambda: SubByteCodec(code_bits=2),
         "topk": TopKCodec,
     }
-    if name not in reg:
-        raise KeyError(f"unknown wire codec {name!r}; have {sorted(reg)}")
-    return reg[name]()
+    if name in reg:
+        return reg[name]()
+    if name.startswith("topk:k="):
+        try:
+            k = int(name[len("topk:k="):])
+        except ValueError:
+            raise KeyError(
+                f"unknown wire codec {name!r}; the topk parameter grammar "
+                "is 'topk:k=<int>'") from None
+        # canonical k keeps the historical bare name (one codec, one name)
+        return TopKCodec(k=k, name="topk" if k == 64 else name)
+    raise KeyError(f"unknown wire codec {name!r}; have "
+                   f"{sorted(reg) + ['topk:k=<int>']}")
 
 
 # ---------------------------------------------------------------------------

@@ -18,6 +18,12 @@ Implemented algorithms:
   * ``CHOCOGossip``     — CHOCO-SGD (Koloskova et al., arXiv:1902.00340):
                           error-feedback compressed gossip — the strongest
                           compressed-consensus baseline from related work.
+  * ``CEDAS``           — one-step-stale ADC gossip (after CEDAS, Huang &
+                          Pu, arXiv:2301.05872): the reference rule of the
+                          runtime's ``wire_packing="async"`` transport —
+                          each step integrates the differential TRANSMITTED
+                          at step k-1 before mixing; ``staleness=0``
+                          reduces bit-exactly to ``ADCDGD``.
   * ``CentralizedGD``   — single-machine gradient descent on the global f
                           (upper-bound reference).
 
@@ -54,6 +60,7 @@ __all__ = [
     "DGDt",
     "CompressedDGD",
     "CHOCOGossip",
+    "CEDAS",
     "CentralizedGD",
     "run",
     "by_name",
@@ -200,6 +207,108 @@ class ADCDGD(_Algorithm):
             # numerator's mixing exactly; gradients (above) are evaluated
             # at the de-biased z = x / ps_w
             new_state["ps_w"] = w @ state["ps_w"]
+        return new_state, metrics
+
+    def bytes_per_iteration(self, problem):
+        return self._compressed_broadcast_bytes(problem)
+
+
+@dataclasses.dataclass(frozen=True)
+class CEDAS(_Algorithm):
+    """One-step-stale compressed diffusion (after CEDAS — Huang & Pu,
+    arXiv:2301.05872): the single-process reference of the runtime's
+    ``wire_packing="async"`` transport (core.distributed).
+
+    The compressed increment ``d_k`` transmitted at step k is NOT
+    integrated until step k+1 — it rides "in flight" across the step
+    boundary, exactly like the runtime's in-flight payload buffer, so the
+    physical transfer overlaps the next step's local compute.  Crucially
+    the gossip term is the *diffusion* difference ``W h - h`` of shadows
+    at a common lag, never a stale ``W x`` replacing the fresh iterate:
+
+        h_k     = h_{k-1} + d_{k-1} / (k-1)^gamma          (retire)
+        x_{k+1} = x_k - alpha_k grad f_i
+                  + mix_step * (sum_j W_ij h_j,k - h_i,k)  (diffusion)
+        d_k     = C(k^gamma (x_{k+1} - h_k))               (launch)
+
+    The naive stale alternative ``x_{k+1} = W h_k - alpha grad`` is
+    generically UNSTABLE: its average mode obeys
+    ``x'' = x_{k-1} - alpha grad_k``, whose characteristic root lies
+    outside the unit circle for any positive stepsize (a slow period-2
+    divergence).  The diffusion form keeps the delay purely in the
+    pipeline — ``h_k`` tracks ``x_k`` up to one retired increment — so
+    the per-mode map is ``1 + mix_step (w - 1) - alpha H``: damped for
+    ``mix_step (1 - w_min) < 2``.  The amplified-differential noise is
+    eps/(k-1)^gamma, summable for gamma > 1/2 as in Theorem 3.
+
+    ``staleness=0`` removes the in-flight delay and is bit-exactly
+    :class:`ADCDGD`.  Push-sum compatible: on directed (column-stochastic)
+    mixing the weight scalar follows the same damped diffusion (which
+    conserves total mass) and gradients are read at the de-biased ratio
+    ``z = x / ps_w``.
+    """
+
+    mixing: MixingMatrix | TopologySchedule
+    compressor: Compressor
+    stepsize: StepSize
+    gamma: float = 1.0
+    staleness: int = 1
+    #: consensus (diffusion) stepsize; 0.5 keeps every ring mode damped
+    #: (|1 + mix_step (w - 1)| < 1 for w in (-1, 1])
+    mix_step: float = 0.5
+    name: str = "cedas"
+
+    def __post_init__(self):
+        if self.staleness not in (0, 1):
+            raise ValueError(
+                f"staleness must be 0 or 1, got {self.staleness}")
+        if not 0.0 < self.mix_step <= 1.0:
+            raise ValueError(
+                f"mix_step must be in (0, 1], got {self.mix_step}")
+
+    def _eager(self) -> ADCDGD:
+        return ADCDGD(self.mixing, self.compressor, self.stepsize,
+                      gamma=self.gamma)
+
+    def init(self, problem, x0: jax.Array | None = None):
+        st = self._eager().init(problem, x0=x0)
+        if self.staleness:
+            # the in-flight increment (amplified domain); zero decodes to
+            # a no-op retire at k = 1, mirroring the runtime's all-zero
+            # init payload
+            st["d_fly"] = jnp.zeros_like(st["x_tilde"])
+        return st
+
+    def step(self, state, problem, key, w=None):
+        if self.staleness == 0:
+            return self._eager().step(state, problem, key, w)
+        w = self._w(w)
+        k = state["k"].astype(jnp.float32)
+        # RETIRE: integrate the increment transmitted at step k-1 (it was
+        # amplified by (k-1)^gamma; max() only guards the k = 1 bootstrap
+        # where d_fly is exactly zero)
+        kg_prev = jnp.maximum(1.0, k - 1.0) ** self.gamma
+        h = state["x_tilde"] + state["d_fly"] / kg_prev
+        grads = problem.grad_fn(self._debias(state))
+        alpha = self.stepsize(k)
+        # damped diffusion on the drained shadows (W h - h, never W x)
+        x_next = (state["x"] - alpha * grads
+                  + self.mix_step * (w @ h - h))
+        # LAUNCH: compress the post-update differential against the
+        # drained shadow; the whole network retires it at step k+1
+        kg = k**self.gamma
+        keys = _per_node_keys(key, self.mixing.n)
+        d = jax.vmap(self.compressor.apply)(keys, kg * (x_next - h))
+        metrics = {
+            "max_transmitted": jnp.max(jnp.abs(d)),
+            "alpha": alpha,
+        }
+        new_state = {"x": x_next, "x_tilde": h, "d_fly": d,
+                     "k": state["k"] + 1}
+        if "ps_w" in state:
+            # mass-conserving damped diffusion of the push-sum weight
+            ps = state["ps_w"]
+            new_state["ps_w"] = ps + self.mix_step * (w @ ps - ps)
         return new_state, metrics
 
     def bytes_per_iteration(self, problem):
@@ -593,6 +702,9 @@ def by_name(name: str, mixing: MixingMatrix | TopologySchedule,
     if name in ("choco_gossip", "choco"):
         return CHOCOGossip(mixing, compressor or IdentityCompressor(),
                            stepsize, **kw)
+    if name == "cedas":
+        return CEDAS(mixing, compressor or IdentityCompressor(), stepsize,
+                     **kw)
     if name == "centralized_gd":
         return CentralizedGD(stepsize)
     raise KeyError(f"unknown algorithm {name!r}")

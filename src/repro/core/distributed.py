@@ -39,7 +39,13 @@ behind Pallas compute at the cost of 2 x pipeline_chunks collectives
 ``wire_packing="per_leaf"`` keeps the historical per-leaf wire path
 (4 x n_leaves collectives per step) as a bit-identical reference for
 tests and the ``consensus_step_latency`` benchmark (DESIGN.md §Hardware
-adaptation).  The byte format of the packed/pipelined payload is set by
+adaptation).  ``wire_packing="async"`` double-buffers the *whole
+exchange* across the step boundary (DESIGN.md §10): the step-k payload
+is launched after the combine and retired at step k+1 (one-step-stale
+gossip, ``staleness=1``), so the two ppermutes overlap the next step's
+fwd/bwd; ``staleness=0`` dispatches to the eager packed path and is
+bit-identical to it.  Epoch-boundary resyncs drain the in-flight
+payload before rebuilding ``m_agg``.  The byte format of the packed/pipelined payload is set by
 ``wire_codec``, a **wire-plan spec** (:mod:`repro.core.wireplan`,
 DESIGN.md §Wire plans): a bare codec name — int8 (historical), int4/int2
 (sub-byte bit-packed) or topk (sparse bitmap + values) — is the uniform
@@ -130,8 +136,19 @@ class ConsensusConfig:
     #: dequant-combined (transfer hidden behind Pallas compute;
     #: bit-identical to "packed"); "per_leaf" is the historical
     #: bit-identical per-leaf reference (4 x n_leaves collectives/step),
-    #: kept for equivalence tests and the consensus_step_latency benchmark.
-    wire_packing: str = "packed"   # packed | pipelined | per_leaf
+    #: kept for equivalence tests and the consensus_step_latency benchmark;
+    #: "async" is the one-step-stale exchange (DESIGN.md §Async overlap):
+    #: step k's payload is put on the wire at the END of step k's exchange
+    #: and its dequant-combine lands at the START of step k+1's, so the
+    #: transfer has the whole of step k+1's fwd/bwd to complete behind —
+    #: still exactly 2 ppermutes per step, gossip one step stale (CEDAS,
+    #: arXiv:2301.05872; reference rule in core.consensus.CEDAS).
+    wire_packing: str = "packed"   # packed | pipelined | per_leaf | async
+    #: gossip staleness of the "async" transport: 1 retires the PREVIOUS
+    #: step's in-flight payload (the overlapped mode); 0 retires the payload
+    #: the same step it is launched — bit-identical to "packed" (the
+    #: exactness fixture, tests/test_wire.py::test_async_*).
+    staleness: int = 1
     #: chunk count for ``wire_packing="pipelined"`` (clamped to the packed
     #: buffer's TILE_N-tile count; ragged tails allowed).  More chunks hide
     #: more transfer latency but pay more launch/collective overhead —
@@ -208,12 +225,21 @@ class ConsensusConfig:
         if self.schedule_period < 1:
             raise ValueError(f"schedule_period must be >= 1, got "
                              f"{self.schedule_period}")
-        if self.wire_packing not in ("packed", "pipelined", "per_leaf"):
-            raise ValueError(f"wire_packing must be 'packed', 'pipelined' "
-                             f"or 'per_leaf', got {self.wire_packing!r}")
+        if self.wire_packing not in ("packed", "pipelined", "per_leaf",
+                                     "async"):
+            raise ValueError(f"wire_packing must be 'packed', 'pipelined', "
+                             f"'per_leaf' or 'async', got "
+                             f"{self.wire_packing!r}")
         if self.pipeline_chunks < 1:
             raise ValueError(f"pipeline_chunks must be >= 1, got "
                              f"{self.pipeline_chunks}")
+        if self.staleness not in (0, 1):
+            raise ValueError(f"staleness must be 0 or 1, got "
+                             f"{self.staleness}")
+        if self.wire_packing == "async" and self.algorithm != "adc_dgd":
+            raise ValueError(
+                "wire_packing='async' is the one-step-stale ADC exchange; "
+                f"algorithm={self.algorithm!r} does not support it")
         spec = wireplan.parse_spec(self.wire_codec)   # raises on bad specs
         if self.wire_packing == "per_leaf":
             if not spec.is_uniform:
@@ -365,6 +391,21 @@ class ConsensusRuntime:
             # at w == 1 every numerator op is a bitwise identity.
             st["ps_w"] = jnp.ones((1,), jnp.float32)
             st["ps_nbr"] = jnp.ones((2,), jnp.float32)
+        if self.cfg.wire_packing == "async":
+            # the async double buffer: step k retires these (launched at
+            # step k-1) before launching its own payload.  Zero bytes
+            # decode to zero differentials on every codec, so the step-1
+            # retire is an exact no-op gossip; the push-sum trailer
+            # pre-encodes w_0 = 1 (a zero trailer would decode to w = 0
+            # and break mass conservation).
+            trailer = None
+            if self.cfg.push_sum_enabled:
+                trailer = jax.lax.bitcast_convert_type(
+                    st["ps_w"], jnp.uint8).reshape(-1)
+            fly = wire.inflight_init(
+                self.wire_plan_for(layout).payload_bytes, trailer)
+            for k in wire.INFLIGHT_KEYS:
+                st[k] = fly
         return st
 
     def state_layout(self, params: Any) -> wire.WireLayout:
@@ -484,7 +525,7 @@ class ConsensusRuntime:
             # except 2 scalar ppermutes inside the amortized resync cond;
             # 2 scalar ppermutes every step on the per-leaf reference
             ps = 2.0 if cfg.push_sum_enabled else 0.0
-            if cfg.wire_packing in ("packed", "pipelined"):
+            if cfg.wire_packing in ("packed", "pipelined", "async"):
                 return 2.0 * chunks + (2.0 * chunks + ps) * resync_amort
             return 4.0 * n_leaves + ps + 2.0 * n_leaves * resync_amort
         if cfg.algorithm == "compressed_dgd":
@@ -549,8 +590,12 @@ class ConsensusRuntime:
                 noise=noise, layout=layout)
         else:
             assert alg == "adc_dgd", alg
-            fn = (self._adc_exchange if packed
-                  else self._adc_exchange_per_leaf)
+            if self.cfg.wire_packing == "async":
+                fn = self._adc_exchange_async
+            elif packed:
+                fn = self._adc_exchange
+            else:
+                fn = self._adc_exchange_per_leaf
             impl = lambda s: fn(  # noqa: E731
                 x_prev, x_half, state, step, key, stride=s, noise=noise,
                 layout=layout)
@@ -855,6 +900,196 @@ class ConsensusRuntime:
         if keep_up is not None:
             # bytes accounting excludes dropped payloads (one flat payload
             # + trailer per surviving ring direction)
+            metrics["wire_bytes_delivered"] = (
+                float(plan.wire_bytes(push))
+                * (keep_up.astype(jnp.float32)
+                   + keep_dn.astype(jnp.float32)))
+        if cfg.track_consensus_error:
+            metrics["consensus_err"] = _consensus_error(x_next, self.ctx)
+        return x_next, new_state, metrics
+
+    # ------------------------------------------------------------------
+    def _adc_exchange_async(self, x_prev, x_half, state, step, key,
+                            stride=1, noise=None, layout=None):
+        """One-step-stale packed ADC exchange (``wire_packing="async"``,
+        DESIGN.md §Async overlap; reference rule: core.consensus.CEDAS).
+
+        The eager exchange launches and retires a payload within one step,
+        so the ring transfer serializes with the training step.  Here the
+        two halves are split across the step boundary via the in-flight
+        double buffer ``wire.INFLIGHT_KEYS`` carried in the consensus
+        state:
+
+          RETIRE  decode + combine the payloads LAUNCHED AT STEP k-1
+                  (grid Delta_{k-1}, loss draw of step k-1) into
+                  x_tilde / m_agg, exactly as the eager retire would have;
+          LAUNCH  encode this step's differential against the
+                  POST-retire shadow (all nodes agree on the shadow
+                  sequence), put it on both ring directions, and carry
+                  the three payloads to step k+1.
+
+        Between a step's launch and the next step's retire sits the whole
+        of the model's fwd/bwd — XLA's async collectives give the transfer
+        that full window to complete.  Still exactly 2 ppermutes per step.
+        The step-1 retire consumes the all-zero init payload (a no-op
+        gossip: every codec decodes zero bytes to a zero differential).
+        On epoch-boundary re-wirings the in-flight payload was permuted by
+        the PREVIOUS stride, so the resync rebuild runs AFTER the retire —
+        draining the buffer into the exact ``m_agg = sum_j W_ij x_tilde_j``
+        of the new ring.  ``staleness=0`` delegates to the eager packed
+        exchange (bit-identity by construction), passing the idle buffer
+        through.
+        """
+        cfg, ctx = self.cfg, self.ctx
+        if cfg.staleness == 0:
+            x_next, ns, metrics = self._adc_exchange(
+                x_prev, x_half, state, step, key, stride=stride,
+                noise=noise, layout=layout)
+            for fk in wire.INFLIGHT_KEYS:
+                ns[fk] = state[fk]
+            return x_next, ns, metrics
+        if layout is None:
+            layout = wire.WireLayout.for_tree(x_half)
+        plan = self.wire_plan_for(layout)
+        unit = plan.transfer_units(None)[0]      # monolithic packed payload
+        resync = self._resync_flag(step)
+        key = _device_key(key, ctx)
+        push = cfg.push_sum_enabled
+        w_fwd, w_bwd = cfg.in_weights
+        directed = w_fwd != w_bwd
+        step_i32 = jnp.asarray(step, jnp.int32)
+        # the in-flight transfer was launched at step k-1: its decode grid
+        # and its loss draw are keyed by the LAUNCH step
+        keep_up, keep_dn = self._keep_flags(step_i32 - 1)
+
+        xt = state["x_tilde"]                    # (n_rows, BLOCK) packed
+        mb = state["m_agg"]
+        pay = state["fly_self"]
+        p_l = state["fly_up"]
+        p_r = state["fly_dn"]
+        if push:
+            ps_w = state["ps_w"]
+            recv_w = {
+                "l": jax.lax.bitcast_convert_type(
+                    p_l[-wireplan.PUSH_SUM_TRAILER_BYTES:],
+                    jnp.float32).reshape(1),
+                "r": jax.lax.bitcast_convert_type(
+                    p_r[-wireplan.PUSH_SUM_TRAILER_BYTES:],
+                    jnp.float32).reshape(1),
+            }
+        if keep_up is not None:
+            p_l = jnp.where(keep_up, p_l, jnp.zeros_like(p_l))
+            p_r = jnp.where(keep_dn, p_r, jnp.zeros_like(p_r))
+
+        # ---- RETIRE: drain the step-(k-1) payloads into the shadows -----
+        dense = {"l": [], "r": []} if directed else None
+        outs = []
+        for f in unit.fragments:
+            cd = wire_codec.by_name(f.codec)
+            if directed:
+                dense["l"].append(cd.decode_payload(
+                    plan.fragment_payload(p_l, f, unit.byte_start),
+                    layout.block))
+                dense["r"].append(cd.decode_payload(
+                    plan.fragment_payload(p_r, f, unit.byte_start),
+                    layout.block))
+            outs.append(cd.decode_combine(
+                plan.fragment_payload(pay, f, unit.byte_start),
+                plan.fragment_payload(p_l, f, unit.byte_start),
+                plan.fragment_payload(p_r, f, unit.byte_start),
+                xt, mb, cfg.self_weight, cfg.side_weight,
+                jnp.float32(1.0), use_pallas=cfg.use_pallas,
+                row_offset=f.row_start, n_rows=f.n_rows))
+        xt_new = wire.lift_concat([o[0] for o in outs])
+        m_new = wire.lift_concat([o[1] for o in outs])
+        comb = wire.lift_concat([o[2] for o in outs])
+        if directed:
+            d_l = wire.lift_concat(dense["l"])
+            d_r = wire.lift_concat(dense["r"])
+            t = jnp.float32(w_fwd - cfg.side_weight) * (d_l - d_r)
+            m_new = m_new + t
+            comb = comb + t
+        if resync is not None:
+            # epoch boundary: the retired payload came from the OLD ring's
+            # neighbors, so drain it FIRST, then rebuild m_agg from the
+            # NEW neighbors' post-retire x_tilde (all nodes' shadows are
+            # consistent at this point — the buffer is fully drained)
+            def _rebuild():
+                xt_l = _ppermute_ring(xt_new, ctx, +stride)
+                xt_r = _ppermute_ring(xt_new, ctx, -stride)
+                if directed:
+                    return (jnp.float32(w_fwd) * xt_l
+                            + jnp.float32(w_bwd) * xt_r)
+                return jnp.float32(cfg.side_weight) * (xt_l + xt_r)
+
+            m_drained = jax.lax.cond(resync, _rebuild, lambda: m_new)
+            comb = comb + (m_drained - m_new)
+            m_new = m_drained
+        if push:
+            w_l, w_r = recv_w["l"], recv_w["r"]
+            if keep_up is not None:
+                w_l = jnp.where(keep_up, w_l, state["ps_nbr"][0:1])
+                w_r = jnp.where(keep_dn, w_r, state["ps_nbr"][1:2])
+            if resync is not None:
+                w_l, w_r = jax.lax.cond(
+                    resync,
+                    lambda: (_ppermute_ring(ps_w, ctx, +stride),
+                             _ppermute_ring(ps_w, ctx, -stride)),
+                    lambda: (w_l, w_r))
+            ps_new = ps_w + (jnp.float32(w_fwd) * (w_l - ps_w)
+                             + jnp.float32(w_bwd) * (w_r - ps_w))
+            comb = comb / ps_new[0]
+        comb_leaves = layout.unpack(comb, cast=False)
+        x_next = jax.tree.map(
+            lambda c, h, p: (c + (h.astype(jnp.float32)
+                                  - p.astype(jnp.float32))).astype(h.dtype),
+            comb_leaves, x_half, x_prev)
+
+        # ---- LAUNCH: encode step k against the drained shadow -----------
+        step_k = self._step_k(step)
+        xh_p = layout.pack(x_half)
+        if push:
+            xh_p = xh_p * ps_new[0]
+            trailer = jax.lax.bitcast_convert_type(
+                ps_new.astype(jnp.float32), jnp.uint8).reshape(-1)
+        y = xh_p - xt_new
+        if noise is None:
+            noise = jax.random.uniform(
+                key, (layout.n_rows, plan.noise_cols(layout.block)),
+                jnp.float32)
+        new_pay = plan.encode_unit(unit, y, noise, fixed_step=step_k,
+                                   use_pallas=cfg.use_pallas)
+        if push:
+            new_pay = wire.lift_concat([new_pay, trailer])
+        new_l = _ppermute_ring(new_pay, ctx, +stride)
+        new_r = _ppermute_ring(new_pay, ctx, -stride)
+
+        clipped = jnp.zeros((), jnp.float32)
+        if cfg.quant_mode == "fixed":
+            # overflow is a property of the ENCODE, so the census reads
+            # this step's freshly launched payload (its retire-side twin
+            # at step k+1 would count the identical integers)
+            for f in unit.fragments:
+                cd = wire_codec.by_name(f.codec)
+                clipped = clipped + cd.count_saturated(
+                    jax.lax.slice_in_dim(y, f.row_start, f.row_end), step_k,
+                    plan.fragment_payload(new_pay, f, unit.byte_start),
+                    layout.block)
+        overflow = clipped / float(plan.codes_total(layout.block))
+
+        new_state = {"x_tilde": xt_new, "m_agg": m_new,
+                     "fly_self": new_pay, "fly_up": new_l, "fly_dn": new_r}
+        if push:
+            new_state["ps_w"] = ps_new
+            new_state["ps_nbr"] = jnp.concatenate([w_l, w_r])
+        residual = jnp.sqrt(jnp.sum(y * y)
+                            / float(layout.n_rows * layout.block))
+        metrics = {"overflow_frac": overflow, "residual_norm": residual,
+                   **self._wire_metrics(layout)}
+        if push:
+            metrics["push_sum_weight"] = ps_new[0]
+        if keep_up is not None:
+            # accounting for the transfer retired this step (step k-1's draw)
             metrics["wire_bytes_delivered"] = (
                 float(plan.wire_bytes(push))
                 * (keep_up.astype(jnp.float32)

@@ -101,6 +101,25 @@ def lift_concat(parts, axis: int = 0):
     return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=axis)
 
 
+#: consensus-state keys of the async (one-step-stale) exchange's in-flight
+#: payload triple: this node's own transmitted payload and the two ring
+#: arrivals, carried across the step boundary (core.distributed)
+INFLIGHT_KEYS = ("fly_self", "fly_up", "fly_dn")
+
+
+def inflight_init(payload_bytes: int, trailer=None):
+    """Initial in-flight wire payload for the async exchange's double
+    buffer: all-zero bytes — every codec decodes an all-zero payload to a
+    zero differential (the same contract the link-loss machinery relies
+    on), so retiring it at step 1 is an exact no-op gossip — plus an
+    optional pre-encoded uint8 trailer (the push-sum weight w_0 = 1, which
+    must NOT decode to 0)."""
+    buf = jnp.zeros((int(payload_bytes),), jnp.uint8)
+    if trailer is not None:
+        buf = jnp.concatenate([buf, trailer.astype(jnp.uint8)])
+    return buf
+
+
 @dataclasses.dataclass(frozen=True)
 class LeafSlot:
     """Where one leaf lives inside the packed buffer (all static)."""

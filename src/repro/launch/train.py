@@ -27,7 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core import wire
+from repro.core import wire, wireplan
 from repro.core.distributed import ConsensusConfig, ConsensusRuntime
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
@@ -40,7 +40,8 @@ from repro.optim.schedules import (constant_schedule, cosine_warmup_schedule,
                                    inverse_power_schedule)
 
 __all__ = ["TrainSetup", "build_train_setup", "train_state_specs",
-           "batch_partition_spec", "main"]
+           "batch_partition_spec", "build_exchange_probe",
+           "measure_consensus_overhead", "main"]
 
 
 @dataclasses.dataclass
@@ -158,6 +159,17 @@ def train_state_specs(defs: T.ModelDefs, ctx: ParallelContext,
                 (n_dev, 2), jnp.float32)
             state_spec["consensus"]["ps_w"] = P(lead, None)
             state_spec["consensus"]["ps_nbr"] = P(lead, None)
+        if consensus.cfg.wire_packing == "async":
+            # the async exchange's in-flight payload triple (core.wire
+            # INFLIGHT_KEYS): one flat uint8 wire payload per entry,
+            # carried across the step boundary
+            nbytes = consensus.wire_plan_for(layout).payload_bytes
+            if consensus.cfg.push_sum_enabled:
+                nbytes += wireplan.PUSH_SUM_TRAILER_BYTES
+            fly = jax.ShapeDtypeStruct((n_dev, nbytes), jnp.uint8)
+            for fk in wire.INFLIGHT_KEYS:
+                state_shape["consensus"][fk] = fly
+                state_spec["consensus"][fk] = P(lead, None)
     else:
         state_shape["consensus"] = {}
         state_spec["consensus"] = {}
@@ -192,8 +204,9 @@ def build_train_setup(
                                         # memory / microbatches per step)
     ring_strides: tuple[int, ...] = (1,),  # time-varying node-ring schedule
     schedule_period: int = 1,              # steps between ring re-wirings
-    wire_packing: str = "packed",          # packed | pipelined | per_leaf
+    wire_packing: str = "packed",          # packed | pipelined | per_leaf | async
     pipeline_chunks: int = 4,              # chunks for wire_packing="pipelined"
+    staleness: int = 1,                    # async gossip staleness (0 = eager)
     wire_codec: str = "int8",              # codec name | "mixed:..." plan spec
     byte_budget: float | None = None,      # bytes/step target (controller)
     seed: int = 0,                         # consensus quantization-noise seed
@@ -211,6 +224,7 @@ def build_train_setup(
         track_consensus_error=track_consensus_error,
         ring_strides=tuple(ring_strides), schedule_period=schedule_period,
         wire_packing=wire_packing, pipeline_chunks=pipeline_chunks,
+        staleness=staleness,
         wire_codec=wire_codec, byte_budget=byte_budget,
         topology=topology, forward_weight=forward_weight,
         link_loss=link_loss, loss_seed=loss_seed, push_sum=push_sum)
@@ -370,6 +384,63 @@ def init_train_state(setup: TrainSetup, key: jax.Array | int):
     return jax.device_put(state, setup.state_sharding)
 
 
+def build_exchange_probe(setup: TrainSetup):
+    """A compiled consensus-exchange-only step (no model fwd/bwd): the
+    numerator of the ``consensus_overhead_frac`` runtime metric (exchange
+    time / step time).  Returns None when the setup runs no adc_dgd
+    exchange."""
+    ctx = setup.ctx
+    cons = setup.consensus
+    if cons.cfg.algorithm != "adc_dgd" or ctx.total_consensus_nodes <= 1:
+        return None
+    _, state_spec = train_state_specs(setup.defs, ctx, cons, setup.optimizer)
+    lead = _mesh_lead_axes(ctx)
+
+    def body(params, cons_state, k):
+        key = jax.random.fold_in(jax.random.PRNGKey(0), k)
+        cons_in = jax.tree.map(lambda a: a[0], cons_state)
+        x_next, cons_out, _ = cons.exchange(params, params, cons_in, k, key)
+        cons_out = jax.tree.map(
+            lambda a: wire.pvary_to(a, lead)[None], cons_out)
+        return x_next, cons_out
+
+    sm = shard_map_compat(
+        body, setup.mesh,
+        in_specs=(state_spec["params"], state_spec["consensus"], P()),
+        out_specs=(state_spec["params"], state_spec["consensus"]),
+        check=True)
+    return jax.jit(sm)
+
+
+def measure_consensus_overhead(setup: TrainSetup, state,
+                               step_time_s: float | None,
+                               repeats: int = 5) -> dict:
+    """Time the exchange alone against the measured full-step time.
+
+    Returns {"consensus_exchange_s": median exchange seconds} plus, when a
+    step time is supplied, {"consensus_overhead_frac": exchange / step} —
+    the fraction the async transport is designed to drive toward zero
+    (an upper bound for overlapped modes: the wall-clock the exchange
+    *can* take, not what the step actually serializes on).
+    """
+    probe = build_exchange_probe(setup)
+    if probe is None:
+        return {}
+    k = jnp.asarray(int(state["step"]) + 1, jnp.int32)
+    out = probe(state["params"], state["consensus"], k)   # compile + warm
+    jax.block_until_ready(out)
+    times = []
+    for _ in range(repeats):
+        t = time.perf_counter()
+        out = probe(state["params"], state["consensus"], k)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t)
+    res = {"consensus_exchange_s": float(np.median(times))}
+    if step_time_s:
+        res["consensus_overhead_frac"] = res["consensus_exchange_s"] / step_time_s
+    return res
+
+
 # ---------------------------------------------------------------------------
 # CLI
 # ---------------------------------------------------------------------------
@@ -398,15 +469,21 @@ def main(argv=None):
     ap.add_argument("--schedule-period", type=int, default=1,
                     help="steps between ring re-wirings")
     ap.add_argument("--wire-packing", default="packed",
-                    choices=["packed", "pipelined", "per_leaf"],
+                    choices=["packed", "pipelined", "per_leaf", "async"],
                     help="consensus wire strategy (pipelined = chunked "
-                         "double-buffered exchange)")
+                         "double-buffered exchange; async = one-step-stale "
+                         "exchange overlapped with the next step's fwd/bwd, "
+                         "DESIGN.md §Async overlap)")
     ap.add_argument("--pipeline-chunks", type=int, default=4,
                     help="chunk count for --wire-packing=pipelined")
+    ap.add_argument("--staleness", type=int, default=1, choices=[0, 1],
+                    help="gossip staleness of --wire-packing=async: 1 "
+                         "retires the previous step's in-flight payload "
+                         "(overlapped); 0 is the eager bit-identity fixture")
     ap.add_argument("--wire-codec", default="int8",
-                    choices=["int8", "int4", "int2", "topk", "adaptive"],
                     help="packed-exchange payload codec (DESIGN.md §Wire "
-                         "codecs); 'adaptive' hands the choice to the "
+                         "codecs): int8 | int4 | int2 | topk | topk:k=<int> "
+                         "| adaptive; 'adaptive' hands the choice to the "
                          "AdaptiveBitController, which re-selects the bit "
                          "budget every --codec-period steps from residual/"
                          "overflow/consensus-error feedback and "
@@ -452,6 +529,12 @@ def main(argv=None):
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
+    if args.wire_codec != "adaptive" and args.wire_plan is None:
+        from repro.core import codec as wcodec
+        try:
+            wcodec.by_name(args.wire_codec)       # fail at the CLI, clearly
+        except KeyError as e:
+            raise SystemExit(f"--wire-codec: {e.args[0]}") from None
     mesh = make_cpu_mesh(data=args.data, model=args.model)
 
     setups: dict[str, TrainSetup] = {}
@@ -472,6 +555,7 @@ def main(argv=None):
                 schedule_period=args.schedule_period,
                 wire_packing=args.wire_packing,
                 pipeline_chunks=args.pipeline_chunks,
+                staleness=args.staleness,
                 wire_codec=codec_name, byte_budget=args.byte_budget,
                 seed=args.seed, topology=args.topology,
                 forward_weight=args.forward_weight,
@@ -536,9 +620,16 @@ def main(argv=None):
 
     t0 = time.time()
     ep_res, ep_ovf, ep_ce = [], [], []
+    step_times: list[float] = []
+    overhead = {}
+    overhead_setup = None
     for step in range(args.steps):
         batch = jax.device_put(ds.global_batch_arrays(step), setup.batch_sharding)
+        ts = time.perf_counter()
         state, metrics = setup.train_step(state, batch)
+        jax.block_until_ready(metrics)
+        if step >= 2:                 # skip compile + cache-warm steps
+            step_times.append(time.perf_counter() - ts)
         if controller is not None:
             ep_res.append(float(metrics["residual_norm"]))
             ep_ovf.append(float(metrics["overflow_frac"]))
@@ -567,6 +658,19 @@ def main(argv=None):
                 ep_res, ep_ovf, ep_ce = [], [], []
         if step % max(1, args.steps // 10) == 0 or step == args.steps - 1:
             m = jax.tree.map(float, metrics)
+            if step_times and args.algorithm == "adc_dgd":
+                # exchange time / step time, measured on the live state; the
+                # compiled probe is rebuilt only when the controller swaps
+                # the step trace (codec re-tier)
+                if overhead_setup is not setup:
+                    overhead = measure_consensus_overhead(
+                        setup, state, float(np.median(step_times)))
+                    overhead_setup = setup
+                elif "consensus_exchange_s" in overhead:
+                    overhead["consensus_overhead_frac"] = (
+                        overhead["consensus_exchange_s"]
+                        / float(np.median(step_times)))
+                m.update(overhead)
             extra = " ".join(f"{k}={v:.4g}" for k, v in m.items() if k != "loss")
             print(f"step {step:5d} loss={m['loss']:.4f} "
                   f"codec={codec_name} {extra}")

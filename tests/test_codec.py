@@ -70,6 +70,47 @@ def test_payload_byte_accounting_exact():
         assert widths[name] < widths["int8"]
 
 
+def test_topk_k_spec_grammar_and_bytes():
+    """"topk:k=<int>" parses through by_name with the exact byte formula
+    BLOCK/8 (bitmap) + k (int8 values) + 2 (bf16 scale) = 64 + k + 2 at
+    BLOCK=512; k=64 canonicalizes to the bare "topk" name so plan
+    fragments and run-merge lookups round-trip."""
+    b = kops.BLOCK
+    for k in (16, 32, 64, 128, 256):
+        cd = C.by_name(f"topk:k={k}")
+        assert cd.k == k
+        assert cd.payload_width(b) == b // 8 + k + 2, k
+    assert C.by_name("topk:k=128").payload_width(b) == 64 + 128 + 2
+    # name canonicalization: default k round-trips to the bare spec
+    assert C.by_name("topk:k=64").name == "topk"
+    assert C.by_name("topk:k=128").name == "topk:k=128"
+    assert C.by_name(C.by_name("topk:k=128").name).k == 128
+    # more k -> more bytes, denser payloads, monotone
+    w16, w256 = (C.by_name(f"topk:k={k}").payload_width(b) for k in (16, 256))
+    assert w16 < w256
+    # grammar errors name the spec
+    with pytest.raises(KeyError, match="topk:k="):
+        C.by_name("topk:k=x")
+    with pytest.raises(ValueError, match="k must divide"):
+        C.by_name("topk:k=63")
+    with pytest.raises(KeyError):
+        C.by_name("topk:j=64")
+    # a parameterized codec encodes/decodes with the widened payload
+    rng, y = _mk()
+    cd = C.by_name("topk:k=128")
+    pay = cd.encode_payload(y, _noise(rng, y.shape[0], cd))
+    assert pay.shape == (y.shape[0], b // 8 + 128 + 2)
+    dq = cd.decode_payload(pay)
+    assert dq.shape == y.shape
+    # k=128 keeps at most 128 nonzeros per block — and more than k=64 would
+    nz = np.count_nonzero(np.asarray(dq), axis=1)
+    assert nz.max() <= 128
+    # every CODEC_NAMES entry is a valid by_name spec (the registry's
+    # contract with the spec grammar and the CLI help text)
+    for name in C.CODEC_NAMES:
+        C.by_name(name)
+
+
 def test_runtime_wire_bytes_use_codec_width():
     from repro.core.distributed import ConsensusConfig, ConsensusRuntime
     from repro.core.wire import WireLayout

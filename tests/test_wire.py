@@ -25,6 +25,11 @@ Covered invariants:
     per-leaf reference ships the weight as its own pair (4n + 2)
   * directed-ring push-sum: packed == per-leaf == pipelined bit-for-bit,
     including the (1,2)-stride schedule's epoch-boundary resync
+  * the async one-step-stale exchange (wire_packing="async"): staleness=0
+    is bit-for-bit the eager packed path; staleness=1 still traces EXACTLY
+    2 ppermutes per step; the epoch-boundary resync drains the in-flight
+    payload BEFORE rebuilding m_agg; smoke matrix over int8 / mixed plan
+    with parameterized top-k / directed-ring push-sum
 
 Multi-device tests spawn a fresh python with XLA_FLAGS (jax locks the device
 count at first init; the main pytest process must keep seeing ONE device).
@@ -313,6 +318,9 @@ def run_sub(body: str, timeout: int = 1500) -> dict:
             if rt.cfg.push_sum_enabled:
                 cons_spec["ps_w"] = P("data", None)
                 cons_spec["ps_nbr"] = P("data", None)
+            if rt.cfg.wire_packing == "async":
+                for fk in wire.INFLIGHT_KEYS:
+                    cons_spec[fk] = P("data", None)
             init = lambda p: jax.tree.map(lambda a: a[None], rt.init_state(p))
             init_f = jax.jit(shard_map_compat(
                 init, mesh, in_specs=(pspec,), out_specs=cons_spec,
@@ -778,3 +786,154 @@ print("RESULT", json.dumps({"pad_max": pad_max,
     r = run_sub(body)
     assert r["n_pad"] > 0
     assert r["pad_max"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Async one-step-stale exchange (wire_packing="async")
+# ---------------------------------------------------------------------------
+
+def test_async_staleness0_bit_identical_to_packed():
+    """Acceptance: wire_packing="async" with staleness=0 is the eager
+    packed exchange bit-for-bit — params and both shadow sequences — on
+    adaptive & fixed quantization, static ring AND the (1,2)-stride
+    schedule.  (The async state carries extra in-flight buffers, so the
+    comparison is on params + x_tilde + m_agg, the algorithmic state.)"""
+    body = """
+tree = make_tree(jax.random.PRNGKey(11))
+out = {}
+for qm in ("adaptive", "fixed"):
+    for strides, period, tag in (((1,), 1, "static"), ((1, 2), 2, "sched")):
+        kw = dict(algorithm="adc_dgd", quant_mode=qm, fixed_step0=1e-2,
+                  ring_strides=strides, schedule_period=period)
+        a = trajectory({**kw, "wire_packing": "packed"}, tree, steps=5)
+        b = trajectory({**kw, "wire_packing": "async", "staleness": 0},
+                       tree, steps=5)
+        out[f"{qm}_{tag}_params"] = max_diff(a[0], b[0])
+        out[f"{qm}_{tag}_xt"] = max_diff(a[1]["x_tilde"], b[1]["x_tilde"])
+        out[f"{qm}_{tag}_m"] = max_diff(a[1]["m_agg"], b[1]["m_agg"])
+print("RESULT", json.dumps(out))
+"""
+    r = run_sub(body)
+    for k, v in r.items():
+        assert v == 0.0, f"async staleness=0 vs packed {k}: max diff {v}"
+
+
+def test_async_exchange_issues_exactly_two_ppermutes():
+    """Acceptance: the one-step-stale exchange launches the step-k payload
+    and retires the step-(k-1) payload with EXACTLY 2 ring ppermutes per
+    step on the static ring — same wire shape as eager packed, so XLA's
+    async collective scheduler can overlap both against compute.  Leaf
+    count must not change the count."""
+    body = """
+import sys
+sys.path.insert(0, os.path.join(%r, "benchmarks"))
+from consensus_step import count_eqns
+
+out = {}
+for n_extra in (0, 7):
+    tree = make_tree(jax.random.PRNGKey(12), n_extra=n_extra)
+    rt = ConsensusRuntime(ConsensusConfig(algorithm="adc_dgd",
+                                          wire_packing="async",
+                                          staleness=1), ctx)
+    init_f, step_f = build(rt, tree)
+    st = init_f(tree)
+    jaxpr = jax.make_jaxpr(step_f)(tree, tree, st, jnp.asarray(2, jnp.int32))
+    n_leaves = len(jax.tree_util.tree_leaves(tree))
+    out[str(n_leaves)] = count_eqns(jaxpr, "ppermute")
+print("RESULT", json.dumps(out))
+""" % REPO
+    r = run_sub(body)
+    assert len(r) == 2            # genuinely different leaf counts
+    for n_leaves, v in r.items():
+        assert v == 2, f"async ({n_leaves} leaves): {v} ppermutes (want 2)"
+
+
+def test_async_resync_drains_inflight_before_rebuild():
+    """Acceptance: on the (1,2)-stride schedule the epoch-boundary m_agg
+    rebuild happens AFTER the in-flight payload (permuted under the OLD
+    stride) is retired — so right after any step, m_agg is exactly the
+    side-weighted neighbor sum of the CURRENT x_tilde under the stride
+    that step's resync installed.  A rebuild-before-drain bug would mix
+    old-stride deltas into the new-stride shadow and break this identity.
+
+    The check starts at the first resync step (step 3 for period=2): the
+    synthetic tree gives every node a DIFFERENT x0, so init_state's
+    shared-x0 seeding of m_agg is deliberately wrong until the first
+    rebuild installs the true neighbor sums — exactly the state of
+    affairs the resync exists to repair."""
+    body = """
+tree = make_tree(jax.random.PRNGKey(13))
+cfg = ConsensusConfig(algorithm="adc_dgd", quant_mode="fixed",
+                      fixed_step0=1e-2, wire_packing="async", staleness=1,
+                      ring_strides=(1, 2), schedule_period=2)
+rt = ConsensusRuntime(cfg, ctx)
+init_f, step_f = build(rt, tree)
+st = init_f(tree)
+x = tree
+out = {"side": cfg.side_weight, "per_step": []}
+for k in range(1, 7):
+    xh = jax.tree.map(lambda a: (a.astype(jnp.float32) + 0.01 * k)
+                      .astype(a.dtype), x)
+    x, st = step_f(x, xh, st, jnp.asarray(k, jnp.int32))
+    sh = jax.device_get(st)
+    xt = np.asarray(sh["x_tilde"], np.float64)[:, 0]
+    m = np.asarray(sh["m_agg"], np.float64)[:, 0]
+    diffs = {}
+    for s in (1, 2):
+        pred = cfg.side_weight * (np.roll(xt, s, axis=0)
+                                  + np.roll(xt, -s, axis=0))
+        diffs[str(s)] = float(np.max(np.abs(m - pred)))
+    out["per_step"].append(diffs)
+print("RESULT", json.dumps(out))
+"""
+    r = run_sub(body)
+    # every step must be consistent with SOME stride (the active one), and
+    # both strides must appear across the schedule (proving real re-wirings
+    # were drained through, not a static ring in disguise)
+    matched = []
+    for i, diffs in enumerate(r["per_step"]):
+        if i + 1 < 3:        # before the first resync (see docstring)
+            continue
+        best = min(diffs, key=lambda s: diffs[s])
+        assert diffs[best] < 1e-5, \
+            f"step {i + 1}: m_agg matches no stride ({diffs})"
+        matched.append(best)
+    assert len(set(matched)) == 2, \
+        f"schedule never re-wired under async ({matched})"
+
+
+def test_async_smoke_matrix():
+    """Async staleness=1 runs (finite outputs, in-flight buffers carried)
+    across the transport matrix: int8, a heterogeneous mixed plan with a
+    parameterized top-k fragment, and directed-ring push-sum.  Push-sum
+    mass must stay exactly 1.0 on the homogeneous ring — the in-flight
+    trailer (pre-encoded to 1.0f at init) conserves it from step 1."""
+    body = """
+tree = make_tree(jax.random.PRNGKey(14))
+out = {}
+for tag, kw in (
+    ("int8", {}),
+    ("mixed", {"wire_codec":
+               "mixed:scalar=int2,deep=int4,['b']=topk:k=128,*=int8"}),
+    ("push", {"topology": "directed-ring"}),
+):
+    cfg = dict(algorithm="adc_dgd", quant_mode="fixed", fixed_step0=1e-2,
+               wire_packing="async", staleness=1, **kw)
+    x, st = trajectory(cfg, tree, steps=4)
+    finite = all(bool(np.isfinite(np.asarray(l, np.float64)).all())
+                 for l in jax.tree_util.tree_leaves(x))
+    out[f"{tag}_finite"] = finite
+    out[f"{tag}_fly_bytes"] = int(np.asarray(st["fly_self"]).shape[-1])
+    if "topology" in kw:
+        out["push_ps_w_dev"] = float(np.max(np.abs(
+            np.asarray(st["ps_w"]) - 1.0)))
+print("RESULT", json.dumps(out))
+"""
+    r = run_sub(body)
+    for k, v in r.items():
+        if k.endswith("_finite"):
+            assert v, f"async {k}: non-finite params"
+    assert r["mixed_fly_bytes"] != r["int8_fly_bytes"]   # real mixed plan
+    assert r["push_fly_bytes"] == r["int8_fly_bytes"] + 4  # fp32 trailer
+    assert r["push_ps_w_dev"] == 0.0, \
+        f"async push-sum drifted: {r['push_ps_w_dev']}"
