@@ -171,6 +171,30 @@ NOISE_TOL = 0.5
 LOSS_SWEEP = (0.0, 0.05, 0.2)
 LOSS_GOSSIP_STEPS = 8
 LOSS_SEED = 1
+#: churn sweep (symmetric-ring packed gossip, smollm-135m): node 2 departs
+#: for schedule epoch 1 and rejoins at epoch 2; after rejoin the run gets
+#: CHURN_RECOVERY_EPOCHS epochs to contract back toward the static-
+#: membership trajectory.  A burst-loss variant stacks a Gilbert-Elliott
+#: channel on top of the churn; a single all-active mask must stay
+#: bit-identical to membership=None (inert machinery, like loss 0.0)
+CHURN_MASKS = ((True, True, True, True),
+               (True, True, False, True),
+               (True, True, True, True))
+CHURN_PERIOD = 4
+CHURN_RECOVERY_EPOCHS = 2
+#: recovery thresholds (mirroring tests/test_membership.py's churn
+#: scenario): end error under 0.2x the start AND within 5x the static-
+#: membership end-point AND below the at-rejoin error
+CHURN_RECOVERY_TOL = 0.2
+CHURN_RECOVERY_FACTOR = 5.0
+#: pure gossip mixes geometrically, so the static reference reaches the
+#: fp32 rounding floor (~1e-12 here) inside the window; ratios between
+#: tails below NOISE x the start error compare rounding noise, not
+#: mixing, so the static end-point is floored before the FACTOR gate
+CHURN_NOISE_FLOOR = 1e-7
+CHURN_GOSSIP_STEPS = CHURN_PERIOD * (len(CHURN_MASKS) - 1 +
+                                     CHURN_RECOVERY_EPOCHS)
+CHURN_BURST = "gilbert:p=0.1,r=0.9"
 #: overlap benchmark (wire_packing="async"): a synthetic-compute load (a
 #: fori_loop matmul chain per device, the model fwd/bwd stand-in) is fused
 #: into the exchange step but kept DATA-INDEPENDENT of it, so XLA may
@@ -572,7 +596,7 @@ def _build_loss_step(rt: ConsensusRuntime, mesh, tree):
                  "ps_w": P("data", None),
                  "ps_nbr": P("data", None)}
     noise_spec = P("data", None, None)
-    lossy = rt.cfg.loss_model is not None
+    lossy = rt.cfg.faults_enabled
 
     def init(p):
         return jax.tree.map(lambda a: a[None], rt.init_state(p))
@@ -701,6 +725,170 @@ def loss_sweep_section(mesh, ctx) -> tuple[dict, bool]:
         print("FAIL[loss]: 20% loss delivered bytes not below shipped "
               "(drops are not being excluded from accounting)")
         ok = False
+    return out, ok
+
+
+def _build_churn_step(rt: ConsensusRuntime, mesh, tree):
+    """:func:`build_step` variant for the symmetric-ring packed transport
+    under elastic membership: no push-sum state, and the per-device
+    ``wire_bytes_delivered`` metric is surfaced only when a loss model is
+    in the trace (zero otherwise, keeping the signature uniform)."""
+    pspec = jax.tree.map(lambda _: P("data"), tree)
+    cons_spec = {"x_tilde": P("data", None, None),
+                 "m_agg": P("data", None, None)}
+    noise_spec = P("data", None, None)
+    lossy = rt.cfg.faults_enabled
+
+    def init(p):
+        return jax.tree.map(lambda a: a[None], rt.init_state(p))
+
+    init_f = jax.jit(shard_map_compat(init, mesh, in_specs=(pspec,),
+                                      out_specs=cons_spec, check=False))
+
+    def step(xp, xh, st, noise, k):
+        st = jax.tree.map(lambda a: a[0], st)
+        x_next, st2, m = rt.exchange(xp, xh, st, k, jax.random.PRNGKey(3),
+                                     noise=noise[0])
+        delivered = (m["wire_bytes_delivered"] if lossy else jnp.zeros(()))
+        return (x_next, jax.tree.map(lambda a: a[None], st2),
+                delivered[None])
+
+    step_f = jax.jit(shard_map_compat(
+        step, mesh, in_specs=(pspec, pspec, cons_spec, noise_spec, P()),
+        out_specs=(pspec, cons_spec, P("data")), check=False))
+    return init_f, step_f
+
+
+def churn_sweep_section(mesh, ctx) -> tuple[dict, bool]:
+    """Elastic-membership sweep: symmetric-ring packed ADC gossip through
+    the CHURN_MASKS depart/rejoin scenario (smollm-135m).
+
+    Four runs from the same distinct per-device inits: a static-membership
+    reference, an all-active single-mask run (membership machinery traced
+    but inert), the churn scenario, and the churn scenario under
+    Gilbert-Elliott burst loss.  CI gates:
+
+      * the all-active mask is BIT-IDENTICAL to membership=None (the
+        activity mask at full membership is a no-op, not a perturbation),
+      * the churn run contracts after the rejoin and lands within
+        CHURN_RECOVERY_FACTOR of the static end-point inside
+        CHURN_RECOVERY_EPOCHS epochs (routing around the hole and the
+        boundary resync must not wedge mixing),
+      * the burst-loss churn run still contracts end-to-end (lossy-churn
+        contraction: stale x_tilde reuse + a frozen node together must
+        not break the gossip), and its delivered bytes stay strictly
+        below the full-membership shipped total.
+    """
+    arch = "smollm-135m"
+    ok = True
+    key = jax.random.PRNGKey(hash(arch) % 2**31)
+    local = local_leaf_tree(arch, key)
+    layout = wire.WireLayout.for_tree(local)
+    leaves, treedef = jax.tree_util.tree_flatten(local)
+    ks = jax.random.split(jax.random.fold_in(key, 2), len(leaves))
+    x0 = jax.tree_util.tree_unflatten(treedef, [
+        (jax.random.normal(k2, (N_DEVICES, *a.shape), jnp.float32) * 0.05)
+        .astype(a.dtype)
+        for k2, a in zip(ks, leaves)])
+    xt0 = np.stack([np.asarray(layout.pack(
+        jax.tree.map(lambda a, d=d: a[d], x0))) for d in range(N_DEVICES)])
+    rejoin_step = CHURN_PERIOD * (len(CHURN_MASKS) - 1)
+    out = {"masks": [list(m) for m in CHURN_MASKS],
+           "schedule_period": CHURN_PERIOD,
+           "gossip_steps": CHURN_GOSSIP_STEPS,
+           "burst_model": CHURN_BURST, "seed": LOSS_SEED, "runs": {}}
+    print(f"churn sweep ({arch}, symmetric-ring packed, "
+          f"{CHURN_GOSSIP_STEPS} gossip steps, hole at epoch 1):",
+          flush=True)
+    x_ref = None
+    variants = {
+        "static": {},
+        "all_active": {"membership": (CHURN_MASKS[0],)},
+        "churn": {"membership": CHURN_MASKS,
+                  "schedule_period": CHURN_PERIOD},
+        "churn_burst": {"membership": CHURN_MASKS,
+                        "schedule_period": CHURN_PERIOD,
+                        "link_loss_model": CHURN_BURST,
+                        "loss_seed": LOSS_SEED},
+    }
+    for name, extra in variants.items():
+        rt = ConsensusRuntime(
+            ConsensusConfig(algorithm="adc_dgd", quant_mode="adaptive",
+                            **extra), ctx)
+        noise = _codec_noise(rt, layout)
+        init_f, step_f = _build_churn_step(rt, mesh, x0)
+        st = init_f(x0)
+        # distinct inits: rebuild m_agg from the actual symmetric
+        # in-weights (the epoch-boundary resync correction)
+        w_up, w_dn = rt.cfg.in_weights
+        m0 = (w_up * np.roll(xt0, 1, axis=0)
+              + w_dn * np.roll(xt0, -1, axis=0))
+        st = dict(st, m_agg=jnp.asarray(m0))
+        x = x0
+        errs = [_consensus_err(x)]
+        delivered = 0.0
+        for k2 in range(1, CHURN_GOSSIP_STEPS + 1):
+            x, st, d = step_f(x, x, st, noise, jnp.asarray(k2, jnp.int32))
+            delivered += float(np.sum(np.asarray(d)))
+            errs.append(_consensus_err(x))
+        r = {"consensus_err_start": errs[0],
+             "consensus_err_at_rejoin": errs[rejoin_step],
+             "consensus_err_end": errs[-1],
+             "consensus_err_per_step": errs}
+        if name == "static":
+            x_ref = x
+        if name == "all_active":
+            diff = max(float(np.max(np.abs(
+                np.asarray(a, np.float64) - np.asarray(b, np.float64))))
+                for a, b in zip(jax.tree_util.tree_leaves(x),
+                                jax.tree_util.tree_leaves(x_ref)))
+            r["vs_static_max_diff"] = diff
+            if diff != 0.0:
+                print("FAIL[churn]: all-active membership mask is not "
+                      "bit-identical to membership=None "
+                      f"(diff {diff:g})")
+                ok = False
+        if name == "churn":
+            static_end = max(
+                out["runs"]["static"]["consensus_err_end"],
+                CHURN_NOISE_FLOOR * r["consensus_err_start"])
+            r["vs_static_end_ratio"] = r["consensus_err_end"] / static_end
+            recovered = (
+                r["consensus_err_end"]
+                < CHURN_RECOVERY_TOL * r["consensus_err_start"]
+                and r["consensus_err_end"]
+                < CHURN_RECOVERY_FACTOR * static_end
+                and r["consensus_err_end"] < r["consensus_err_at_rejoin"])
+            r["recovered_within_epochs"] = CHURN_RECOVERY_EPOCHS
+            if not recovered:
+                print(f"FAIL[churn]: churn run did not recover within "
+                      f"{CHURN_RECOVERY_EPOCHS} epochs of the rejoin "
+                      f"(err {r['consensus_err_start']:.3e} -> rejoin "
+                      f"{r['consensus_err_at_rejoin']:.3e} -> end "
+                      f"{r['consensus_err_end']:.3e}, static end "
+                      f"{static_end:.3e})")
+                ok = False
+        if name == "churn_burst":
+            r["delivered_bytes"] = delivered
+            plan = rt.wire_plan_for(layout)
+            shipped = (CHURN_GOSSIP_STEPS * N_DEVICES * 2
+                       * plan.wire_bytes(push_sum=False))
+            r["shipped_bytes_full_membership"] = float(shipped)
+            if not r["consensus_err_end"] < r["consensus_err_start"]:
+                print("FAIL[churn]: burst-loss churn run did not contract "
+                      f"consensus error ({r['consensus_err_start']:.3e} "
+                      f"-> {r['consensus_err_end']:.3e})")
+                ok = False
+            if not delivered < shipped:
+                print("FAIL[churn]: burst-loss churn delivered bytes not "
+                      "below the full-membership shipped total (drops/"
+                      "inactive nodes are not being excluded)")
+                ok = False
+        print(f"  {name}: err {r['consensus_err_start']:.3e} -> "
+              f"{r['consensus_err_end']:.3e}"
+              + (f"   delivered {delivered / 1e6:.2f} MB"
+                 if rt.cfg.faults_enabled else ""), flush=True)
+        out["runs"][name] = r
     return out, ok
 
 
@@ -909,7 +1097,7 @@ def _config_hash(payload: dict) -> str:
     import hashlib
     cfg = {k: v for k, v in payload.items()
            if k not in ("archs", "codecs", "choco_equal_bytes",
-                        "loss_sweep", "overlap")}
+                        "loss_sweep", "churn_sweep", "overlap")}
     return hashlib.sha256(
         json.dumps(cfg, sort_keys=True, default=float).encode()).hexdigest()[:12]
 
@@ -1045,6 +1233,8 @@ def main() -> int:
     ok = ok and choco_ok
     loss_sweep, loss_ok = loss_sweep_section(mesh, ctx)
     ok = ok and loss_ok
+    churn_sweep, churn_ok = churn_sweep_section(mesh, ctx)
+    ok = ok and churn_ok
     overlap, overlap_ok = overlap_section(mesh, ctx)
     ok = ok and overlap_ok
     payload = {"n_devices": N_DEVICES, "nodes": NODES,
@@ -1055,7 +1245,7 @@ def main() -> int:
                "mixed_fidelity_tol": MIXED_FIDELITY_TOL,
                "archs": out, "codecs": codecs,
                "choco_equal_bytes": choco_eb, "loss_sweep": loss_sweep,
-               "overlap": overlap}
+               "churn_sweep": churn_sweep, "overlap": overlap}
     series = append_run(os.path.join(REPO, "BENCH_consensus_step.json"),
                         payload, ok)
     print(f"bench series: {len(series['runs'])} run(s) recorded "

@@ -63,6 +63,7 @@ __all__ = [
     "CEDAS",
     "CentralizedGD",
     "run",
+    "run_elastic",
     "by_name",
     "on_wire_plan",
 ]
@@ -651,6 +652,183 @@ def run(
     result["bytes"] = _cumulative_bytes(algorithm, problem, n_steps)[sl]
     # push-sum runs report the de-biased final iterate z = x / ps_w (equal
     # to x itself on undirected mixing, where ps_w stays 1)
+    ps = state.get("ps_w")
+    result["x_final"] = np.asarray(state["x"] if ps is None
+                                   else state["x"] / ps)
+    if ps is not None:
+        result["ps_w_final"] = np.asarray(ps)
+    return result
+
+
+def run_elastic(
+    algorithm: _Algorithm,
+    problem: ConsensusProblem,
+    n_steps: int,
+    membership,
+    *,
+    schedule_period: int = 1,
+    self_weight: float = 0.5,
+    rule: str = "metropolis",
+    push_sum: bool = False,
+    key: jax.Array | int = 0,
+    x0: jax.Array | None = None,
+    log_every: int = 1,
+) -> dict[str, np.ndarray]:
+    """ADC-DGD under **elastic membership**: the reference oracle for the
+    distributed runtime's churn support (``ConsensusConfig.membership``).
+
+    ``membership`` is a :class:`~repro.core.topology.MembershipSchedule`;
+    epoch ``e = k // schedule_period`` (0-based step ``k``, clamped to the
+    last epoch) selects the active-node mask and the Metropolis–Hastings
+    (or plain-ring) mixing matrix over the survivors.  Per step:
+
+      * inactive nodes transmit a zero differential (``y_i = d_i = 0``),
+        take no gradient step, and their iterate/shadow freeze bitwise —
+        exactly the runtime's in-trace activity mask;
+      * the mixing matrix carries identity rows/columns for inactive
+        nodes, so active nodes route around them (the compacted ring);
+      * metrics (``consensus``, ``x_bar``, objective) are computed over
+        the active set only, and ``bytes`` bills only active messages.
+
+    With ``push_sum=True`` the column-stochastic mass-conservation
+    invariant is maintained across membership changes: at each epoch
+    boundary a departing node's mass ``(x_j, ps_j)`` is handed to its
+    nearest survivor (``MembershipSchedule.handoff_at``), and a rejoining
+    node warm-restarts from its nearest continuously-active neighbour's
+    de-biased estimate (``x_j = z_src``, ``ps_j = 1``, ``xt_j = z_src``)
+    — so ``sum(x)/sum(ps)`` over the active set stays the consensus
+    target throughout.  The runtime restricts membership to the
+    undirected ring; push-sum churn is reference-only.
+
+    Returns a :func:`run`-style dict plus ``active_nodes`` per step.
+    A single all-active mask reproduces :func:`run` dynamics exactly.
+    """
+    from .topology import MembershipSchedule
+
+    if not isinstance(algorithm, ADCDGD):
+        raise ValueError(
+            f"run_elastic supports adc_dgd only, got {algorithm.name!r}")
+    if not isinstance(membership, MembershipSchedule):
+        membership = MembershipSchedule(tuple(membership))
+    n = membership.n_nodes
+    if n != problem.n_nodes:
+        raise ValueError(f"membership has {n} nodes, problem has "
+                         f"{problem.n_nodes}")
+    if schedule_period < 1:
+        raise ValueError(f"schedule_period must be >= 1, got "
+                         f"{schedule_period}")
+    if isinstance(key, int):
+        key = jax.random.PRNGKey(key)
+
+    # Per-epoch stacks (mask_at / mixing_at clamp past the last epoch).
+    n_ep = max(1, min(membership.n_epochs,
+                      (n_steps + schedule_period - 1) // schedule_period))
+    w_stack = np.stack([
+        np.asarray(membership.mixing_at(e, self_weight=self_weight,
+                                        rule=rule).w, np.float32)
+        for e in range(n_ep)])
+    act_stack = np.stack([
+        np.asarray(membership.mask_at(e), np.float32) for e in range(n_ep)])
+    ep_idx = np.minimum(np.arange(n_steps) // schedule_period,
+                        n_ep - 1).astype(np.int32)
+
+    if push_sum:
+        # Per-step boundary ops, identity off-boundary: the handoff matrix
+        # T (column-stochastic: departing column j -> e_target) applied to
+        # (x, ps) BEFORE the step, and the rejoiner warm-restart rows.
+        t_stack = np.tile(np.eye(n, dtype=np.float32), (n_steps, 1, 1))
+        rej_flag = np.zeros((n_steps, n), np.float32)
+        rej_src = np.tile(np.arange(n, dtype=np.int32), (n_steps, 1))
+        for i in range(1, n_steps):
+            e = int(ep_idx[i])
+            if e == int(ep_idx[i - 1]):
+                continue
+            t_stack[i] = np.asarray(membership.handoff_at(e), np.float32)
+            for j, src in membership.rejoin_sources_at(e).items():
+                rej_flag[i, j] = 1.0
+                rej_src[i, j] = src
+
+    gamma, comp, stepsize = (algorithm.gamma, algorithm.compressor,
+                             algorithm.stepsize)
+    w_st = jnp.asarray(w_stack)
+    act_st = jnp.asarray(act_stack)
+
+    def _debias(x, ps):
+        # a departed node's mass was handed off, leaving ps_j = 0: its
+        # (frozen, masked-out) row must not poison the trace with 0/0
+        return x / jnp.where(ps == 0.0, 1.0, ps)
+
+    def scan_step(state, inp):
+        if push_sum:
+            k_key, i, t, rf, rs = inp
+        else:
+            k_key, i = inp
+        w, act = w_st[i], act_st[i]
+        a = act[:, None]
+        x, xt = state["x"], state["x_tilde"]
+        if push_sum:
+            ps = state["ps_w"]
+            x, ps = t @ x, t @ ps                     # mass handoff
+            z_src = _debias(x[rs], ps[rs])            # warm-restart source
+            rfc = rf[:, None]
+            x = rfc * z_src + (1.0 - rfc) * x
+            xt = rfc * z_src + (1.0 - rfc) * xt
+            ps = rfc + (1.0 - rfc) * ps
+        k = state["k"].astype(jnp.float32)
+        kg = k**gamma
+        y = (x - xt) * a                              # inactive: zero diff
+        keys = _per_node_keys(k_key, n)
+        d = jax.vmap(comp.apply)(keys, kg * y) * a
+        xt_new = xt + d / kg
+        z = _debias(x, ps) if push_sum else x
+        grads = problem.grad_fn(z) * a
+        alpha = stepsize(k)
+        x_next = w @ xt_new - alpha * grads
+        x_next = a * x_next + (1.0 - a) * x           # freeze inactive
+        new_state = {"x": x_next, "x_tilde": xt_new, "k": state["k"] + 1}
+        if push_sum:
+            new_state["ps_w"] = a * (w @ ps) + (1.0 - a) * ps
+        m = jnp.sum(act)
+        if push_sum:
+            zz = _debias(x_next, new_state["ps_w"])
+            x_bar = jnp.sum(a * x_next, 0) / jnp.sum(a * new_state["ps_w"])
+        else:
+            zz = x_next
+            x_bar = jnp.sum(a * x_next, 0) / m
+        out = {
+            "obj": problem.global_obj(x_bar),
+            "grad_norm": jnp.linalg.norm(problem.global_grad(x_bar)) / n,
+            "consensus": jnp.linalg.norm((zz - x_bar) * a),
+            "max_tx": jnp.max(jnp.abs(d)),
+            "alpha": alpha,
+            "active_nodes": m,
+        }
+        return new_state, out
+
+    # Init mirrors ADCDGD.init: shared x0, one gradient step, xt = x0.
+    if x0 is None:
+        x0 = jnp.zeros((n, problem.dim))
+    g0 = problem.grad_fn(x0)
+    state = {"x": x0 - stepsize(jnp.asarray(1.0)) * g0,
+             "x_tilde": jnp.asarray(x0, jnp.float32),
+             "k": jnp.asarray(1, jnp.int32)}
+    if push_sum:
+        state["ps_w"] = jnp.ones((n, 1))
+
+    keys = jax.random.split(key, n_steps)
+    idx = jnp.asarray(ep_idx)
+    xs = ((keys, idx, jnp.asarray(t_stack), jnp.asarray(rej_flag),
+           jnp.asarray(rej_src)) if push_sum else (keys, idx))
+    state, traj = jax.lax.scan(scan_step, state, xs)
+    traj = jax.tree.map(np.asarray, traj)
+    sl = slice(log_every - 1, None, log_every)
+    result = {k: v[sl] for k, v in traj.items()}
+    # bytes: the full-ring per-iteration cost scaled by the active fraction
+    # (a compacted m-survivor ring carries 2m of the full ring's 2n
+    # messages) — exact for the ring topologies membership supports.
+    per_iter = algorithm.bytes_per_iteration(problem)
+    frac = act_stack.sum(axis=1)[ep_idx] / float(n)
+    result["bytes"] = np.cumsum(per_iter * frac)[sl]
     ps = state.get("ps_w")
     result["x_final"] = np.asarray(state["x"] if ps is None
                                    else state["x"] / ps)

@@ -79,6 +79,7 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import codec as wire_codec
 from repro.core import faults, wire, wireplan
@@ -185,6 +186,43 @@ class ConsensusConfig:
     #: traces it but never drops (bit-identical values — tests pin this).
     link_loss: float | None = None
     loss_seed: int = 0
+    #: loss-model family (core.faults.parse_loss_spec): "bernoulli" is the
+    #: i.i.d. model whose rate comes from ``link_loss``;
+    #: "gilbert:p=..,r=..[,h=..][,g=..]" selects the two-state Markov
+    #: burst channel (GilbertElliottLoss) — its parameters live in the
+    #: spec, so ``link_loss`` must stay None.  Either way the
+    #: one-decision-per-direction-per-step packet contract holds, keeping
+    #: packed and pipelined bit-identical under loss.
+    link_loss_model: str = "bernoulli"
+    #: retransmit budget of the epoch-boundary resync handshake: each ring
+    #: direction's fp32 x_tilde transfer is retried up to this many times
+    #: (core.faults._ResyncRetries); a node whose resync fails in either
+    #: direction keeps its stale m_agg until the next boundary.  Only
+    #: reachable when a loss model is configured — lossless resyncs always
+    #: succeed.
+    resync_retries: int = 3
+    #: straggler-deadline miss probability of the async transport
+    #: (core.faults.StragglerModel): an in-flight payload that has not
+    #: arrived by its one-step retire deadline is treated as dropped
+    #: (stale-x_tilde reuse, same decode path as link loss; independent
+    #: PRNG domain).  None keeps the machinery out of the trace; requires
+    #: wire_packing="async" with staleness=1 (the eager transports have no
+    #: deadline to miss).
+    straggle_rate: float | None = None
+    straggle_seed: int = 0
+    #: elastic membership (DESIGN.md §Elastic membership): a tuple of
+    #: per-epoch active-node masks (tuple[tuple[bool, ...], ...], e.g.
+    #: ``topology.MembershipSchedule.from_spec(...).masks``).  Epoch e uses
+    #: ``masks[min(e, len-1)]`` — the last mask persists.  Inactive nodes
+    #: are routed around (the ring permutation compacts over survivors),
+    #: freeze their parameters/shadows in place, and carry zero payloads;
+    #: the epoch-boundary resync rebuilds m_agg over each new active set.
+    #: The surviving ring keeps the (self_weight, side, side) row rule,
+    #: which IS Metropolis-Hastings reweighting at self_weight=1/3 (every
+    #: compacted-ring degree is 2, so MH gives the uniform 1/3 row).
+    #: ``None`` = no membership machinery; a single all-active mask is
+    #: traced but inert (bit-identical values — tests pin this).
+    membership: tuple | None = None
     #: push-sum weight threading: None = auto (on iff topology is
     #: directed); True forces the weight machinery on a symmetric ring
     #: (where it provably stays == 1 — the exactness fixture).
@@ -215,9 +253,44 @@ class ConsensusConfig:
 
     @property
     def loss_model(self):
+        """The i.i.d. Bernoulli model (back-compat accessor; burst models
+        need the node count — use :meth:`loss_model_for`)."""
         if self.link_loss is None:
             return None
         return faults.LossModel(rate=self.link_loss, seed=self.loss_seed)
+
+    @property
+    def loss_enabled(self) -> bool:
+        """Any link-loss machinery in the trace (Bernoulli or burst)?"""
+        return (self.link_loss is not None
+                or faults.parse_loss_spec(self.link_loss_model)["kind"]
+                != "bernoulli")
+
+    @property
+    def faults_enabled(self) -> bool:
+        """Anything that can drop a payload (loss or straggler deadlines)
+        — the gate for the delivered-bytes/fraction metrics."""
+        return self.loss_enabled or self.straggle_rate is not None
+
+    def loss_model_for(self, n_nodes: int):
+        """The configured loss model bound to the consensus-node count
+        (GilbertElliottLoss realizes one Markov chain per directed edge,
+        so it needs ``n_nodes``), or None."""
+        spec = faults.parse_loss_spec(self.link_loss_model)
+        if spec["kind"] == "gilbert":
+            return faults.GilbertElliottLoss(
+                p=spec["p"], r=spec["r"], h=spec["h"], g=spec["g"],
+                seed=self.loss_seed, n_nodes=n_nodes)
+        if self.link_loss is None:
+            return None
+        return faults.LossModel(rate=self.link_loss, seed=self.loss_seed)
+
+    @property
+    def straggler_model(self):
+        if self.straggle_rate is None:
+            return None
+        return faults.StragglerModel(rate=self.straggle_rate,
+                                     seed=self.straggle_seed)
 
     def __post_init__(self):
         if not self.ring_strides:
@@ -281,12 +354,57 @@ class ConsensusConfig:
         if self.link_loss is not None and not 0.0 <= self.link_loss < 1.0:
             raise ValueError(f"link_loss must be in [0, 1), got "
                              f"{self.link_loss}")
-        if ((directed or self.push_sum or self.link_loss is not None)
+        loss_spec = faults.parse_loss_spec(self.link_loss_model)  # raises
+        if loss_spec["kind"] != "bernoulli" and self.link_loss is not None:
+            raise ValueError(
+                "link_loss sets the Bernoulli rate; the gilbert burst "
+                "model takes its parameters in link_loss_model — set one "
+                "or the other, not both")
+        if self.resync_retries < 1:
+            raise ValueError(f"resync_retries must be >= 1, got "
+                             f"{self.resync_retries}")
+        if self.straggle_rate is not None:
+            if not 0.0 <= self.straggle_rate < 1.0:
+                raise ValueError(f"straggle_rate must be in [0, 1), got "
+                                 f"{self.straggle_rate}")
+            if self.wire_packing != "async" or self.staleness != 1:
+                raise ValueError(
+                    "straggler deadlines are a property of the one-step-"
+                    "stale transport: straggle_rate requires "
+                    "wire_packing='async' with staleness=1")
+        if self.membership is not None:
+            masks = self.membership
+            if (not masks or not all(isinstance(m, tuple) for m in masks)
+                    or len({len(m) for m in masks}) != 1):
+                raise ValueError(
+                    "membership must be a non-empty tuple of equal-length "
+                    "per-epoch mask tuples (MembershipSchedule.masks)")
+            for e, m in enumerate(masks):
+                if sum(bool(b) for b in m) < 2:
+                    raise ValueError(
+                        f"membership epoch {e} keeps "
+                        f"{sum(bool(b) for b in m)} active nodes; the "
+                        "surviving ring needs >= 2")
+            if self.wire_packing == "per_leaf":
+                raise ValueError(
+                    "membership requires the packed/pipelined/async "
+                    "transports; the per-leaf reference path predates "
+                    "elasticity")
+            if self.push_sum_enabled or directed:
+                raise ValueError(
+                    "runtime membership supports the symmetric ring only; "
+                    "push-sum mass handoff under churn is reference-side "
+                    "(topology.MembershipSchedule.handoff_at + "
+                    "consensus.run_elastic)")
+        if ((directed or self.push_sum or self.link_loss is not None
+             or loss_spec["kind"] != "bernoulli"
+             or self.straggle_rate is not None
+             or self.membership is not None)
                 and self.algorithm != "adc_dgd"):
             raise ValueError(
-                "directed topology, push_sum and link_loss are features of "
-                f"the adc_dgd wire; algorithm={self.algorithm!r} does not "
-                "support them")
+                "directed topology, push_sum, link loss, straggler "
+                "deadlines and membership are features of the adc_dgd "
+                f"wire; algorithm={self.algorithm!r} does not support them")
 
 
 def _flat_ring_perm(ctx: ParallelContext, shift: int):
@@ -296,16 +414,50 @@ def _flat_ring_perm(ctx: ParallelContext, shift: int):
     return [(i, (i + step) % total) for i in range(total)]
 
 
+def _flat_ring_perm_masked(ctx: ParallelContext, shift: int, mask):
+    """Ring permutation compacted over the ACTIVE nodes of ``mask``.
+
+    Survivors form a stride-``|shift|`` ring in active-position order;
+    inactive nodes' devices appear as neither source nor destination —
+    ``ppermute`` delivers ZEROS to absent destinations, which is exactly
+    the dropped-packet decode path (zero payload -> zero differential),
+    so routing around a node and losing its packets share one mechanism.
+    A stride that has no meaning on the smaller ring (s % m == 0, or
+    gcd(s, m) > 1 which would disconnect the survivors) falls back to
+    stride 1.  ``mask=None`` / all-active delegates to the unmasked
+    permutation — identical pairs, bit-identical trace.
+    """
+    if mask is None or all(mask):
+        return _flat_ring_perm(ctx, shift)
+    active = [v for v, a in enumerate(mask) if a]
+    m = len(active)
+    sign = 1 if shift >= 0 else -1
+    s_eff = abs(shift) % m
+    if s_eff == 0 or math.gcd(s_eff, m) != 1:
+        s_eff = 1
+    pos = {node: p for p, node in enumerate(active)}
+    total = ctx.pods * ctx.data_size
+    pairs = []
+    for i in range(total):
+        node = i // ctx.fsdp
+        p = pos.get(node)
+        if p is None:
+            continue
+        tgt = active[(p + sign * s_eff) % m]
+        pairs.append((i, tgt * ctx.fsdp + i % ctx.fsdp))
+    return pairs
+
+
 def _ring_axes(ctx: ParallelContext):
     return (("pod", "data") if ctx.pod_axis is not None else ("data",))
 
 
-def _ppermute_ring(x, ctx: ParallelContext, shift: int):
+def _ppermute_ring(x, ctx: ParallelContext, shift: int, mask=None):
     if ctx.total_consensus_nodes <= 1:
         return x
     axes = _ring_axes(ctx)
     return jax.lax.ppermute(x, axes if len(axes) > 1 else axes[0],
-                            _flat_ring_perm(ctx, shift))
+                            _flat_ring_perm_masked(ctx, shift, mask))
 
 
 def _pipeline_schedule(n_units: int, launch, retire, inspect=None) -> list:
@@ -344,6 +496,17 @@ class ConsensusRuntime:
                       if self.plan_spec.is_uniform else None)
         self._plan_cache: dict = {}
         n = ctx.total_consensus_nodes
+        #: the loss model bound to this mesh's node count (GilbertElliott
+        #: realizes per-edge Markov chains) and the straggler-deadline
+        #: model of the async transport; None keeps either out of the trace
+        self.loss = config.loss_model_for(n)
+        self.straggler = config.straggler_model
+        if config.membership is not None:
+            for e, m in enumerate(config.membership):
+                if len(m) != n:
+                    raise ValueError(
+                        f"membership mask {e} covers {len(m)} nodes but the "
+                        f"mesh has {n} consensus nodes")
         if n > 1 and config.algorithm in ("adc_dgd", "dgd", "compressed_dgd"):
             for s in config.ring_strides:
                 if s % n == 0:
@@ -460,9 +623,10 @@ class ConsensusRuntime:
                 # wire, its own tiny ppermute on the per-leaf reference —
                 # 4 bytes per ring direction either way
                 total += 2.0 * wireplan.PUSH_SUM_TRAILER_BYTES
-            if self.cfg.algorithm == "adc_dgd" and len(self.cfg.ring_strides) > 1:
+            if self.cfg.algorithm == "adc_dgd" and self._schedule_varying():
                 # amortized epoch-boundary resync: one fp32 x_tilde exchange
-                # per re-wiring (both ring directions)
+                # per re-wiring (both ring directions; membership schedules
+                # stop paying it once clamped, so this is an upper bound)
                 total += (2.0 * rows * kops.BLOCK * 4
                           / self.cfg.schedule_period)
             return total
@@ -512,7 +676,7 @@ class ConsensusRuntime:
         if cfg.algorithm == "none" or (n <= 1 and cfg.algorithm != "allreduce"):
             return 0.0
         resync_amort = (1.0 / cfg.schedule_period
-                        if len(cfg.ring_strides) > 1 else 0.0)
+                        if self._schedule_varying() else 0.0)
         if cfg.wire_packing == "pipelined":
             if n_chunks is None and layout is not None:
                 n_chunks = self.pipeline_chunks_for(layout)
@@ -564,8 +728,14 @@ class ConsensusRuntime:
                 m["residual_norm"] = jnp.zeros((), jnp.float32)
                 if self.cfg.push_sum_enabled:
                     m["push_sum_weight"] = jnp.ones((), jnp.float32)
-                if self.cfg.loss_model is not None:
+                if self.cfg.faults_enabled:
                     m["wire_bytes_delivered"] = jnp.zeros((), jnp.float32)
+                    m["delivered_frac"] = jnp.ones((), jnp.float32)
+                if self.cfg.straggle_rate is not None:
+                    m["deadline_miss_frac"] = jnp.zeros((), jnp.float32)
+                if self.cfg.membership is not None:
+                    m["active_nodes"] = jnp.asarray(
+                        float(ctx.total_consensus_nodes), jnp.float32)
             if self.cfg.track_consensus_error:
                 m["consensus_err"] = _consensus_error(x_out, ctx)
             return m
@@ -596,37 +766,89 @@ class ConsensusRuntime:
                 fn = self._adc_exchange
             else:
                 fn = self._adc_exchange_per_leaf
-            impl = lambda s: fn(  # noqa: E731
+            impl = lambda s, mask=None: fn(  # noqa: E731
                 x_prev, x_half, state, step, key, stride=s, noise=noise,
-                layout=layout)
+                layout=layout, mask=mask)
         return self._dispatch_stride(impl, step)
 
     # ------------------------------------------------------------------
     def _dispatch_stride(self, impl, step):
-        """Run ``impl(stride)`` for the ring stride of this step's schedule
-        epoch.  ppermute permutations are static per trace, so the
-        time-varying ring is a ``lax.switch`` over one stride-specialized
-        branch per entry of ``ring_strides`` (all branches return the same
-        state/metric pytree; XLA traces each wiring once)."""
+        """Run ``impl(stride)`` — or ``impl(stride, mask=...)`` under
+        elastic membership — for this step's schedule epoch.  ppermute
+        permutations are static per trace, so both the time-varying ring
+        AND the membership schedule are a ``lax.switch`` over one
+        wiring-specialized branch per DISTINCT (stride, mask) pair (a
+        static table deduplicates repeats: e.g. identical masks across
+        epochs, or an all-active mask recurring after a churn window; all
+        branches return the same state/metric pytree).  The stride index
+        cycles with the epoch; the mask index CLAMPS to the last mask —
+        membership stabilizes."""
         strides = self.cfg.ring_strides
-        if len(strides) == 1:
-            return impl(strides[0])
+        masks = self.cfg.membership
+        if masks is None:
+            if len(strides) == 1:
+                return impl(strides[0])
+            epoch = ((jnp.asarray(step, jnp.int32) - 1)
+                     // self.cfg.schedule_period)
+            branches = [partial(impl, s) for s in strides]
+            return jax.lax.switch(epoch % len(strides), branches)
+        pairs, index = [], {}
+        table = np.empty((len(strides), len(masks)), np.int32)
+        for si, s in enumerate(strides):
+            for mi, m in enumerate(masks):
+                if (s, m) not in index:
+                    index[(s, m)] = len(pairs)
+                    pairs.append((s, m))
+                table[si, mi] = index[(s, m)]
+        if len(pairs) == 1:
+            s, m = pairs[0]
+            return impl(s, mask=m)
         epoch = (jnp.asarray(step, jnp.int32) - 1) // self.cfg.schedule_period
-        branches = [partial(impl, s) for s in strides]
-        return jax.lax.switch(epoch % len(strides), branches)
+        si = epoch % len(strides)
+        mi = jnp.minimum(epoch, len(masks) - 1)
+        branches = [partial(impl, s, mask=m) for s, m in pairs]
+        return jax.lax.switch(jnp.asarray(table)[si, mi], branches)
 
     # ------------------------------------------------------------------
+    def _schedule_varying(self) -> bool:
+        """Does the wiring (stride or membership) ever change at an epoch
+        boundary?  This is what makes the resync machinery necessary."""
+        return (len(self.cfg.ring_strides) > 1
+                or (self.cfg.membership is not None
+                    and len(self.cfg.membership) > 1))
+
     def _resync_flag(self, step):
-        """Epoch-boundary m_agg resync predicate for time-varying rings: the
-        incremental aggregate m_agg = sum_j W_ij x_tilde_j is only valid
-        for a fixed neighbor set, so on the first step of every schedule
-        epoch the NEW neighbors exchange their fp32 x_tilde once and
-        m_agg is rebuilt exactly (amortized in wire_bytes_per_step)."""
-        if len(self.cfg.ring_strides) <= 1:
+        """Epoch-boundary m_agg resync predicate for time-varying rings
+        and membership changes: the incremental aggregate
+        m_agg = sum_j W_ij x_tilde_j is only valid for a fixed neighbor
+        set, so on the first step of every schedule epoch the NEW
+        neighbors exchange their fp32 x_tilde once and m_agg is rebuilt
+        exactly (amortized in wire_bytes_per_step).  Once a pure
+        membership schedule has clamped to its last mask the wiring never
+        changes again, so the resync stops firing."""
+        if not self._schedule_varying():
             return None
         step_i32 = jnp.asarray(step, jnp.int32)
-        return jnp.logical_and(
+        flag = jnp.logical_and(
             (step_i32 - 1) % self.cfg.schedule_period == 0, step_i32 > 1)
+        if (self.cfg.membership is not None
+                and len(self.cfg.ring_strides) == 1):
+            epoch = (step_i32 - 1) // self.cfg.schedule_period
+            flag = jnp.logical_and(
+                flag, epoch <= len(self.cfg.membership) - 1)
+        return flag
+
+    def _resync_ok(self, resync, step):
+        """Success flag of the bounded-retry resync handshake (ok in BOTH
+        ring directions), or None when resyncs cannot fail (no loss model,
+        or no resync at all).  A node whose handshake fails keeps its
+        stale m_agg — the next boundary repairs it."""
+        if resync is None or self.loss is None:
+            return None
+        ok_up, ok_dn = self.loss.resync_keep(
+            jnp.asarray(step, jnp.int32), self._node_index(),
+            self.cfg.resync_retries)
+        return jnp.logical_and(ok_up, ok_dn)
 
     def _node_index(self):
         """Traced consensus-node index of this device (shared by all its
@@ -643,15 +865,37 @@ class ConsensusRuntime:
 
     def _keep_flags(self, step):
         """(keep_upstream, keep_downstream) boolean scalars of this step's
-        loss draw, or (None, None) when no LossModel is configured (the
+        loss draw, or (None, None) when no loss model is configured (the
         machinery then never enters the trace)."""
-        lm = self.cfg.loss_model
+        lm = self.loss
         if lm is None:
             return None, None
         node = self._node_index()
         s = jnp.asarray(step, jnp.int32)
         return (lm.keep(s, faults.FROM_UPSTREAM, node),
                 lm.keep(s, faults.FROM_DOWNSTREAM, node))
+
+    def _deadline_flags(self, launch_step):
+        """(meet_upstream, meet_downstream) straggler-deadline draws of the
+        async transport, keyed — like the loss draw — by the LAUNCH step
+        of the in-flight payload; (None, None) without a straggler
+        model."""
+        sm = self.straggler
+        if sm is None:
+            return None, None
+        node = self._node_index()
+        s = jnp.asarray(launch_step, jnp.int32)
+        return (sm.keep(s, faults.FROM_UPSTREAM, node),
+                sm.keep(s, faults.FROM_DOWNSTREAM, node))
+
+    @staticmethod
+    def _and_flags(a, b):
+        """Combine two optional keep-flag scalars (None = always keep)."""
+        if a is None:
+            return b
+        if b is None:
+            return a
+        return jnp.logical_and(a, b)
 
     def _step_k(self, step):
         """fixed mode: effective grid step Delta_k = Delta_0 / k^gamma — this
@@ -678,7 +922,7 @@ class ConsensusRuntime:
 
     # ------------------------------------------------------------------
     def _adc_exchange(self, x_prev, x_half, state, step, key, stride=1,
-                      noise=None, layout=None):
+                      noise=None, layout=None, mask=None):
         """Packed / pipelined ADC-DGD exchange: the whole parameter tree as
         ONE wire problem whose payload geometry comes from the runtime's
         :class:`~repro.core.wireplan.WirePlan`.
@@ -713,7 +957,15 @@ class ConsensusRuntime:
         w_fwd, w_bwd = cfg.in_weights
         directed = w_fwd != w_bwd
         keep_up, keep_dn = self._keep_flags(step)
+        resync_ok = self._resync_ok(resync, step)
         last_unit = len(units) - 1
+        # activity scalar of THIS device's node (None when every node is
+        # active — the all-active mask must stay bitwise inert): inactive
+        # nodes freeze their parameters and shadows and zero their metrics
+        act_b = None
+        if mask is not None and not all(mask):
+            act_b = jnp.asarray(np.asarray(mask, np.bool_))[
+                self._node_index()]
 
         xt = state["x_tilde"]                       # (n_rows, BLOCK) packed
         mb = state["m_agg"]
@@ -750,8 +1002,8 @@ class ConsensusRuntime:
                 # 4-byte fp32 trailer — no extra collective; fragment byte
                 # offsets address the payload from 0 and never see it
                 pay = wire.lift_concat([pay, trailer])
-            return (pay, _ppermute_ring(pay, ctx, +stride),
-                    _ppermute_ring(pay, ctx, -stride))
+            return (pay, _ppermute_ring(pay, ctx, +stride, mask=mask),
+                    _ppermute_ring(pay, ctx, -stride, mask=mask))
 
         recv_w = {}
         dense = {"l": [], "r": []} if directed else None
@@ -780,13 +1032,21 @@ class ConsensusRuntime:
             if resync is not None:
                 xt_u = jax.lax.slice_in_dim(xt, unit.row_start, unit.row_end)
 
-                def _rebuild(xt_u=xt_u):
-                    xt_l = _ppermute_ring(xt_u, ctx, +stride)
-                    xt_r = _ppermute_ring(xt_u, ctx, -stride)
+                def _rebuild(xt_u=xt_u, unit=unit):
+                    xt_l = _ppermute_ring(xt_u, ctx, +stride, mask=mask)
+                    xt_r = _ppermute_ring(xt_u, ctx, -stride, mask=mask)
                     if directed:
-                        return (jnp.float32(w_fwd) * xt_l
-                                + jnp.float32(w_bwd) * xt_r)
-                    return jnp.float32(cfg.side_weight) * (xt_l + xt_r)
+                        built = (jnp.float32(w_fwd) * xt_l
+                                 + jnp.float32(w_bwd) * xt_r)
+                    else:
+                        built = jnp.float32(cfg.side_weight) * (xt_l + xt_r)
+                    if resync_ok is not None:
+                        # bounded-retry handshake failed in a direction:
+                        # keep the stale aggregate, repaired next boundary
+                        built = jnp.where(
+                            resync_ok, built, jax.lax.slice_in_dim(
+                                mb, unit.row_start, unit.row_end))
+                    return built
 
                 mb_u = jax.lax.cond(
                     resync, _rebuild,
@@ -862,12 +1122,18 @@ class ConsensusRuntime:
                 w_r = jnp.where(keep_dn, w_r, state["ps_nbr"][1:2])
             if resync is not None:
                 # epoch boundary: new neighbors — refresh the weights over
-                # the reliable control plane alongside the m_agg rebuild
+                # the bounded-retry control plane alongside the m_agg
+                # rebuild (a failed handshake keeps the stale weights)
+                def _refresh(w_l=w_l, w_r=w_r):
+                    fresh_l = _ppermute_ring(ps_w, ctx, +stride, mask=mask)
+                    fresh_r = _ppermute_ring(ps_w, ctx, -stride, mask=mask)
+                    if resync_ok is not None:
+                        return (jnp.where(resync_ok, fresh_l, w_l),
+                                jnp.where(resync_ok, fresh_r, w_r))
+                    return fresh_l, fresh_r
+
                 w_l, w_r = jax.lax.cond(
-                    resync,
-                    lambda: (_ppermute_ring(ps_w, ctx, +stride),
-                             _ppermute_ring(ps_w, ctx, -stride)),
-                    lambda: (w_l, w_r))
+                    resync, _refresh, lambda w_l=w_l, w_r=w_r: (w_l, w_r))
             # w + fwd (w_l - w) + bwd (w_r - w) == self w + fwd w_l +
             # bwd w_r (column-stochastic), but is EXACT (x + 0 = x) when
             # all weights agree — on the homogeneous device ring w stays
@@ -877,6 +1143,11 @@ class ConsensusRuntime:
             # de-bias: the combine lives in the numerator domain w * x;
             # the parameters handed back are the ratio z = (W x) / (W w)
             comb = comb / ps_new[0]
+        if act_b is not None:
+            # inactive node: freeze the shadows in place (nothing was
+            # truly sent or received — the masked ring never addressed it)
+            xt_new = jnp.where(act_b, xt_new, xt)
+            m_new = jnp.where(act_b, m_new, mb)
         # gradient step applied per leaf while unpacking (x_prev never
         # needs packing; identical elementwise ops to the per-leaf path)
         comb_leaves = layout.unpack(comb, cast=False)
@@ -884,6 +1155,11 @@ class ConsensusRuntime:
             lambda c, h, p: (c + (h.astype(jnp.float32)
                                   - p.astype(jnp.float32))).astype(h.dtype),
             comb_leaves, x_half, x_prev)
+        if act_b is not None:
+            # inactive node: parameters freeze at their pre-departure
+            # value (it neither gossips nor takes gradient steps)
+            x_next = jax.tree.map(
+                lambda nx, p: jnp.where(act_b, nx, p), x_next, x_prev)
         new_state = {"x_tilde": xt_new, "m_agg": m_new}
         if push:
             new_state["ps_w"] = ps_new
@@ -893,6 +1169,9 @@ class ConsensusRuntime:
         # diagnostic in its own right (padding rows are exact zeros)
         residual = jnp.sqrt(jnp.sum(y * y)
                             / float(layout.n_rows * layout.block))
+        if act_b is not None:
+            overflow = jnp.where(act_b, overflow, 0.0)
+            residual = jnp.where(act_b, residual, 0.0)
         metrics = {"overflow_frac": overflow, "residual_norm": residual,
                    **self._wire_metrics(layout)}
         if push:
@@ -900,17 +1179,24 @@ class ConsensusRuntime:
         if keep_up is not None:
             # bytes accounting excludes dropped payloads (one flat payload
             # + trailer per surviving ring direction)
+            delivered = (keep_up.astype(jnp.float32)
+                         + keep_dn.astype(jnp.float32))
+            if act_b is not None:
+                delivered = jnp.where(act_b, delivered, 0.0)
             metrics["wire_bytes_delivered"] = (
-                float(plan.wire_bytes(push))
-                * (keep_up.astype(jnp.float32)
-                   + keep_dn.astype(jnp.float32)))
+                float(plan.wire_bytes(push)) * delivered)
+            metrics["delivered_frac"] = delivered / 2.0
+        if cfg.membership is not None:
+            metrics["active_nodes"] = jnp.asarray(
+                float(sum(mask) if mask is not None
+                      else self.ctx.total_consensus_nodes), jnp.float32)
         if cfg.track_consensus_error:
             metrics["consensus_err"] = _consensus_error(x_next, self.ctx)
         return x_next, new_state, metrics
 
     # ------------------------------------------------------------------
     def _adc_exchange_async(self, x_prev, x_half, state, step, key,
-                            stride=1, noise=None, layout=None):
+                            stride=1, noise=None, layout=None, mask=None):
         """One-step-stale packed ADC exchange (``wire_packing="async"``,
         DESIGN.md §Async overlap; reference rule: core.consensus.CEDAS).
 
@@ -944,7 +1230,7 @@ class ConsensusRuntime:
         if cfg.staleness == 0:
             x_next, ns, metrics = self._adc_exchange(
                 x_prev, x_half, state, step, key, stride=stride,
-                noise=noise, layout=layout)
+                noise=noise, layout=layout, mask=mask)
             for fk in wire.INFLIGHT_KEYS:
                 ns[fk] = state[fk]
             return x_next, ns, metrics
@@ -958,9 +1244,19 @@ class ConsensusRuntime:
         w_fwd, w_bwd = cfg.in_weights
         directed = w_fwd != w_bwd
         step_i32 = jnp.asarray(step, jnp.int32)
-        # the in-flight transfer was launched at step k-1: its decode grid
-        # and its loss draw are keyed by the LAUNCH step
+        # the in-flight transfer was launched at step k-1: its loss draw
+        # AND its straggler-deadline draw are keyed by the LAUNCH step; a
+        # payload that misses its one-step retire deadline is treated
+        # exactly like a dropped packet (stale-x_tilde reuse)
         keep_up, keep_dn = self._keep_flags(step_i32 - 1)
+        meet_up, meet_dn = self._deadline_flags(step_i32 - 1)
+        eff_up = self._and_flags(keep_up, meet_up)
+        eff_dn = self._and_flags(keep_dn, meet_dn)
+        resync_ok = self._resync_ok(resync, step)
+        act_b = None
+        if mask is not None and not all(mask):
+            act_b = jnp.asarray(np.asarray(mask, np.bool_))[
+                self._node_index()]
 
         xt = state["x_tilde"]                    # (n_rows, BLOCK) packed
         mb = state["m_agg"]
@@ -977,9 +1273,9 @@ class ConsensusRuntime:
                     p_r[-wireplan.PUSH_SUM_TRAILER_BYTES:],
                     jnp.float32).reshape(1),
             }
-        if keep_up is not None:
-            p_l = jnp.where(keep_up, p_l, jnp.zeros_like(p_l))
-            p_r = jnp.where(keep_dn, p_r, jnp.zeros_like(p_r))
+        if eff_up is not None:
+            p_l = jnp.where(eff_up, p_l, jnp.zeros_like(p_l))
+            p_r = jnp.where(eff_dn, p_r, jnp.zeros_like(p_r))
 
         # ---- RETIRE: drain the step-(k-1) payloads into the shadows -----
         dense = {"l": [], "r": []} if directed else None
@@ -1015,35 +1311,53 @@ class ConsensusRuntime:
             # NEW neighbors' post-retire x_tilde (all nodes' shadows are
             # consistent at this point — the buffer is fully drained)
             def _rebuild():
-                xt_l = _ppermute_ring(xt_new, ctx, +stride)
-                xt_r = _ppermute_ring(xt_new, ctx, -stride)
+                xt_l = _ppermute_ring(xt_new, ctx, +stride, mask=mask)
+                xt_r = _ppermute_ring(xt_new, ctx, -stride, mask=mask)
                 if directed:
-                    return (jnp.float32(w_fwd) * xt_l
-                            + jnp.float32(w_bwd) * xt_r)
-                return jnp.float32(cfg.side_weight) * (xt_l + xt_r)
+                    built = (jnp.float32(w_fwd) * xt_l
+                             + jnp.float32(w_bwd) * xt_r)
+                else:
+                    built = jnp.float32(cfg.side_weight) * (xt_l + xt_r)
+                if resync_ok is not None:
+                    built = jnp.where(resync_ok, built, m_new)
+                return built
 
             m_drained = jax.lax.cond(resync, _rebuild, lambda: m_new)
             comb = comb + (m_drained - m_new)
             m_new = m_drained
         if push:
             w_l, w_r = recv_w["l"], recv_w["r"]
-            if keep_up is not None:
-                w_l = jnp.where(keep_up, w_l, state["ps_nbr"][0:1])
-                w_r = jnp.where(keep_dn, w_r, state["ps_nbr"][1:2])
+            if eff_up is not None:
+                w_l = jnp.where(eff_up, w_l, state["ps_nbr"][0:1])
+                w_r = jnp.where(eff_dn, w_r, state["ps_nbr"][1:2])
             if resync is not None:
+                def _refresh(w_l=w_l, w_r=w_r):
+                    fresh_l = _ppermute_ring(ps_w, ctx, +stride, mask=mask)
+                    fresh_r = _ppermute_ring(ps_w, ctx, -stride, mask=mask)
+                    if resync_ok is not None:
+                        return (jnp.where(resync_ok, fresh_l, w_l),
+                                jnp.where(resync_ok, fresh_r, w_r))
+                    return fresh_l, fresh_r
+
                 w_l, w_r = jax.lax.cond(
-                    resync,
-                    lambda: (_ppermute_ring(ps_w, ctx, +stride),
-                             _ppermute_ring(ps_w, ctx, -stride)),
-                    lambda: (w_l, w_r))
+                    resync, _refresh, lambda w_l=w_l, w_r=w_r: (w_l, w_r))
             ps_new = ps_w + (jnp.float32(w_fwd) * (w_l - ps_w)
                              + jnp.float32(w_bwd) * (w_r - ps_w))
             comb = comb / ps_new[0]
+        if act_b is not None:
+            # inactive node: shadows freeze (its fly_self was zeroed at
+            # launch, so the retire above was already a no-op gossip; the
+            # rejoin-boundary resync rebuilds m_agg exactly afterwards)
+            xt_new = jnp.where(act_b, xt_new, xt)
+            m_new = jnp.where(act_b, m_new, mb)
         comb_leaves = layout.unpack(comb, cast=False)
         x_next = jax.tree.map(
             lambda c, h, p: (c + (h.astype(jnp.float32)
                                   - p.astype(jnp.float32))).astype(h.dtype),
             comb_leaves, x_half, x_prev)
+        if act_b is not None:
+            x_next = jax.tree.map(
+                lambda nx, p: jnp.where(act_b, nx, p), x_next, x_prev)
 
         # ---- LAUNCH: encode step k against the drained shadow -----------
         step_k = self._step_k(step)
@@ -1061,8 +1375,12 @@ class ConsensusRuntime:
                                    use_pallas=cfg.use_pallas)
         if push:
             new_pay = wire.lift_concat([new_pay, trailer])
-        new_l = _ppermute_ring(new_pay, ctx, +stride)
-        new_r = _ppermute_ring(new_pay, ctx, -stride)
+        if act_b is not None:
+            # an inactive node carries a zero-differential payload: its
+            # next retire decodes to an exact no-op even if it rejoins
+            new_pay = jnp.where(act_b, new_pay, jnp.zeros_like(new_pay))
+        new_l = _ppermute_ring(new_pay, ctx, +stride, mask=mask)
+        new_r = _ppermute_ring(new_pay, ctx, -stride, mask=mask)
 
         clipped = jnp.zeros((), jnp.float32)
         if cfg.quant_mode == "fixed":
@@ -1084,23 +1402,40 @@ class ConsensusRuntime:
             new_state["ps_nbr"] = jnp.concatenate([w_l, w_r])
         residual = jnp.sqrt(jnp.sum(y * y)
                             / float(layout.n_rows * layout.block))
+        if act_b is not None:
+            overflow = jnp.where(act_b, overflow, 0.0)
+            residual = jnp.where(act_b, residual, 0.0)
         metrics = {"overflow_frac": overflow, "residual_norm": residual,
                    **self._wire_metrics(layout)}
         if push:
             metrics["push_sum_weight"] = ps_new[0]
-        if keep_up is not None:
-            # accounting for the transfer retired this step (step k-1's draw)
+        if eff_up is not None:
+            # accounting for the transfer retired this step (step k-1's
+            # draws): a deadline miss is billed exactly like a drop
+            delivered = (eff_up.astype(jnp.float32)
+                         + eff_dn.astype(jnp.float32))
+            if act_b is not None:
+                delivered = jnp.where(act_b, delivered, 0.0)
             metrics["wire_bytes_delivered"] = (
-                float(plan.wire_bytes(push))
-                * (keep_up.astype(jnp.float32)
-                   + keep_dn.astype(jnp.float32)))
+                float(plan.wire_bytes(push)) * delivered)
+            metrics["delivered_frac"] = delivered / 2.0
+        if meet_up is not None:
+            miss = ((1.0 - meet_up.astype(jnp.float32))
+                    + (1.0 - meet_dn.astype(jnp.float32))) / 2.0
+            if act_b is not None:
+                miss = jnp.where(act_b, miss, 0.0)
+            metrics["deadline_miss_frac"] = miss
+        if cfg.membership is not None:
+            metrics["active_nodes"] = jnp.asarray(
+                float(sum(mask) if mask is not None
+                      else self.ctx.total_consensus_nodes), jnp.float32)
         if cfg.track_consensus_error:
             metrics["consensus_err"] = _consensus_error(x_next, self.ctx)
         return x_next, new_state, metrics
 
     # ------------------------------------------------------------------
     def _adc_exchange_per_leaf(self, x_prev, x_half, state, step, key,
-                               stride=1, noise=None, layout=None):
+                               stride=1, noise=None, layout=None, mask=None):
         """Per-leaf reference wire path (the historical hot loop): per leaf
         a noise draw, a quantize launch, FOUR ring collectives (codes/
         scales x both directions) and a dequant-combine launch.  Shares
@@ -1110,6 +1445,7 @@ class ConsensusRuntime:
         testing and the consensus_step_latency benchmark.
         """
         cfg, ctx = self.cfg, self.ctx
+        assert mask is None, "per-leaf reference path has no membership"
         if layout is None:
             layout = wire.WireLayout.for_tree(x_half)
         resync = self._resync_flag(step)
@@ -1119,6 +1455,7 @@ class ConsensusRuntime:
         w_fwd, w_bwd = cfg.in_weights
         directed = w_fwd != w_bwd
         keep_up, keep_dn = self._keep_flags(step)
+        resync_ok = self._resync_ok(resync, step)
         if push:
             # reference path: the weight scalar is its own (tiny) ppermute
             # pair instead of the packed payload trailer — same received
@@ -1131,11 +1468,14 @@ class ConsensusRuntime:
                 w_l = jnp.where(keep_up, fresh_l, state["ps_nbr"][0:1])
                 w_r = jnp.where(keep_dn, fresh_r, state["ps_nbr"][1:2])
             if resync is not None:
-                # reliable control-plane refresh at epoch boundaries (the
-                # fresh ppermute already ran on this path, so no extra
-                # collective inside a cond)
-                w_l = jnp.where(resync, fresh_l, w_l)
-                w_r = jnp.where(resync, fresh_r, w_r)
+                # bounded-retry control-plane refresh at epoch boundaries
+                # (the fresh ppermute already ran on this path, so no
+                # extra collective inside a cond); a failed handshake
+                # keeps the stale weights, like the packed paths
+                ok = resync if resync_ok is None else jnp.logical_and(
+                    resync, resync_ok)
+                w_l = jnp.where(ok, fresh_l, w_l)
+                w_r = jnp.where(ok, fresh_r, w_r)
             ps_new = ps_w + (jnp.float32(w_fwd) * (w_l - ps_w)
                              + jnp.float32(w_bwd) * (w_r - ps_w))
         leaves, treedef = jax.tree_util.tree_flatten(x_half)
@@ -1186,13 +1526,17 @@ class ConsensusRuntime:
                 c_r = jnp.where(keep_dn, c_r, jnp.zeros_like(c_r))
                 s_r = jnp.where(keep_dn, s_r, jnp.zeros_like(s_r))
             if resync is not None:
-                def _rebuild(xtb=xtb):
+                def _rebuild(xtb=xtb, mb=mb):
                     xt_l = _ppermute_ring(xtb, ctx, +stride)
                     xt_r = _ppermute_ring(xtb, ctx, -stride)
                     if directed:
-                        return (jnp.float32(w_fwd) * xt_l
-                                + jnp.float32(w_bwd) * xt_r)
-                    return jnp.float32(cfg.side_weight) * (xt_l + xt_r)
+                        built = (jnp.float32(w_fwd) * xt_l
+                                 + jnp.float32(w_bwd) * xt_r)
+                    else:
+                        built = jnp.float32(cfg.side_weight) * (xt_l + xt_r)
+                    if resync_ok is not None:
+                        built = jnp.where(resync_ok, built, mb)
+                    return built
                 mb = jax.lax.cond(resync, _rebuild, lambda mb=mb: mb)
             xt_new_b, m_new_b, comb_b = kops.dequant_combine(
                 codes, scales, c_l, s_l, c_r, s_r, xtb, mb,
@@ -1235,9 +1579,10 @@ class ConsensusRuntime:
             rows = sum(kops.padded_block_rows(s.size) for s in layout.slots)
             shipped = rows * kops.payload_width() + (
                 wireplan.PUSH_SUM_TRAILER_BYTES if push else 0)
-            metrics["wire_bytes_delivered"] = (
-                float(shipped) * (keep_up.astype(jnp.float32)
-                                  + keep_dn.astype(jnp.float32)))
+            delivered = (keep_up.astype(jnp.float32)
+                         + keep_dn.astype(jnp.float32))
+            metrics["wire_bytes_delivered"] = float(shipped) * delivered
+            metrics["delivered_frac"] = delivered / 2.0
         if cfg.track_consensus_error:
             metrics["consensus_err"] = _consensus_error(x_next, self.ctx)
         return x_next, new_state, metrics

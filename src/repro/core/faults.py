@@ -1,4 +1,4 @@
-"""Deterministic link-fault injection for the consensus exchange.
+"""Deterministic fault injection for the consensus exchange.
 
 Real federated/edge networks drop packets; the differential ADC wire is
 naturally robust to this: a receiver that misses a round simply keeps its
@@ -18,30 +18,119 @@ time-varying rings repairs any accumulated drift exactly.
     flat payload (all pipeline chunks of a step drop together, which is
     what keeps packed and pipelined transports bit-identical under loss).
 
+:class:`GilbertElliottLoss` adds time-correlated *burst* loss: each
+directed edge runs an independent two-state Markov chain (Good/Bad) with
+transition probabilities ``p`` (G->B) and ``r`` (B->G) and per-state loss
+probabilities ``g``/``h``.  The chain is realized host-side once into a
+keep table (same counter-based determinism contract), so the traced path
+is a constant-table gather and the one-decision-per-direction-per-step
+packet contract is preserved exactly.
+
+:class:`StragglerModel` reuses the Bernoulli machinery under a separate
+PRNG domain: a payload on the async (one-step-stale) transport that
+misses its one-step deadline is treated as dropped — same zeroed-payload
+decode path, independent draws from link loss even at equal seeds.
+
+:class:`NodeFailureModel` is the membership analogue: a seeded per-epoch
+fail/recover process producing the active-node masks that
+``topology.MembershipSchedule`` and the runtime's activity mask consume.
+
 Dropped payloads are zeroed at the receiver (every wire codec decodes the
 all-zero payload to an exact zero differential), which implements
 stale-``x_tilde`` reuse; bytes accounting excludes them (the runtime's
 ``wire_bytes_delivered`` metric).  The epoch-boundary resync exchange is
-control-plane traffic and modeled as reliable.
+control-plane traffic sent with **bounded retries** (``resync_keep``):
+each of the two directions independently succeeds if any of ``retries``
+retransmits survives the channel; a node whose resync fails in either
+direction keeps its stale ``m_agg`` until the next boundary repairs it.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["LossModel"]
+__all__ = [
+    "LossModel",
+    "GilbertElliottLoss",
+    "StragglerModel",
+    "NodeFailureModel",
+    "parse_loss_spec",
+]
 
 #: direction ids folded into the drop key: 0 = payload arriving from the
 #: upstream (+stride ppermute) neighbor, 1 = from the downstream one
 FROM_UPSTREAM = 0
 FROM_DOWNSTREAM = 1
 
+#: channel ids >= 2 address resync-retransmit packets: attempt ``a`` in
+#: direction ``d`` uses channel ``2 + 2*a + d`` (never collides with the
+#: payload channels 0/1)
+RESYNC_CHANNEL_BASE = 2
+
+#: PRNG domain constant folded first by :class:`StragglerModel` so its
+#: deadline draws are independent of link-loss draws at equal seeds
+_STRAGGLER_DOMAIN = 0x5D1E
+
+
+class _ResyncRetries:
+    """Bounded-retry resync handshake draws, shared by all loss models.
+
+    The epoch-boundary fp32 ``x_tilde`` resync is still subject to the
+    channel: each direction's resync transfer is retransmitted up to
+    ``retries`` times, and succeeds if ANY attempt survives.  Burst
+    models approximate the retransmits as independent draws at the
+    channel's stationary loss rate (retries are spaced out in time, so
+    the Markov state decorrelates between attempts).
+    """
+
+    def _resync_rate(self) -> float:
+        raise NotImplementedError
+
+    def _key(self, step, channel, node):
+        key = jax.random.PRNGKey(self.seed)
+        key = jax.random.fold_in(key, jnp.asarray(step, jnp.int32))
+        key = jax.random.fold_in(key, jnp.asarray(channel, jnp.int32))
+        return jax.random.fold_in(key, jnp.asarray(node, jnp.int32))
+
+    def resync_keep(self, step, node, retries: int):
+        """Per-direction resync success flags ``(ok_up, ok_dn)`` for the
+        boundary exchange of ``step`` at receiving ``node``; each flag is
+        the OR over ``retries`` independent retransmit draws.  ``step``
+        and ``node`` may be traced."""
+        if retries < 1:
+            raise ValueError(f"resync retries must be >= 1, got {retries}")
+        rate = jnp.float32(self._resync_rate())
+        flags = []
+        for d in (FROM_UPSTREAM, FROM_DOWNSTREAM):
+            ok = None
+            for a in range(retries):
+                channel = RESYNC_CHANNEL_BASE + 2 * a + d
+                u = jax.random.uniform(self._key(step, channel, node))
+                got = u >= rate
+                ok = got if ok is None else (ok | got)
+            flags.append(ok)
+        return flags[0], flags[1]
+
+    def resync_keep_host(self, n_nodes: int, steps,
+                         retries: int) -> np.ndarray:
+        """Host oracle for :meth:`resync_keep`: a ``(len(steps), 2,
+        n_nodes)`` bool array from the identical PRNG chain."""
+        steps = np.atleast_1d(np.asarray(steps, np.int32))
+        out = np.empty((len(steps), 2, n_nodes), dtype=bool)
+        for si, s in enumerate(steps):
+            for v in range(n_nodes):
+                ok_up, ok_dn = self.resync_keep(int(s), v, retries)
+                out[si, 0, v] = bool(ok_up)
+                out[si, 1, v] = bool(ok_dn)
+        return out
+
 
 @dataclasses.dataclass(frozen=True)
-class LossModel:
+class LossModel(_ResyncRetries):
     """Per-directed-edge Bernoulli packet loss, rate in [0, 1).
 
     A directed edge is identified by its *receiving* node and the ring
@@ -62,12 +151,8 @@ class LossModel:
         if not 0.0 <= self.rate < 1.0:
             raise ValueError(f"loss rate must be in [0, 1), got {self.rate}")
 
-    # -- traced path (inside shard_map) ---------------------------------
-    def _key(self, step, direction, node):
-        key = jax.random.PRNGKey(self.seed)
-        key = jax.random.fold_in(key, jnp.asarray(step, jnp.int32))
-        key = jax.random.fold_in(key, jnp.asarray(direction, jnp.int32))
-        return jax.random.fold_in(key, jnp.asarray(node, jnp.int32))
+    def _resync_rate(self) -> float:
+        return self.rate
 
     def keep(self, step, direction, node):
         """Boolean scalar: does the payload of ``step`` travelling in ring
@@ -92,3 +177,218 @@ class LossModel:
 
     def expected_delivered_frac(self) -> float:
         return 1.0 - self.rate
+
+
+@dataclasses.dataclass(frozen=True)
+class StragglerModel(LossModel):
+    """Straggler deadlines on the async transport, as Bernoulli misses.
+
+    A payload on the one-step-stale transport that has not arrived by its
+    retire deadline is treated exactly like a dropped packet (zeroed at
+    the receiver, stale-``x_tilde`` reuse).  The draws live in their own
+    PRNG domain so a straggler model and a loss model with equal seeds
+    produce independent masks.
+    """
+
+    def _key(self, step, channel, node):
+        key = jax.random.PRNGKey(self.seed)
+        key = jax.random.fold_in(key, jnp.int32(_STRAGGLER_DOMAIN))
+        key = jax.random.fold_in(key, jnp.asarray(step, jnp.int32))
+        key = jax.random.fold_in(key, jnp.asarray(channel, jnp.int32))
+        return jax.random.fold_in(key, jnp.asarray(node, jnp.int32))
+
+
+@dataclasses.dataclass(frozen=True)
+class GilbertElliottLoss(_ResyncRetries):
+    """Two-state Markov (Gilbert–Elliott) burst loss per directed edge.
+
+    Each (direction, receiving node) channel runs an independent chain:
+    state Good drops with probability ``g`` (default 0 — classic Gilbert),
+    state Bad with probability ``h`` (default 1), transitions G->B with
+    ``p`` and B->G with ``r``.  Stationary loss is ``pi_B*h + pi_G*g``
+    with ``pi_B = p/(p+r)``; mean bad-burst length is ``1/r`` steps.
+
+    The chain is inherently sequential, so it is realized ONCE host-side
+    into a ``(horizon, 2, n_nodes)`` keep table from the seeded
+    counter-based PRNG (same determinism contract as :class:`LossModel`);
+    the traced :meth:`keep` is a constant-table gather at
+    ``(step - 1) % horizon`` (runtime steps start at 1; indices wrap at
+    ``horizon``, which only matters for runs longer than ``horizon``
+    steps and is documented behavior, not drift).
+    """
+
+    p: float
+    r: float
+    h: float = 1.0
+    g: float = 0.0
+    seed: int = 0
+    n_nodes: int = 0
+    horizon: int = 4096
+
+    def __post_init__(self):
+        if not 0.0 < self.p <= 1.0:
+            raise ValueError(f"gilbert p must be in (0, 1], got {self.p}")
+        if not 0.0 < self.r <= 1.0:
+            raise ValueError(f"gilbert r must be in (0, 1], got {self.r}")
+        if not 0.0 <= self.g <= 1.0 or not 0.0 <= self.h <= 1.0:
+            raise ValueError(
+                f"gilbert state loss probs must be in [0, 1], "
+                f"got h={self.h} g={self.g}")
+        if self.n_nodes < 1:
+            raise ValueError(
+                f"GilbertElliottLoss needs n_nodes >= 1, got {self.n_nodes}")
+        if self.horizon < 1:
+            raise ValueError(f"horizon must be >= 1, got {self.horizon}")
+
+    def _resync_rate(self) -> float:
+        # retransmits are spaced in time -> model them as independent
+        # draws at the channel's stationary loss rate
+        return 1.0 - self.expected_delivered_frac()
+
+    @functools.cached_property
+    def _keep_table(self) -> np.ndarray:
+        """Host-realized keep table, shape ``(horizon, 2, n_nodes)``.
+
+        Per channel: one PRNG stream of ``(horizon, 2)`` uniforms — column
+        0 decides the drop in the current state, column 1 the transition.
+        (cached_property writes the instance ``__dict__`` directly, which
+        is fine on a frozen dataclass.)
+        """
+        table = np.empty((self.horizon, 2, self.n_nodes), dtype=bool)
+        with jax.ensure_compile_time_eval():
+            # the table may first be demanded while a step is being traced
+            # (a jit constant): realize it eagerly, never as tracers
+            base = jax.random.PRNGKey(self.seed)
+            us_all = np.asarray(jnp.stack([
+                jnp.stack([
+                    jax.random.uniform(
+                        jax.random.fold_in(
+                            jax.random.fold_in(base, jnp.int32(d)),
+                            jnp.int32(v)),
+                        (self.horizon, 2))
+                    for v in range(self.n_nodes)])
+                for d in range(2)]))
+        for d in range(2):
+            for v in range(self.n_nodes):
+                us = us_all[d, v]
+                bad = False
+                for t in range(self.horizon):
+                    loss_p = self.h if bad else self.g
+                    table[t, d, v] = us[t, 0] >= loss_p
+                    if bad:
+                        bad = not us[t, 1] < self.r
+                    else:
+                        bad = us[t, 1] < self.p
+        return table
+
+    def keep(self, step, direction, node):
+        """Constant-table gather; ``step`` / ``direction`` / ``node`` may
+        be traced."""
+        table = jnp.asarray(self._keep_table)
+        idx = jnp.mod(jnp.asarray(step, jnp.int32) - 1, self.horizon)
+        return table[idx, jnp.asarray(direction, jnp.int32),
+                     jnp.asarray(node, jnp.int32)]
+
+    def keep_mask_host(self, n_nodes: int, steps,
+                       directions: int = 2) -> np.ndarray:
+        if n_nodes != self.n_nodes:
+            raise ValueError(
+                f"keep_mask_host n_nodes={n_nodes} does not match the "
+                f"model's n_nodes={self.n_nodes}")
+        steps = np.atleast_1d(np.asarray(steps, np.int64))
+        idx = np.mod(steps - 1, self.horizon)
+        return self._keep_table[idx][:, :directions, :]
+
+    def expected_delivered_frac(self) -> float:
+        pi_bad = self.p / (self.p + self.r)
+        return 1.0 - (pi_bad * self.h + (1.0 - pi_bad) * self.g)
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeFailureModel:
+    """Seeded per-epoch node fail/recover process.
+
+    Epoch 0 starts all-active.  At each subsequent epoch every node draws
+    ``uniform(fold(seed, epoch, node))``: an active node fails if
+    ``u < fail_rate`` (refused, in node-index order, when it would drop
+    the active count below ``min_active``); an inactive node recovers if
+    ``u < recover_rate``.  Same counter-based determinism contract as
+    :class:`LossModel` — any host or test replays the identical masks.
+    """
+
+    fail_rate: float
+    recover_rate: float = 0.5
+    seed: int = 0
+    min_active: int = 2
+
+    def __post_init__(self):
+        if not 0.0 <= self.fail_rate < 1.0:
+            raise ValueError(
+                f"fail rate must be in [0, 1), got {self.fail_rate}")
+        if not 0.0 <= self.recover_rate <= 1.0:
+            raise ValueError(
+                f"recover rate must be in [0, 1], got {self.recover_rate}")
+        if self.min_active < 2:
+            raise ValueError(
+                f"min_active must be >= 2, got {self.min_active}")
+
+    def active_mask_host(self, n_nodes: int, n_epochs: int) -> np.ndarray:
+        """Concrete ``(n_epochs, n_nodes)`` bool activity mask."""
+        if n_nodes < self.min_active:
+            raise ValueError(
+                f"n_nodes={n_nodes} below min_active={self.min_active}")
+        base = jax.random.PRNGKey(self.seed)
+        masks = np.empty((n_epochs, n_nodes), dtype=bool)
+        masks[0] = True
+        for e in range(1, n_epochs):
+            prev = masks[e - 1]
+            cur = prev.copy()
+            n_active = int(prev.sum())
+            ekey = jax.random.fold_in(base, jnp.int32(e))
+            for v in range(n_nodes):
+                u = float(jax.random.uniform(
+                    jax.random.fold_in(ekey, jnp.int32(v))))
+                if prev[v]:
+                    if u < self.fail_rate and n_active - 1 >= self.min_active:
+                        cur[v] = False
+                        n_active -= 1
+                else:
+                    if u < self.recover_rate:
+                        cur[v] = True
+                        n_active += 1
+            masks[e] = cur
+        return masks
+
+
+def parse_loss_spec(spec: str) -> dict:
+    """Parse a ``--link-loss-model`` spec string.
+
+    ``"bernoulli"`` selects the i.i.d. model (rate from ``--link-loss``);
+    ``"gilbert:p=0.1,r=0.5[,h=1.0][,g=0.0]"`` selects the Gilbert–Elliott
+    burst model.  Returns a dict with a ``kind`` key plus the parsed
+    parameters; raises ``ValueError`` on malformed specs.
+    """
+    spec = spec.strip()
+    if spec == "bernoulli":
+        return {"kind": "bernoulli"}
+    head, sep, tail = spec.partition(":")
+    if head != "gilbert":
+        raise ValueError(
+            f"unknown loss model {spec!r} (expected 'bernoulli' or "
+            f"'gilbert:p=..,r=..[,h=..][,g=..]')")
+    params = {"h": 1.0, "g": 0.0}
+    if not sep or not tail:
+        raise ValueError("gilbert spec needs at least p=..,r=..")
+    for item in tail.split(","):
+        k, eq, val = item.partition("=")
+        k = k.strip()
+        if not eq or k not in ("p", "r", "h", "g"):
+            raise ValueError(f"bad gilbert parameter {item!r}")
+        try:
+            params[k] = float(val)
+        except ValueError as exc:
+            raise ValueError(f"bad gilbert parameter {item!r}") from exc
+    if "p" not in params or "r" not in params:
+        raise ValueError("gilbert spec needs both p=.. and r=..")
+    params["kind"] = "gilbert"
+    return params

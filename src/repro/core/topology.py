@@ -60,6 +60,7 @@ __all__ = [
     "is_strongly_connected",
     "push_sum_weights",
     "schedule_by_name",
+    "MembershipSchedule",
 ]
 
 
@@ -782,3 +783,198 @@ def schedule_by_name(name: str, n: int | None = None, **kw) -> TopologySchedule:
     if name == "directed_erdos_renyi":
         return DirectedErdosRenyiSchedule(n, **kw)
     raise KeyError(f"unknown schedule {name!r}")
+
+
+# ---------------------------------------------------------------------------
+# Elastic membership
+# ---------------------------------------------------------------------------
+
+def _nearest_active(j: int, mask: "Sequence[bool]",
+                    exclude: "set[int] | None" = None) -> int:
+    """Nearest node to ``j`` (ring distance, preferring +1 over -1) that is
+    active in ``mask`` and not in ``exclude``."""
+    n = len(mask)
+    exclude = exclude or set()
+    for d in range(1, n):
+        for cand in ((j + d) % n, (j - d) % n):
+            if mask[cand] and cand not in exclude and cand != j:
+                return cand
+    raise ValueError(f"no active neighbor for node {j} in mask {mask}")
+
+
+@dataclasses.dataclass(frozen=True)
+class MembershipSchedule:
+    """Per-epoch active-node masks for elastic consensus.
+
+    ``masks[e][v]`` says whether node ``v`` participates during epoch
+    ``e``; epochs past the end clamp to the last mask (the membership
+    stabilizes).  Three pieces of algebra hang off the masks:
+
+      * :meth:`mixing_at` — the consensus matrix over the *surviving*
+        ring: inactive nodes get identity rows/columns (they neither send
+        nor receive mass), survivors form a compacted stride-1 ring
+        reweighted by Metropolis-Hastings (default) or the runtime's
+        fixed ``(self_weight, side, side)`` rule.  Doubly stochastic on
+        the active set by construction.
+      * :meth:`handoff_at` — a column-stochastic mass-handoff matrix for
+        a push-sum ledger: a node departing at epoch ``e`` pushes its
+        entire (value, weight) mass to its nearest survivor, so the
+        active ledger's totals are conserved across the membership change.
+      * :meth:`rejoin_sources_at` — for each node rejoining at ``e``, the
+        nearest node that was active through ``e-1``: the rejoiner
+        warm-restarts from that peer's de-biased iterate (the reference
+        analogue of the runtime's epoch-boundary fp32 resync).
+    """
+
+    masks: tuple
+
+    def __post_init__(self):
+        if not self.masks:
+            raise ValueError("MembershipSchedule needs at least one mask")
+        masks = tuple(tuple(bool(b) for b in m) for m in self.masks)
+        n = len(masks[0])
+        for e, m in enumerate(masks):
+            if len(m) != n:
+                raise ValueError(
+                    f"mask {e} has {len(m)} nodes, expected {n}")
+            if sum(m) < 2:
+                raise ValueError(
+                    f"epoch {e} must keep >= 2 active nodes, got {sum(m)}")
+        object.__setattr__(self, "masks", masks)
+
+    @property
+    def n_nodes(self) -> int:
+        return len(self.masks[0])
+
+    @property
+    def n_epochs(self) -> int:
+        return len(self.masks)
+
+    @property
+    def is_static(self) -> bool:
+        return all(m == self.masks[0] for m in self.masks)
+
+    def mask_at(self, epoch: int) -> tuple:
+        """The active mask for ``epoch`` (clamped to the last one)."""
+        return self.masks[min(epoch, self.n_epochs - 1)]
+
+    def active_indices(self, epoch: int) -> list:
+        m = self.mask_at(epoch)
+        return [v for v in range(self.n_nodes) if m[v]]
+
+    # -- mixing over the surviving ring ---------------------------------
+    def mixing_at(self, epoch: int, self_weight: float = 0.5,
+                  rule: str = "metropolis") -> MixingMatrix:
+        mask = self.mask_at(epoch)
+        active = self.active_indices(epoch)
+        n, m = self.n_nodes, len(active)
+        w = np.eye(n, dtype=np.float64)
+        if rule == "metropolis":
+            adj = np.zeros((m, m), dtype=bool)
+            for p in range(m):
+                q = (p + 1) % m
+                if q != p:
+                    adj[p, q] = adj[q, p] = True
+            sub = metropolis_weights(adj)
+        elif rule == "ring":
+            sub = ring(m, self_weight=self_weight).w
+        else:
+            raise ValueError(f"unknown reweighting rule {rule!r}")
+        for p, i in enumerate(active):
+            for q, j in enumerate(active):
+                w[i, j] = sub[p, q]
+        mm = MixingMatrix(w=w, name=f"elastic{m}of{n}@{epoch}")
+        mm.validate()
+        return mm
+
+    # -- push-sum mass handoff at a membership change -------------------
+    def handoff_at(self, epoch: int) -> np.ndarray:
+        """Column-stochastic ``(n, n)`` handoff ``H`` applied at the
+        boundary entering ``epoch``: column ``j`` of a node departing at
+        ``epoch`` is ``e_target`` (its mass moves whole to the nearest
+        survivor); all other columns are identity."""
+        if epoch < 1:
+            raise ValueError("handoff is defined for epoch >= 1")
+        prev, cur = self.mask_at(epoch - 1), self.mask_at(epoch)
+        # Prefer nodes active through the change: a rejoiner's state is
+        # about to be warm-restarted (rejoin_sources_at), which would
+        # discard any mass handed to it.  Only a full membership swap
+        # (no continuing node) falls back to the new active set — whose
+        # members then keep the received mass instead of warm-restarting.
+        cont = [prev[v] and cur[v] for v in range(self.n_nodes)]
+        pool = cont if any(cont) else list(cur)
+        h = np.eye(self.n_nodes, dtype=np.float64)
+        for j in range(self.n_nodes):
+            if prev[j] and not cur[j]:
+                target = _nearest_active(j, pool)
+                h[j, j] = 0.0
+                h[target, j] = 1.0
+        return h
+
+    # -- rejoin bookkeeping ---------------------------------------------
+    def rejoiners_at(self, epoch: int) -> list:
+        if epoch < 1:
+            return []
+        prev, cur = self.mask_at(epoch - 1), self.mask_at(epoch)
+        return [v for v in range(self.n_nodes) if cur[v] and not prev[v]]
+
+    def rejoin_sources_at(self, epoch: int) -> dict:
+        """``{rejoiner: source}`` where source was active through epoch
+        ``epoch - 1`` AND stays active at ``epoch`` (it has valid current
+        state to clone).  When NO node is active through the change (a
+        full membership swap) the dict is empty: rejoiners keep their
+        frozen state plus whatever mass :meth:`handoff_at` routed to
+        them — there is no live state to warm-restart from."""
+        prev, cur = self.mask_at(epoch - 1), self.mask_at(epoch)
+        survivors = [prev[v] and cur[v] for v in range(self.n_nodes)]
+        if not any(survivors):
+            return {}
+        return {v: _nearest_active(v, survivors)
+                for v in self.rejoiners_at(epoch)}
+
+    # -- constructors ----------------------------------------------------
+    @classmethod
+    def static(cls, n_nodes: int) -> "MembershipSchedule":
+        return cls(masks=(tuple(True for _ in range(n_nodes)),))
+
+    @classmethod
+    def from_spec(cls, spec: str, n_nodes: int,
+                  n_epochs: int | None = None) -> "MembershipSchedule":
+        """Parse ``"2@1:3;0@4:6"`` — node 2 inactive for epochs [1, 3),
+        node 0 for [4, 6).  ``n_epochs`` defaults to ``max(end) + 1`` so
+        the schedule always ends with a recovery epoch."""
+        outages = []
+        for part in spec.split(";"):
+            part = part.strip()
+            if not part:
+                continue
+            node_s, sep, span = part.partition("@")
+            start_s, sep2, end_s = span.partition(":")
+            if not sep or not sep2:
+                raise ValueError(
+                    f"bad outage {part!r} (expected 'node@start:end')")
+            node, start, end = int(node_s), int(start_s), int(end_s)
+            if not 0 <= node < n_nodes:
+                raise ValueError(f"node {node} out of range [0, {n_nodes})")
+            if not 0 <= start < end:
+                raise ValueError(f"bad epoch span {start}:{end}")
+            outages.append((node, start, end))
+        if not outages:
+            raise ValueError(f"empty membership spec {spec!r}")
+        total = n_epochs if n_epochs is not None else max(
+            e for _, _, e in outages) + 1
+        masks = []
+        for e in range(total):
+            m = [True] * n_nodes
+            for node, start, end in outages:
+                if start <= e < end:
+                    m[node] = False
+            masks.append(tuple(m))
+        return cls(masks=tuple(masks))
+
+    @classmethod
+    def from_failure_model(cls, model, n_nodes: int,
+                           n_epochs: int) -> "MembershipSchedule":
+        """Masks drawn from a :class:`repro.core.faults.NodeFailureModel`."""
+        am = model.active_mask_host(n_nodes, n_epochs)
+        return cls(masks=tuple(tuple(bool(b) for b in row) for row in am))

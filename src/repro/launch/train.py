@@ -215,6 +215,11 @@ def build_train_setup(
     link_loss: float | None = None,        # Bernoulli packet-loss rate
     loss_seed: int = 0,                    # loss-mask seed (core.faults)
     push_sum: bool | None = None,          # force push-sum weight threading
+    link_loss_model: str = "bernoulli",    # bernoulli | gilbert:p=..,r=..
+    resync_retries: int = 3,               # bounded resync handshake retries
+    straggle_rate: float | None = None,    # async deadline-miss rate
+    straggle_seed: int = 0,                # straggler-mask seed (core.faults)
+    membership: tuple | None = None,       # per-epoch active-node masks
 ) -> TrainSetup:
     ctx = make_context(mesh, consensus_nodes)
     defs = T.build_defs(cfg, ctx, dtype=compute_dtype)
@@ -227,7 +232,10 @@ def build_train_setup(
         staleness=staleness,
         wire_codec=wire_codec, byte_budget=byte_budget,
         topology=topology, forward_weight=forward_weight,
-        link_loss=link_loss, loss_seed=loss_seed, push_sum=push_sum)
+        link_loss=link_loss, loss_seed=loss_seed, push_sum=push_sum,
+        link_loss_model=link_loss_model, resync_retries=resync_retries,
+        straggle_rate=straggle_rate, straggle_seed=straggle_seed,
+        membership=membership)
     consensus = ConsensusRuntime(ccfg, ctx)
     opt = opt_by_name(optimizer)
     if schedule == "constant":
@@ -323,8 +331,13 @@ def build_train_setup(
                                  if algorithm == "adc_dgd" else {}),
                               **({"push_sum_weight": P()}
                                  if ccfg.push_sum_enabled else {}),
-                              **({"wire_bytes_delivered": P()}
-                                 if ccfg.loss_model is not None else {}),
+                              **({"wire_bytes_delivered": P(),
+                                  "delivered_frac": P()}
+                                 if ccfg.faults_enabled else {}),
+                              **({"deadline_miss_frac": P()}
+                                 if ccfg.straggle_rate is not None else {}),
+                              **({"active_nodes": P()}
+                                 if ccfg.membership is not None else {}),
                               **({"consensus_err": P()} if track_consensus_error else {})})
 
     step_sm = shard_map_compat(step_body, mesh, in_specs=in_specs,
@@ -516,6 +529,29 @@ def main(argv=None):
                          "x_tilde estimate (core.faults.LossModel)")
     ap.add_argument("--loss-seed", type=int, default=0,
                     help="seed of the deterministic loss masks")
+    ap.add_argument("--link-loss-model", default="bernoulli",
+                    help="link-loss process: 'bernoulli' (i.i.d., rate from "
+                         "--link-loss) or 'gilbert:p=..,r=..[,h=..][,g=..]' "
+                         "— a two-state Markov burst-loss channel "
+                         "(core.faults.GilbertElliottLoss)")
+    ap.add_argument("--resync-retries", type=int, default=3,
+                    help="bounded retransmit attempts of the epoch-boundary "
+                         "resync handshake under link loss (a failed "
+                         "handshake keeps the stale m_agg one more epoch)")
+    ap.add_argument("--straggle", type=float, default=None,
+                    help="per-node-direction deadline-miss rate in [0, 1) "
+                         "for --wire-packing=async: an in-flight payload "
+                         "that misses its one-step deadline is treated as "
+                         "dropped (stale x_tilde reuse, core.faults."
+                         "StragglerModel)")
+    ap.add_argument("--straggle-seed", type=int, default=0,
+                    help="seed of the deterministic straggler masks")
+    ap.add_argument("--node-failures", default=None,
+                    help="elastic-membership spec 'node@start:end[;...]' — "
+                         "node inactive for schedule epochs [start, end), "
+                         "e.g. '2@1:3;0@4:6' (topology.MembershipSchedule); "
+                         "survivors re-form a compacted ring with "
+                         "Metropolis-Hastings weights")
     ap.add_argument("--seed", type=int, default=0,
                     help="run seed: parameter init AND the consensus "
                          "quantization-noise stream")
@@ -536,6 +572,12 @@ def main(argv=None):
         except KeyError as e:
             raise SystemExit(f"--wire-codec: {e.args[0]}") from None
     mesh = make_cpu_mesh(data=args.data, model=args.model)
+
+    membership_masks = None
+    if args.node_failures:
+        from repro.core.topology import MembershipSchedule
+        membership_masks = MembershipSchedule.from_spec(
+            args.node_failures, args.nodes).masks
 
     setups: dict[str, TrainSetup] = {}
 
@@ -560,6 +602,11 @@ def main(argv=None):
                 seed=args.seed, topology=args.topology,
                 forward_weight=args.forward_weight,
                 link_loss=args.link_loss, loss_seed=args.loss_seed,
+                link_loss_model=args.link_loss_model,
+                resync_retries=args.resync_retries,
+                straggle_rate=args.straggle,
+                straggle_seed=args.straggle_seed,
+                membership=membership_masks,
                 track_consensus_error=(args.algorithm != "allreduce"))
         return setups[codec_name]
 

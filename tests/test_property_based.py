@@ -91,3 +91,80 @@ def test_push_sum_weights_positive_long_horizon(n, p, seed):
     np.testing.assert_allclose(ws[0], 1.0)
     assert (ws > 0.0).all()
     np.testing.assert_allclose(ws.sum(axis=1), float(n), atol=1e-8)
+
+
+def _random_mask(rng, n):
+    """A membership mask with >= 2 active nodes."""
+    mask = rng.random(n) < 0.7
+    while mask.sum() < 2:
+        mask[rng.integers(0, n)] = True
+    return tuple(bool(b) for b in mask)
+
+
+@given(st.integers(3, 12), st.integers(0, 2**31 - 1),
+       st.sampled_from(["metropolis", "ring"]))
+@settings(max_examples=40, deadline=None)
+def test_elastic_mixing_algebra_any_mask(n, seed, rule):
+    """Property: for ANY active mask (>= 2 survivors) the elastic mixing
+    matrix is symmetric doubly stochastic on the survivor set with exact
+    identity rows/columns for inactive nodes — the reweighting never
+    leaks mass toward or from a failed node."""
+    rng = np.random.default_rng(seed)
+    mask = _random_mask(rng, n)
+    sched = topo.MembershipSchedule((mask,))
+    w = np.asarray(sched.mixing_at(0, rule=rule).w, np.float64)
+    np.testing.assert_allclose(w.sum(axis=0), 1.0, atol=1e-6)
+    np.testing.assert_allclose(w.sum(axis=1), 1.0, atol=1e-6)
+    np.testing.assert_allclose(w, w.T, atol=1e-7)
+    assert (w >= -1e-12).all()
+    for j, on in enumerate(mask):
+        if not on:
+            e = np.zeros(n)
+            e[j] = 1.0
+            np.testing.assert_array_equal(w[j], e)
+            np.testing.assert_array_equal(w[:, j], e)
+    # second-largest eigenvalue modulus < 1 on the survivor block when it
+    # can mix at all (m >= 3: a 2-ring with s=1 is periodic)
+    m = sum(mask)
+    if m >= 3:
+        ev = np.sort(np.abs(np.linalg.eigvalsh(w)))
+        assert ev[-1] <= 1.0 + 1e-9
+        assert ev[-(1 + (n - m)) - 1] < 1.0 - 1e-6
+
+
+@given(st.integers(3, 12), st.integers(0, 2**31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_membership_handoff_mass_conserving_any_transition(n, seed):
+    """Property: between ANY two consecutive masks the push-sum handoff
+    matrix is column-stochastic (conserves total mass exactly), moves
+    every departing node's column to a node active THROUGH the change
+    (falling back to the new active set only on a full swap), and keeps
+    every continuing node's column at identity."""
+    rng = np.random.default_rng(seed)
+    prev = _random_mask(rng, n)
+    cur = _random_mask(rng, n)
+    sched = topo.MembershipSchedule((prev, cur))
+    h = np.asarray(sched.handoff_at(1), np.float64)
+    np.testing.assert_allclose(h.sum(axis=0), 1.0, atol=1e-12)
+    x = rng.normal(size=(n, 4))
+    np.testing.assert_allclose((h @ x).sum(0), x.sum(0), atol=1e-9)
+    cont = [prev[k] and cur[k] for k in range(n)]
+    for j in range(n):
+        col = h[:, j]
+        if prev[j] and not cur[j]:            # departing: mass -> survivor
+            tgt = int(np.argmax(col))
+            assert col[tgt] == 1.0 and tgt != j
+            # handoff never targets a node whose state is about to be
+            # warm-restarted (it would discard the mass)
+            assert cont[tgt] if any(cont) else cur[tgt]
+        else:                                 # continuing (or already out)
+            assert col[j] == 1.0 and col.sum() == 1.0
+    # every rejoiner's warm-restart source was active through the switch;
+    # a full swap has no live source, so nobody warm-restarts
+    srcs = sched.rejoin_sources_at(1)
+    if any(cont):
+        assert set(srcs) == {k for k in range(n) if cur[k] and not prev[k]}
+        for j, src in srcs.items():
+            assert prev[src] and cur[src]
+    else:
+        assert srcs == {}
