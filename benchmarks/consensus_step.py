@@ -96,7 +96,7 @@ import numpy as np                                           # noqa: E402
 from jax.sharding import Mesh, PartitionSpec as P            # noqa: E402
 
 from repro.configs import get_config                         # noqa: E402
-from repro.core import wire                                  # noqa: E402
+from repro.core import telemetry, wire                       # noqa: E402
 from repro.core.codec import AdaptiveBitController           # noqa: E402
 from repro.core.distributed import (ConsensusConfig,         # noqa: E402
                                     ConsensusRuntime)
@@ -216,9 +216,10 @@ def _timing_gate(*paths) -> float:
     """Variance-aware lower bound for a speed-ratio gate: the NOISE_TOL
     floor loosened by the worst relative per-repeat spread among the
     compared paths (a host noisy enough to blur its own repeats cannot
-    support a tighter verdict)."""
-    spread = max(p.get("timing_spread", 0.0) for p in paths)
-    return NOISE_TOL / (1.0 + 3.0 * spread)
+    support a tighter verdict).  The arithmetic lives in
+    core.telemetry.timing_gate so the obs regression reporter applies the
+    identical policy across bench-series runs."""
+    return telemetry.timing_gate(*paths, noise_tol=NOISE_TOL)
 
 
 def count_eqns(jaxpr, prim_name: str) -> int:
@@ -678,9 +679,11 @@ def loss_sweep_section(mesh, ctx) -> tuple[dict, bool]:
             x, st, d = step_f(x, x, st, noise, jnp.asarray(k2, jnp.int32))
             delivered += float(np.sum(np.asarray(d)))
         r["consensus_err_end"] = _consensus_err(x)
-        plan = rt.wire_plan_for(layout)
-        shipped = (LOSS_GOSSIP_STEPS * N_DEVICES * 2
-                   * plan.wire_bytes(push_sum=True))
+        # one accounting for shipped AND the delivered oracle — the same
+        # WireAccounting the runtime's traced metrics are derived from
+        acct = telemetry.WireAccounting.for_plan(
+            rt.wire_plan_for(layout), push_sum=True)
+        shipped = LOSS_GOSSIP_STEPS * N_DEVICES * acct.shipped_payload
         r["shipped_bytes"] = float(shipped)
         ps_dev = float(np.max(np.abs(np.asarray(st["ps_w"]) - 1.0)))
         if ps_dev != 0.0:
@@ -698,7 +701,7 @@ def loss_sweep_section(mesh, ctx) -> tuple[dict, bool]:
             r["delivered_bytes"] = delivered
             mask = faults.LossModel(rate=rate, seed=LOSS_SEED) \
                 .keep_mask_host(N_DEVICES, range(1, LOSS_GOSSIP_STEPS + 1))
-            oracle = float(mask.sum()) * plan.wire_bytes(push_sum=True)
+            oracle = acct.delivered_bytes(float(mask.sum()))
             r["delivered_bytes_oracle"] = oracle
             if delivered != oracle:
                 print(f"FAIL[loss]: {name} delivered-bytes accounting "
@@ -870,9 +873,9 @@ def churn_sweep_section(mesh, ctx) -> tuple[dict, bool]:
                 ok = False
         if name == "churn_burst":
             r["delivered_bytes"] = delivered
-            plan = rt.wire_plan_for(layout)
-            shipped = (CHURN_GOSSIP_STEPS * N_DEVICES * 2
-                       * plan.wire_bytes(push_sum=False))
+            acct = telemetry.WireAccounting.for_plan(
+                rt.wire_plan_for(layout), push_sum=False)
+            shipped = CHURN_GOSSIP_STEPS * N_DEVICES * acct.shipped_payload
             r["shipped_bytes_full_membership"] = float(shipped)
             if not r["consensus_err_end"] < r["consensus_err_start"]:
                 print("FAIL[churn]: burst-loss churn run did not contract "

@@ -570,10 +570,30 @@ def bench_consensus_step_latency() -> None:
         _row("consensus_step_latency", time.time() - t0, first_line)
         return
     with open(os.path.join(repo, "BENCH_consensus_step.json")) as f:
-        payload = json.load(f)
-    if isinstance(payload.get("runs"), list):
-        # append-mode series (PR 7): summarize the run just recorded
-        payload = payload["runs"][-1]["payload"]
+        series = json.load(f)
+    runs = (series["runs"] if isinstance(series.get("runs"), list)
+            else [{"payload": series}])   # pre-series single-payload file
+    # the WHOLE append-mode series, sha-ordered (append order): a
+    # trajectory row per run with its gates_ok verdict — not just the
+    # newest payload
+    import sys as _sys
+    _sys.path.insert(0, os.path.join(repo, "src"))
+    from repro.launch.obs import series_rows
+    print(f"  consensus_step series: {len(runs)} run(s)")
+    failed = []
+    for i, run in enumerate(runs):
+        rows = series_rows(run.get("payload") or {})
+        sps = sorted(r["steps_per_s"] for r in rows.values()
+                     if r.get("steps_per_s"))
+        med = sps[len(sps) // 2] if sps else float("nan")
+        gates = run.get("gates_ok")
+        if gates is False:
+            failed.append(i)
+        print(f"    run {i}: sha={(run.get('git_sha') or '-')[:8]} "
+              f"config={(run.get('config_hash') or '-')[:12]} "
+              f"gates={'-' if gates is None else ('ok' if gates else 'FAIL')} "
+              f"median {med:.2f} steps/s over {len(rows)} timings")
+    payload = runs[-1]["payload"]
     derived = " ".join(
         f"{a}:{v['speedup']:.1f}x({int(v['per_leaf']['collectives_per_step'])}"
         f"->{int(v['packed']['collectives_per_step'])}coll,"
@@ -583,6 +603,10 @@ def bench_consensus_step_latency() -> None:
     if ov:
         derived += (f" async_ovh:"
                     f"{ov['modes']['async']['consensus_overhead_frac']:.0%}")
+    if failed:
+        raise RuntimeError(
+            f"bench-series gate regression: run(s) {failed} of "
+            f"BENCH_consensus_step.json have gates_ok=false")
     _row("consensus_step_latency", time.time() - t0, derived)
 
 

@@ -393,6 +393,20 @@ class AdaptiveBitController:
             return fit if fit else (order[0],)
         return tuple(order)
 
+    def candidate_table(self, n_rows: int, block: int = kops.BLOCK
+                        ) -> list[dict]:
+        """The full priced ladder as JSON-able rows (telemetry
+        ``codec_decision`` events): every rung with its bytes/step, code
+        ceiling, and whether the byte budget admits it."""
+        cands = set(self.candidates(n_rows, block))
+        return [{"name": name,
+                 "wire_bytes": self.wire_bytes(name, n_rows, block),
+                 "code_max": by_name(name).code_max,
+                 "payload_width": by_name(name).payload_width(block),
+                 "fits_budget": name in cands,
+                 "current": name == self.current}
+                for name in self.ladder]
+
     def _fidelity(self, name: str) -> int:
         return self.ladder.index(name)
 

@@ -51,6 +51,7 @@ import numpy as np
 
 from .compression import Compressor, IdentityCompressor
 from .problems import ConsensusProblem
+from .telemetry import WireAccounting
 from .topology import MixingMatrix, TopologySchedule
 
 __all__ = [
@@ -139,7 +140,10 @@ class _Algorithm:
         carries it in both directions, every directed edge exactly once
         (``n_messages``)."""
         msgs = self.mixing.n_messages  # type: ignore[attr-defined]
-        return msgs * self.compressor.wire_bytes(problem.dim)  # type: ignore[attr-defined]
+        acct = WireAccounting(
+            payload_bytes=self.compressor.wire_bytes(problem.dim),  # type: ignore[attr-defined]
+            directions=msgs)
+        return acct.shipped_payload
 
 
 @dataclasses.dataclass(frozen=True)
@@ -347,7 +351,9 @@ class DGD(_Algorithm):
         }
 
     def bytes_per_iteration(self, problem):
-        return self.mixing.n_messages * self.elem_bytes * problem.dim
+        return WireAccounting(payload_bytes=self.elem_bytes * problem.dim,
+                              directions=self.mixing.n_messages
+                              ).shipped_payload
 
 
 @dataclasses.dataclass(frozen=True)
@@ -397,7 +403,9 @@ class DGDt(_Algorithm):
         }
 
     def bytes_per_iteration(self, problem):
-        return self.t * self.mixing.n_messages * self.elem_bytes * problem.dim
+        acct = WireAccounting(payload_bytes=self.elem_bytes * problem.dim,
+                              directions=self.mixing.n_messages)
+        return self.t * acct.shipped_payload
 
 
 @dataclasses.dataclass(frozen=True)

@@ -82,7 +82,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import codec as wire_codec
-from repro.core import faults, wire, wireplan
+from repro.core import faults, telemetry, wire, wireplan
 from repro.kernels import ops as kops
 from repro.models.sharding import ParallelContext
 
@@ -227,6 +227,36 @@ class ConsensusConfig:
     #: directed); True forces the weight machinery on a symmetric ring
     #: (where it provably stays == 1 — the exactness fixture).
     push_sum: bool | None = None
+    #: in-trace telemetry (core.telemetry, DESIGN.md §Observability):
+    #: True adds the extra per-step counters — bytes shipped, raw
+    #: saturation census, resync fired/ok, async staleness retirements —
+    #: as metric outputs of the exchange (see telemetry_metric_keys()).
+    #: False keeps the step trace BIT-IDENTICAL to a telemetry-less
+    #: build: no extra outputs, no extra ops (tests/test_wire.py pins
+    #: the jaxpr).
+    telemetry: bool = False
+
+    @property
+    def schedule_varying(self) -> bool:
+        """Does the wiring (stride or membership) ever change at an epoch
+        boundary?  This is what makes the resync machinery necessary."""
+        return (len(self.ring_strides) > 1
+                or (self.membership is not None
+                    and len(self.membership) > 1))
+
+    def telemetry_metric_keys(self) -> tuple:
+        """The extra metric keys the ADC exchange emits when
+        ``telemetry=True`` — ONE source of truth shared by every
+        exchange return path and train.py's out_specs (the shard_map
+        pytree contract: every declared key on every path)."""
+        if not self.telemetry or self.algorithm != "adc_dgd":
+            return ()
+        keys = ["wire_bytes_shipped", "saturated_count"]
+        if self.schedule_varying:
+            keys += ["resync_fired", "resync_ok"]
+        if self.wire_packing == "async" and self.staleness == 1:
+            keys.append("staleness_retired")
+        return tuple(keys)
 
     @property
     def side_weight(self) -> float:
@@ -591,49 +621,66 @@ class ConsensusRuntime:
         return self.wire_plan_for(layout).noise_cols(layout.block)
 
     # -- wire accounting (static; used by rooflines & benchmarks) --------
-    def wire_bytes_per_step(self, n_params_local: int,
-                            layout: wire.WireLayout | None = None) -> float:
-        """Bytes this device puts on the ring per step.
+    def wire_accounting(self, n_params_local: int,
+                        layout: wire.WireLayout | None = None
+                        ) -> telemetry.WireAccounting | None:
+        """The unified byte accounting of this runtime's wire
+        (core.telemetry.WireAccounting): the ONE source the static
+        ``wire_bytes_per_step`` metric, the traced delivered/shipped
+        metrics and the benchmark MB/step math all read, so
+        shipped == delivered + dropped holds everywhere by construction.
 
         ``layout`` (when available) gives the exact heterogeneous payload
-        size via the WirePlan prefix sum; otherwise rows are estimated from
-        the contiguous element count (exact when the tree packs as one
-        leaf; mixed plans without a layout fall back to the hot codec's
-        width — an upper bound).  The per-leaf wire path ships each leaf
-        padded to the historical TILE_N-aligned blockify height, so it
-        puts MORE rows on the wire than the row-granular packed payload
-        for the same tree.
+        size via the WirePlan prefix sum; otherwise rows are estimated
+        from the contiguous element count (exact when the tree packs as
+        one leaf; mixed plans without a layout fall back to the hot
+        codec's width — an upper bound).  The per-leaf wire path ships
+        each leaf padded to the historical TILE_N-aligned blockify
+        height, so it puts MORE rows on the wire than the row-granular
+        packed payload for the same tree.  Returns None for algorithms
+        with no compressed wire.
         """
-        if self.cfg.algorithm in ("adc_dgd", "compressed_dgd"):
-            if layout is not None and self.cfg.wire_packing == "per_leaf":
+        cfg = self.cfg
+        if cfg.algorithm in ("adc_dgd", "compressed_dgd"):
+            push = cfg.algorithm == "adc_dgd" and cfg.push_sum_enabled
+            if layout is not None and cfg.wire_packing == "per_leaf":
                 rows = sum(kops.padded_block_rows(s.size)
                            for s in layout.slots)
-                total = 2.0 * rows * kops.payload_width()
+                payload = rows * kops.payload_width()
             elif layout is not None:
-                total = 2.0 * self.wire_plan_for(layout).payload_bytes
+                payload = self.wire_plan_for(layout).payload_bytes
                 rows = layout.n_rows
             else:
                 rows = kops.padded_block_rows(n_params_local)
                 width = (self.codec.payload_width() if self.codec is not None
                          else wire_codec.by_name(self.plan_spec.hot_codec)
                          .payload_width())
-                total = 2.0 * rows * width
-            if self.cfg.algorithm == "adc_dgd" and self.cfg.push_sum_enabled:
-                # the fp32 push-sum weight: a payload trailer on the packed
-                # wire, its own tiny ppermute on the per-leaf reference —
-                # 4 bytes per ring direction either way
-                total += 2.0 * wireplan.PUSH_SUM_TRAILER_BYTES
-            if self.cfg.algorithm == "adc_dgd" and self._schedule_varying():
+                payload = rows * width
+            resync = 0.0
+            if cfg.algorithm == "adc_dgd" and self._schedule_varying():
                 # amortized epoch-boundary resync: one fp32 x_tilde exchange
                 # per re-wiring (both ring directions; membership schedules
                 # stop paying it once clamped, so this is an upper bound)
-                total += (2.0 * rows * kops.BLOCK * 4
-                          / self.cfg.schedule_period)
-            return total
-        if self.cfg.algorithm == "dgd":
-            itemsize = jnp.dtype(self.cfg.wire_dtype).itemsize
-            return 2.0 * n_params_local * itemsize
-        return 0.0
+                resync = 2.0 * rows * kops.BLOCK * 4 / cfg.schedule_period
+            # the fp32 push-sum weight: a payload trailer on the packed
+            # wire, its own tiny ppermute on the per-leaf reference —
+            # 4 bytes per ring direction either way
+            return telemetry.WireAccounting(
+                payload_bytes=int(payload),
+                trailer_bytes=(wireplan.PUSH_SUM_TRAILER_BYTES
+                               if push else 0),
+                resync_bytes_amortized=resync)
+        if cfg.algorithm == "dgd":
+            return telemetry.WireAccounting.uncompressed(
+                n_params_local, jnp.dtype(cfg.wire_dtype).itemsize)
+        return None
+
+    def wire_bytes_per_step(self, n_params_local: int,
+                            layout: wire.WireLayout | None = None) -> float:
+        """Bytes this device puts on the ring per step (see
+        :meth:`wire_accounting` for the underlying arithmetic)."""
+        acct = self.wire_accounting(n_params_local, layout=layout)
+        return 0.0 if acct is None else acct.shipped_per_step
 
     def _chunks_for(self, layout: wire.WireLayout) -> wire.ChunkedLayout:
         """Uniform-int8 chunk split for the compressed_dgd packed path (the
@@ -736,6 +783,9 @@ class ConsensusRuntime:
                 if self.cfg.membership is not None:
                     m["active_nodes"] = jnp.asarray(
                         float(ctx.total_consensus_nodes), jnp.float32)
+                # telemetry extras: nothing was exchanged on this path
+                for tk in self.cfg.telemetry_metric_keys():
+                    m[tk] = jnp.zeros((), jnp.float32)
             if self.cfg.track_consensus_error:
                 m["consensus_err"] = _consensus_error(x_out, ctx)
             return m
@@ -813,9 +863,7 @@ class ConsensusRuntime:
     def _schedule_varying(self) -> bool:
         """Does the wiring (stride or membership) ever change at an epoch
         boundary?  This is what makes the resync machinery necessary."""
-        return (len(self.cfg.ring_strides) > 1
-                or (self.cfg.membership is not None
-                    and len(self.cfg.membership) > 1))
+        return self.cfg.schedule_varying
 
     def _resync_flag(self, step):
         """Epoch-boundary m_agg resync predicate for time-varying rings
@@ -995,6 +1043,7 @@ class ConsensusRuntime:
             in place), flatten to the unit's 1-D wire buffer and put it on
             both ring directions: 2 collectives per unit regardless of how
             many codec runs the unit carries."""
+            telemetry.trace_mark("quantize", c, rows=units[c].n_rows)
             pay = plan.encode_unit(units[c], y, noise, fixed_step=step_k,
                                    use_pallas=cfg.use_pallas)
             if push and c == last_unit:
@@ -1002,6 +1051,7 @@ class ConsensusRuntime:
                 # 4-byte fp32 trailer — no extra collective; fragment byte
                 # offsets address the payload from 0 and never see it
                 pay = wire.lift_concat([pay, trailer])
+            telemetry.trace_mark("launch", c, rows=units[c].n_rows)
             return (pay, _ppermute_ring(pay, ctx, +stride, mask=mask),
                     _ppermute_ring(pay, ctx, -stride, mask=mask))
 
@@ -1013,8 +1063,10 @@ class ConsensusRuntime:
             unit c's in-flight payloads (persistent shadows viewed at each
             fragment's row offset; unit-level epoch-boundary m_agg
             resync)."""
+            telemetry.trace_mark("retire", c)
             pay, p_l, p_r = inflight
             unit = units[c]
+            telemetry.trace_mark("dequant_combine", c, rows=unit.n_rows)
             if push and c == last_unit:
                 recv_w["l"] = jax.lax.bitcast_convert_type(
                     p_l[-wireplan.PUSH_SUM_TRAILER_BYTES:],
@@ -1174,6 +1226,7 @@ class ConsensusRuntime:
             residual = jnp.where(act_b, residual, 0.0)
         metrics = {"overflow_frac": overflow, "residual_norm": residual,
                    **self._wire_metrics(layout)}
+        acct = self.wire_accounting(layout.n_elements, layout=layout)
         if push:
             metrics["push_sum_weight"] = ps_new[0]
         if keep_up is not None:
@@ -1183,16 +1236,47 @@ class ConsensusRuntime:
                          + keep_dn.astype(jnp.float32))
             if act_b is not None:
                 delivered = jnp.where(act_b, delivered, 0.0)
-            metrics["wire_bytes_delivered"] = (
-                float(plan.wire_bytes(push)) * delivered)
+            metrics["wire_bytes_delivered"] = acct.delivered_bytes(delivered)
             metrics["delivered_frac"] = delivered / 2.0
         if cfg.membership is not None:
             metrics["active_nodes"] = jnp.asarray(
                 float(sum(mask) if mask is not None
                       else self.ctx.total_consensus_nodes), jnp.float32)
+        self._telemetry_metrics(metrics, acct, clipped[0], resync,
+                                resync_ok, act_b)
         if cfg.track_consensus_error:
             metrics["consensus_err"] = _consensus_error(x_next, self.ctx)
         return x_next, new_state, metrics
+
+    def _telemetry_metrics(self, metrics, acct, saturated, resync,
+                           resync_ok, act_b, retired=None):
+        """The ``ConsensusConfig(telemetry=True)`` metric extras, shared
+        by every ADC wire path (zeroed when this node is inactive):
+
+          wire_bytes_shipped   payload bytes this node put on the ring
+          saturated_count      raw clipped-value census (fixed mode)
+          resync_fired         1 when this step ran the epoch resync
+          resync_ok            1 when it ran AND both handshakes landed
+          staleness_retired    async in-flight buffers drained (0/1/2)
+        """
+        keys = self.cfg.telemetry_metric_keys()
+        if not keys:
+            return
+        act = (jnp.ones((), jnp.float32) if act_b is None
+               else act_b.astype(jnp.float32))
+        metrics["wire_bytes_shipped"] = act * jnp.float32(
+            acct.shipped_payload)
+        metrics["saturated_count"] = act * saturated
+        if "resync_fired" in keys:
+            fired = (jnp.zeros((), jnp.float32) if resync is None
+                     else resync.astype(jnp.float32))
+            ok = fired if resync_ok is None else (
+                fired * resync_ok.astype(jnp.float32))
+            metrics["resync_fired"] = act * fired
+            metrics["resync_ok"] = act * ok
+        if "staleness_retired" in keys:
+            metrics["staleness_retired"] = act * (
+                jnp.float32(2.0) if retired is None else retired)
 
     # ------------------------------------------------------------------
     def _adc_exchange_async(self, x_prev, x_half, state, step, key,
@@ -1278,6 +1362,8 @@ class ConsensusRuntime:
             p_r = jnp.where(eff_dn, p_r, jnp.zeros_like(p_r))
 
         # ---- RETIRE: drain the step-(k-1) payloads into the shadows -----
+        telemetry.trace_mark("retire", 0, mode="async")
+        telemetry.trace_mark("dequant_combine", 0, rows=unit.n_rows)
         dense = {"l": [], "r": []} if directed else None
         outs = []
         for f in unit.fragments:
@@ -1360,6 +1446,9 @@ class ConsensusRuntime:
                 lambda nx, p: jnp.where(act_b, nx, p), x_next, x_prev)
 
         # ---- LAUNCH: encode step k against the drained shadow -----------
+        telemetry.trace_mark("quantize", 0, rows=unit.n_rows, mode="async")
+        telemetry.trace_mark("launch", 0, rows=unit.n_rows,
+                             buffers=wire.INFLIGHT_KEYS)
         step_k = self._step_k(step)
         xh_p = layout.pack(x_half)
         if push:
@@ -1407,6 +1496,8 @@ class ConsensusRuntime:
             residual = jnp.where(act_b, residual, 0.0)
         metrics = {"overflow_frac": overflow, "residual_norm": residual,
                    **self._wire_metrics(layout)}
+        acct = self.wire_accounting(layout.n_elements, layout=layout)
+        retired = None
         if push:
             metrics["push_sum_weight"] = ps_new[0]
         if eff_up is not None:
@@ -1416,8 +1507,8 @@ class ConsensusRuntime:
                          + eff_dn.astype(jnp.float32))
             if act_b is not None:
                 delivered = jnp.where(act_b, delivered, 0.0)
-            metrics["wire_bytes_delivered"] = (
-                float(plan.wire_bytes(push)) * delivered)
+            retired = delivered
+            metrics["wire_bytes_delivered"] = acct.delivered_bytes(delivered)
             metrics["delivered_frac"] = delivered / 2.0
         if meet_up is not None:
             miss = ((1.0 - meet_up.astype(jnp.float32))
@@ -1429,6 +1520,8 @@ class ConsensusRuntime:
             metrics["active_nodes"] = jnp.asarray(
                 float(sum(mask) if mask is not None
                       else self.ctx.total_consensus_nodes), jnp.float32)
+        self._telemetry_metrics(metrics, acct, clipped, resync, resync_ok,
+                                act_b, retired=retired)
         if cfg.track_consensus_error:
             metrics["consensus_err"] = _consensus_error(x_next, self.ctx)
         return x_next, new_state, metrics
@@ -1573,16 +1666,16 @@ class ConsensusRuntime:
                             / float(layout.n_rows * layout.block))
         metrics = {"overflow_frac": overflow, "residual_norm": residual,
                    **self._wire_metrics(layout)}
+        acct = self.wire_accounting(layout.n_elements, layout=layout)
         if push:
             metrics["push_sum_weight"] = ps_new[0]
         if keep_up is not None:
-            rows = sum(kops.padded_block_rows(s.size) for s in layout.slots)
-            shipped = rows * kops.payload_width() + (
-                wireplan.PUSH_SUM_TRAILER_BYTES if push else 0)
             delivered = (keep_up.astype(jnp.float32)
                          + keep_dn.astype(jnp.float32))
-            metrics["wire_bytes_delivered"] = float(shipped) * delivered
+            metrics["wire_bytes_delivered"] = acct.delivered_bytes(delivered)
             metrics["delivered_frac"] = delivered / 2.0
+        self._telemetry_metrics(metrics, acct, clipped_acc, resync,
+                                resync_ok, None)
         if cfg.track_consensus_error:
             metrics["consensus_err"] = _consensus_error(x_next, self.ctx)
         return x_next, new_state, metrics

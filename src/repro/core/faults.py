@@ -178,6 +178,12 @@ class LossModel(_ResyncRetries):
     def expected_delivered_frac(self) -> float:
         return 1.0 - self.rate
 
+    def describe(self) -> dict:
+        """JSON-able channel summary (telemetry ``wire_plan`` events)."""
+        return {"model": type(self).__name__, "rate": self.rate,
+                "seed": self.seed,
+                "expected_delivered_frac": self.expected_delivered_frac()}
+
 
 @dataclasses.dataclass(frozen=True)
 class StragglerModel(LossModel):
@@ -302,6 +308,13 @@ class GilbertElliottLoss(_ResyncRetries):
     def expected_delivered_frac(self) -> float:
         pi_bad = self.p / (self.p + self.r)
         return 1.0 - (pi_bad * self.h + (1.0 - pi_bad) * self.g)
+
+    def describe(self) -> dict:
+        """JSON-able channel summary (telemetry ``wire_plan`` events)."""
+        return {"model": type(self).__name__, "p": self.p, "r": self.r,
+                "h": self.h, "g": self.g, "seed": self.seed,
+                "mean_burst_steps": 1.0 / self.r,
+                "expected_delivered_frac": self.expected_delivered_frac()}
 
 
 @dataclasses.dataclass(frozen=True)

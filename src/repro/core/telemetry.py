@@ -1,0 +1,566 @@
+"""Structured telemetry for the consensus stack (schema ``telemetry/v1``).
+
+Three pieces, all zero-cost when unused (DESIGN.md §Observability):
+
+* **Typed per-step counters/gauges.**  The jitted step already returns a
+  metrics dict; ``ConsensusConfig(telemetry=True)`` adds the extra
+  in-trace counters (bytes shipped, saturation census, resync outcomes,
+  staleness retirements) as metric outputs, and :class:`Telemetry` is
+  the host-side registry + JSONL sink they stream into, one record per
+  step.  With ``telemetry=False`` the step trace is bit-identical to a
+  telemetry-less build — tests/test_wire.py pins the jaxpr.
+
+* **Host events.**  Decisions that happen *between* traces — controller
+  codec picks with their candidate table, plan re-tiers, membership
+  epoch transitions, resync outcomes — are appended to the same sink as
+  ``kind="event"`` records.
+
+* **Span recorder.**  :class:`SpanRecorder` captures the *structural*
+  exchange schedule at trace time (the launch/retire emission order of
+  ``core.distributed._pipeline_schedule`` and the async retire→launch
+  split, via :func:`trace_mark`) and renders it over the measured
+  per-step wall-clock windows as Chrome/Perfetto ``trace_event`` JSON.
+  Spans are schedule-accurate and duration-approximate: XLA does not
+  expose per-collective timestamps on the host mesh, so phase spans
+  subdivide the measured exchange window uniformly — what the timeline
+  shows faithfully is the *overlap structure* (which transfers are in
+  flight while which compute runs), which is the DESIGN §10 claim.
+
+The wire-byte arithmetic that used to live in three places
+(``ConsensusRuntime.wire_bytes_per_step``, the ``wire_bytes_delivered``
+metric, benchmark MB/step math) is unified here as
+:class:`WireAccounting`: shipped == delivered + dropped by construction,
+and the cross-check test (tests/test_telemetry.py) asserts the traced
+delivered metric against the host keep-table oracles for every loss
+model on every transport.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import json
+import math
+import os
+import time
+from typing import Any, Callable, Iterable
+
+__all__ = [
+    "SCHEMA", "EVENT_KINDS", "SPAN_PHASES", "STEP_METRICS",
+    "WireAccounting", "timing_gate", "validate_record", "Telemetry",
+    "SpanRecorder", "trace_mark", "set_trace_observer",
+]
+
+SCHEMA = "telemetry/v1"
+
+#: host-event record names (``kind="event"``, field ``event``)
+EVENT_KINDS = ("codec_decision", "plan_retier", "membership_epoch",
+               "resync", "wire_plan", "run_end")
+
+#: exchange span taxonomy (DESIGN.md §Observability): the five phases of
+#: one transfer unit's life on the wire
+SPAN_PHASES = ("quantize", "launch", "in_flight", "retire",
+               "dequant_combine")
+
+#: the typed registry of known per-step metrics: "counter" values are
+#: non-negative per-step totals (bytes, event counts), "gauge" values are
+#: instantaneous levels (fractions, norms, rates).  record_step validates
+#: against this; unknown keys must be registered first.
+STEP_METRICS: dict[str, str] = {
+    "loss": "gauge",
+    "lr": "gauge",
+    "aux": "gauge",
+    "collectives_per_step": "counter",
+    "wire_bytes_per_step": "counter",
+    "overflow_frac": "gauge",
+    "residual_norm": "gauge",
+    "push_sum_weight": "gauge",
+    "wire_bytes_delivered": "counter",
+    "delivered_frac": "gauge",
+    "deadline_miss_frac": "gauge",
+    "active_nodes": "gauge",
+    "consensus_err": "gauge",
+    # -- ConsensusConfig(telemetry=True) extras --------------------------
+    "wire_bytes_shipped": "counter",
+    "saturated_count": "counter",
+    "resync_fired": "counter",
+    "resync_ok": "gauge",
+    "staleness_retired": "counter",
+    # -- host-side timing riders -----------------------------------------
+    "step_s": "gauge",
+    "consensus_exchange_s": "gauge",
+    "consensus_overhead_frac": "gauge",
+}
+
+
+# ---------------------------------------------------------------------------
+# Unified wire-byte accounting
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class WireAccounting:
+    """The one source of wire-byte arithmetic for a configured exchange.
+
+    ``payload_bytes`` is ONE ring direction's flat payload (codes +
+    scales, excluding the push-sum trailer); a step ships
+    ``directions`` of them.  ``resync_bytes_amortized`` is the
+    epoch-boundary fp32 x_tilde exchange averaged over the schedule
+    period (an upper bound — membership schedules stop paying it once
+    clamped).  The invariant every caller leans on::
+
+        shipped_payload == delivered_bytes(d) + dropped_bytes(d)
+
+    for any delivered direction count ``d`` in [0, directions] — traced
+    or host-side.
+    """
+
+    payload_bytes: int                 # one direction, codes + scales
+    trailer_bytes: int = 0             # push-sum fp32 weight trailer
+    directions: int = 2                # ring directions per step
+    resync_bytes_amortized: float = 0.0
+
+    @property
+    def bytes_per_direction(self) -> int:
+        return self.payload_bytes + self.trailer_bytes
+
+    @property
+    def shipped_payload(self) -> float:
+        """Payload bytes put on the wire per step (all directions,
+        excluding the amortized resync) — the delivered+dropped total."""
+        return float(self.directions * self.bytes_per_direction)
+
+    @property
+    def shipped_per_step(self) -> float:
+        """Static bytes/step accounting incl. amortized resync — what
+        ``ConsensusRuntime.wire_bytes_per_step`` reports."""
+        return self.shipped_payload + self.resync_bytes_amortized
+
+    def delivered_bytes(self, delivered_directions):
+        """Bytes that arrived, given how many directions survived (a
+        host float or a traced scalar — the arithmetic is the same)."""
+        return float(self.bytes_per_direction) * delivered_directions
+
+    def dropped_bytes(self, delivered_directions):
+        return float(self.bytes_per_direction) * (
+            self.directions - delivered_directions)
+
+    # -- constructors ----------------------------------------------------
+    @classmethod
+    def for_plan(cls, plan, push_sum: bool = False,
+                 resync_bytes_amortized: float = 0.0) -> "WireAccounting":
+        """Accounting of a packed/pipelined/async WirePlan wire."""
+        from repro.core import wireplan
+        return cls(payload_bytes=int(plan.payload_bytes),
+                   trailer_bytes=(wireplan.PUSH_SUM_TRAILER_BYTES
+                                  if push_sum else 0),
+                   resync_bytes_amortized=resync_bytes_amortized)
+
+    @classmethod
+    def for_per_leaf(cls, layout, push_sum: bool = False,
+                     resync_bytes_amortized: float = 0.0
+                     ) -> "WireAccounting":
+        """Accounting of the historical per-leaf int8 wire: each leaf is
+        padded to its TILE_N-aligned blockify height, so it ships MORE
+        rows than the row-granular packed payload for the same tree."""
+        from repro.core import wireplan
+        from repro.kernels import ops as kops
+        rows = sum(kops.padded_block_rows(s.size) for s in layout.slots)
+        return cls(payload_bytes=rows * kops.payload_width(),
+                   trailer_bytes=(wireplan.PUSH_SUM_TRAILER_BYTES
+                                  if push_sum else 0),
+                   resync_bytes_amortized=resync_bytes_amortized)
+
+    @classmethod
+    def uncompressed(cls, n_params: int, itemsize: int) -> "WireAccounting":
+        """The fp32/bf16 DGD baseline wire (no codec, no trailer)."""
+        return cls(payload_bytes=n_params * itemsize)
+
+
+def timing_gate(*timings: dict, noise_tol: float = 0.5) -> float:
+    """Variance-aware speedup gate (PR 6): the more run-to-run spread the
+    timed paths showed, the looser the acceptable ratio.  ``timings`` are
+    timing dicts carrying ``timing_spread`` (IQR/median over repeats).
+    At zero spread the gate is ``noise_tol``; spread s relaxes it by
+    1/(1 + 3 s)."""
+    spread = max((t.get("timing_spread", 0.0) or 0.0) for t in timings)
+    return noise_tol / (1.0 + 3.0 * spread)
+
+
+# ---------------------------------------------------------------------------
+# telemetry/v1 records + validation
+# ---------------------------------------------------------------------------
+
+def _fail(reason: str) -> str:
+    return reason
+
+
+def validate_record(rec: Any) -> str | None:
+    """Validate one telemetry/v1 record; returns None when valid, else a
+    human-readable reason (pure stdlib — no jsonschema dependency)."""
+    if not isinstance(rec, dict):
+        return _fail("record is not an object")
+    if rec.get("schema") != SCHEMA:
+        return _fail(f"schema must be {SCHEMA!r}, got {rec.get('schema')!r}")
+    kind = rec.get("kind")
+    if kind == "meta":
+        if not isinstance(rec.get("run_id"), str) or not rec["run_id"]:
+            return _fail("meta.run_id must be a non-empty string")
+        if not isinstance(rec.get("config"), dict):
+            return _fail("meta.config must be an object")
+        sha = rec.get("git_sha")
+        if sha is not None and not isinstance(sha, str):
+            return _fail("meta.git_sha must be a string or null")
+        return None
+    if kind == "step":
+        step = rec.get("step")
+        if not isinstance(step, int) or step < 0:
+            return _fail("step.step must be a non-negative integer")
+        metrics = rec.get("metrics")
+        if not isinstance(metrics, dict) or not metrics:
+            return _fail("step.metrics must be a non-empty object")
+        for k, v in metrics.items():
+            ty = rec.get("types", {}).get(k) or STEP_METRICS.get(k)
+            if ty is None:
+                return _fail(f"step.metrics[{k!r}] is not a registered "
+                             "counter or gauge")
+            if not isinstance(v, (int, float)) or isinstance(v, bool):
+                return _fail(f"step.metrics[{k!r}] must be a number")
+            if not math.isfinite(v):
+                return _fail(f"step.metrics[{k!r}] must be finite")
+            if ty == "counter" and v < 0:
+                return _fail(f"counter step.metrics[{k!r}] must be >= 0")
+        return None
+    if kind == "event":
+        name = rec.get("event")
+        if name not in EVENT_KINDS:
+            return _fail(f"event.event must be one of {EVENT_KINDS}, "
+                         f"got {name!r}")
+        step = rec.get("step")
+        if step is not None and (not isinstance(step, int) or step < 0):
+            return _fail("event.step must be a non-negative integer or null")
+        if not isinstance(rec.get("data"), dict):
+            return _fail("event.data must be an object")
+        return None
+    return _fail(f"unknown record kind {kind!r}")
+
+
+def validate_file(path: str) -> list[str]:
+    """Validate every JSONL record in ``path``; returns the list of
+    ``"line N: reason"`` problems (empty == clean)."""
+    problems = []
+    with open(path) as f:
+        for i, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError as e:
+                problems.append(f"line {i}: invalid JSON ({e})")
+                continue
+            why = validate_record(rec)
+            if why is not None:
+                problems.append(f"line {i}: {why}")
+    return problems
+
+
+# ---------------------------------------------------------------------------
+# The host-side registry + sink
+# ---------------------------------------------------------------------------
+
+class Telemetry:
+    """Typed counter/gauge registry + schema-versioned JSONL sink.
+
+    Writes ``{out_dir}/telemetry-{run_id}.jsonl`` (one record per line,
+    ``meta`` first) and — when ``spans=True`` — a Chrome/Perfetto trace
+    at ``{out_dir}/trace-{run_id}.json`` on :meth:`close`.
+    """
+
+    def __init__(self, run_id: str, out_dir: str = "obs",
+                 config: dict | None = None, git_sha: str | None = None,
+                 spans: bool = False):
+        self.run_id = run_id
+        self.out_dir = out_dir
+        os.makedirs(out_dir, exist_ok=True)
+        self.path = os.path.join(out_dir, f"telemetry-{run_id}.jsonl")
+        self.trace_path = os.path.join(out_dir, f"trace-{run_id}.json")
+        self._types = dict(STEP_METRICS)
+        self._extra_types: dict[str, str] = {}
+        self._f = open(self.path, "w")
+        self.spans = SpanRecorder().install() if spans else None
+        self._write({"schema": SCHEMA, "kind": "meta", "run_id": run_id,
+                     "git_sha": git_sha, "config": dict(config or {}),
+                     "time_unix": time.time()})
+
+    # -- registry --------------------------------------------------------
+    def register(self, name: str, kind: str) -> None:
+        """Declare a metric outside the built-in registry."""
+        if kind not in ("counter", "gauge"):
+            raise ValueError(f"kind must be 'counter' or 'gauge', "
+                             f"got {kind!r}")
+        self._types[name] = kind
+        self._extra_types[name] = kind
+
+    def _write(self, rec: dict) -> None:
+        self._f.write(json.dumps(rec, sort_keys=True) + "\n")
+
+    # -- records ---------------------------------------------------------
+    def record_step(self, step: int, metrics: dict) -> None:
+        """Append one per-step record; values are coerced to float and
+        validated against the registry (counters must be >= 0)."""
+        clean = {}
+        for k, v in metrics.items():
+            ty = self._types.get(k)
+            if ty is None:
+                raise ValueError(
+                    f"unregistered metric {k!r}; Telemetry.register it as "
+                    "a counter or gauge first")
+            v = float(v)
+            if not math.isfinite(v):
+                raise ValueError(f"metric {k!r} is not finite: {v}")
+            if ty == "counter" and v < 0:
+                raise ValueError(f"counter {k!r} must be >= 0, got {v}")
+            clean[k] = v
+        rec = {"schema": SCHEMA, "kind": "step", "step": int(step),
+               "metrics": clean}
+        if self._extra_types:
+            rec["types"] = dict(self._extra_types)
+        self._write(rec)
+
+    def event(self, name: str, step: int | None = None, **data) -> None:
+        """Append one host event record (``name`` in EVENT_KINDS)."""
+        if name not in EVENT_KINDS:
+            raise ValueError(f"unknown event {name!r}; expected one of "
+                             f"{EVENT_KINDS}")
+        self._write({"schema": SCHEMA, "kind": "event", "event": name,
+                     "step": None if step is None else int(step),
+                     "data": data})
+
+    # -- lifecycle -------------------------------------------------------
+    def flush(self) -> None:
+        self._f.flush()
+
+    def close(self) -> None:
+        if self._f.closed:
+            return
+        self._f.flush()
+        self._f.close()
+        if self.spans is not None:
+            self.spans.uninstall()
+            self.spans.save(self.trace_path)
+
+    def __enter__(self) -> "Telemetry":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+# ---------------------------------------------------------------------------
+# Trace-time structural observer
+# ---------------------------------------------------------------------------
+
+_trace_observer: Callable | None = None
+
+
+def set_trace_observer(obs: Callable | None) -> None:
+    """Install (or clear) the module-global schedule observer consumed by
+    :func:`trace_mark`.  Marks fire at TRACE time only — they never
+    enter the jaxpr, so installing an observer cannot change the step
+    trace (the telemetry-off bit-identity pin relies on this)."""
+    global _trace_observer
+    _trace_observer = obs
+
+
+def trace_mark(phase: str, unit: int = 0, **info) -> None:
+    """Record one structural exchange event (called from the exchange
+    closures in core.distributed while they are being traced).  A no-op
+    unless a :class:`SpanRecorder` is installed."""
+    if _trace_observer is not None:
+        _trace_observer(phase, unit, info)
+
+
+# ---------------------------------------------------------------------------
+# Span recorder + Perfetto export
+# ---------------------------------------------------------------------------
+
+#: Perfetto track ids (tid) — one per concern so overlapping spans render
+#: on parallel tracks instead of nesting
+TRACKS = {"compute": 0, "codec": 1, "wire": 2, "inflight": 3, "host": 4}
+_TRACK_NAMES = {0: "model compute (fwd/bwd)", 1: "codec (quantize/dequant)",
+                2: "wire (launch/retire)", 3: "wire in-flight",
+                4: "host"}
+#: which track each exchange phase renders on
+_PHASE_TRACK = {"quantize": "codec", "launch": "wire", "retire": "wire",
+                "dequant_combine": "codec"}
+
+
+class SpanRecorder:
+    """Trace-structure capture + wall-clock span timeline.
+
+    Two span sources:
+
+    * :meth:`span` — a plain wall-clock context manager for host-visible
+      work (whole steps, controller decisions, probes).
+    * :meth:`record_step_window` — renders the captured exchange
+      schedule (``trace_mark`` order) into a measured step window:
+      compute first, then the exchange phases subdividing the tail
+      ``exchange_frac`` of the step.  A launch with no later retire of
+      the same unit in the window (the async transport) leaves its
+      in-flight span OPEN; the next window's first retire closes it —
+      which is exactly how the one-step-stale payload's flight time
+      comes to cover the next step's whole compute span.
+    """
+
+    def __init__(self):
+        self._origin = time.perf_counter()
+        self._events: list[dict] = []
+        self._schedule: list[tuple[str, int, dict]] = []
+        self._seen: set = set()
+        self._pending: list[dict] = []   # open in-flight spans (async)
+
+    # -- trace-structure capture ----------------------------------------
+    def install(self) -> "SpanRecorder":
+        set_trace_observer(self._observe)
+        return self
+
+    def uninstall(self) -> None:
+        set_trace_observer(None)
+
+    def _observe(self, phase: str, unit: int, info: dict) -> None:
+        key = (phase, unit)
+        if key not in self._seen:     # lax.switch traces branches twice
+            self._seen.add(key)
+            self._schedule.append((phase, unit, dict(info)))
+
+    @property
+    def schedule(self) -> list:
+        return list(self._schedule)
+
+    # -- host spans ------------------------------------------------------
+    def us(self, t_perf: float) -> float:
+        return (t_perf - self._origin) * 1e6
+
+    def _emit(self, name: str, ts_us: float, dur_us: float, track: str,
+              args: dict | None = None, cat: str = "exchange") -> None:
+        self._events.append({
+            "name": name, "cat": cat, "ph": "X", "pid": 0,
+            "tid": TRACKS[track], "ts": round(ts_us, 3),
+            "dur": round(max(dur_us, 0.001), 3),
+            **({"args": args} if args else {})})
+
+    @contextlib.contextmanager
+    def span(self, name: str, track: str = "host", args: dict | None = None):
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            t1 = time.perf_counter()
+            self._emit(name, self.us(t0), (t1 - t0) * 1e6, track,
+                       args, cat="host")
+
+    # -- schedule-derived exchange spans ---------------------------------
+    def record_step_window(self, step: int, t_start: float, dur_s: float,
+                           exchange_frac: float = 0.25) -> None:
+        """Render step ``step``'s timeline from its measured window.
+
+        ``t_start`` is the host ``time.perf_counter()`` at step launch,
+        ``dur_s`` the blocked wall-clock duration, ``exchange_frac`` the
+        measured (or estimated) fraction the fused exchange takes.
+        """
+        t0 = self.us(t_start)
+        dur = dur_s * 1e6
+        frac = min(max(exchange_frac, 0.02), 0.9)
+        marks = self._schedule
+        compute_end = t0 + dur * (1.0 - frac) if marks else t0 + dur
+        self._emit(f"fwd/bwd step {step}", t0, compute_end - t0,
+                   "compute", cat="compute")
+        if not marks:
+            return
+        win0, win1 = compute_end, t0 + dur
+        slot = (win1 - win0) / len(marks)
+        # the first retire slot closes any in-flight span carried over
+        # from the previous step (the async one-step-stale payload)
+        retire_at = next((win0 + i * slot for i, (ph, _, _)
+                          in enumerate(marks) if ph == "retire"), None)
+        if retire_at is not None:
+            for p in self._pending:
+                self._emit(p["name"], p["ts"], retire_at - p["ts"],
+                           "inflight", p.get("args"))
+            self._pending = []
+        open_launches: dict[int, tuple[float, dict]] = {}
+        for i, (phase, unit, info) in enumerate(marks):
+            s0 = win0 + i * slot
+            self._emit(f"{phase} u{unit}", s0, slot,
+                       _PHASE_TRACK.get(phase, "host"),
+                       {**info, "step": step} if info else {"step": step})
+            if phase == "launch":
+                open_launches[unit] = (s0 + slot, info)
+            elif phase == "retire" and unit in open_launches:
+                fly0, info0 = open_launches.pop(unit)
+                self._emit(f"in_flight u{unit}", fly0, s0 - fly0,
+                           "inflight", {**info0, "step": step})
+        # launches never retired in this window stay in flight across the
+        # step boundary — one span per async in-flight buffer
+        for unit, (fly0, info) in open_launches.items():
+            buffers = info.get("buffers") or (f"u{unit}",)
+            for b in buffers:
+                self._pending.append(
+                    {"name": f"in_flight {b}", "ts": fly0,
+                     "args": {"step": step, "unit": unit}})
+
+    # -- export ----------------------------------------------------------
+    def to_perfetto(self) -> dict:
+        meta = [{"name": "process_name", "ph": "M", "pid": 0,
+                 "args": {"name": "repro consensus"}}]
+        meta += [{"name": "thread_name", "ph": "M", "pid": 0, "tid": tid,
+                  "args": {"name": label}}
+                 for tid, label in sorted(_TRACK_NAMES.items())]
+        events = list(self._events)
+        for p in self._pending:      # close still-open flights at the end
+            end = max((e["ts"] + e["dur"] for e in events), default=p["ts"])
+            events.append({"name": p["name"], "cat": "exchange", "ph": "X",
+                           "pid": 0, "tid": TRACKS["inflight"],
+                           "ts": round(p["ts"], 3),
+                           "dur": round(max(end - p["ts"], 0.001), 3),
+                           "args": p.get("args") or {}})
+        return {"traceEvents": meta + events, "displayTimeUnit": "ms",
+                "otherData": {"schema": SCHEMA, "spans": "schedule-derived"}}
+
+    def save(self, path: str) -> None:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(self.to_perfetto(), f)
+
+
+def trace_phase_coverage(trace: dict) -> dict[str, int]:
+    """Span count per exchange phase in an exported Perfetto trace (the
+    CI smoke asserts >= 1 of each for the traced transport)."""
+    counts = {ph: 0 for ph in SPAN_PHASES}
+    for ev in trace.get("traceEvents", ()):
+        if ev.get("ph") != "X":
+            continue
+        name = ev.get("name", "")
+        for ph in SPAN_PHASES:
+            if name.startswith(ph):
+                counts[ph] += 1
+    return counts
+
+
+def trace_has_overlap(trace: dict) -> bool:
+    """Does any in-flight span overlap compute (model or codec) on the
+    timeline?  True for pipelined (transfer vs quantize/dequant) and
+    async (transfer vs next step's fwd/bwd) exports — the DESIGN §10
+    visibility claim."""
+    compute_tids = {TRACKS["compute"], TRACKS["codec"]}
+    fly, work = [], []
+    for ev in trace.get("traceEvents", ()):
+        if ev.get("ph") != "X":
+            continue
+        iv = (ev["ts"], ev["ts"] + ev["dur"])
+        if ev.get("tid") == TRACKS["inflight"]:
+            fly.append(iv)
+        elif ev.get("tid") in compute_tids:
+            work.append(iv)
+    eps = 1e-6
+    return any(f0 < w1 - eps and w0 < f1 - eps
+               for f0, f1 in fly for w0, w1 in work)

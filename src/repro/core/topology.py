@@ -862,6 +862,25 @@ class MembershipSchedule:
         m = self.mask_at(epoch)
         return [v for v in range(self.n_nodes) if m[v]]
 
+    def epoch_events(self) -> list:
+        """Membership diffs as JSON-able rows, one per epoch boundary
+        where the mask actually changes (telemetry ``membership_epoch``
+        events): who joined, who departed, how many remain active."""
+        events = []
+        for e in range(1, self.n_epochs):
+            prev, cur = self.masks[e - 1], self.masks[e]
+            if prev == cur:
+                continue
+            events.append({
+                "epoch": e,
+                "joined": [v for v in range(self.n_nodes)
+                           if cur[v] and not prev[v]],
+                "departed": [v for v in range(self.n_nodes)
+                             if prev[v] and not cur[v]],
+                "active": sum(cur),
+            })
+        return events
+
     # -- mixing over the surviving ring ---------------------------------
     def mixing_at(self, epoch: int, self_weight: float = 0.5,
                   rule: str = "metropolis") -> MixingMatrix:

@@ -186,6 +186,12 @@ class WireLayout:
     def buffer_struct(self) -> jax.ShapeDtypeStruct:
         return jax.ShapeDtypeStruct((self.n_rows, self.block), jnp.float32)
 
+    def describe(self) -> dict:
+        """JSON-able geometry snapshot (telemetry ``wire_plan`` events)."""
+        return {"n_leaves": self.n_leaves, "n_elements": self.n_elements,
+                "n_rows": self.n_rows, "n_data_rows": self.n_data_rows,
+                "block": self.block}
+
     # -- pack / unpack ---------------------------------------------------
     def check_tree(self, tree: Any) -> list:
         leaves, treedef = jax.tree_util.tree_flatten(tree)

@@ -374,6 +374,19 @@ class WirePlan:
         return self.payload_bytes + (PUSH_SUM_TRAILER_BYTES if push_sum
                                      else 0)
 
+    def describe(self) -> dict:
+        """JSON-able run geometry (telemetry ``wire_plan`` events): one
+        entry per codec run plus the flat payload totals."""
+        return {
+            "runs": [{"codec": r.codec, "row_start": r.row_start,
+                      "n_rows": r.n_rows, "byte_start": r.byte_start,
+                      "payload_bytes": r.n_rows * self.run_width(r)}
+                     for r in self.runs],
+            "payload_bytes": self.payload_bytes,
+            "is_uniform": self.is_uniform,
+            "hot_codec": self.hot_codec,
+        }
+
     def noise_cols(self, block: int | None = None) -> int:
         """Columns of the shared uniform-noise buffer: the max any codec in
         the plan consumes; each run's kernels read their leading columns

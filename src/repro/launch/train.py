@@ -220,6 +220,7 @@ def build_train_setup(
     straggle_rate: float | None = None,    # async deadline-miss rate
     straggle_seed: int = 0,                # straggler-mask seed (core.faults)
     membership: tuple | None = None,       # per-epoch active-node masks
+    telemetry: bool = False,               # in-trace telemetry counters
 ) -> TrainSetup:
     ctx = make_context(mesh, consensus_nodes)
     defs = T.build_defs(cfg, ctx, dtype=compute_dtype)
@@ -235,7 +236,7 @@ def build_train_setup(
         link_loss=link_loss, loss_seed=loss_seed, push_sum=push_sum,
         link_loss_model=link_loss_model, resync_retries=resync_retries,
         straggle_rate=straggle_rate, straggle_seed=straggle_seed,
-        membership=membership)
+        membership=membership, telemetry=telemetry)
     consensus = ConsensusRuntime(ccfg, ctx)
     opt = opt_by_name(optimizer)
     if schedule == "constant":
@@ -338,6 +339,7 @@ def build_train_setup(
                                  if ccfg.straggle_rate is not None else {}),
                               **({"active_nodes": P()}
                                  if ccfg.membership is not None else {}),
+                              **{k: P() for k in ccfg.telemetry_metric_keys()},
                               **({"consensus_err": P()} if track_consensus_error else {})})
 
     step_sm = shard_map_compat(step_body, mesh, in_specs=in_specs,
@@ -560,6 +562,17 @@ def main(argv=None):
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--checkpoint-every", type=int, default=0)
+    ap.add_argument("--telemetry", action="store_true",
+                    help="structured telemetry (core.telemetry, DESIGN.md "
+                         "§Observability): per-step counter records + host "
+                         "events to obs/telemetry-{run_id}.jsonl (schema "
+                         "telemetry/v1) and a Chrome/Perfetto span timeline "
+                         "to obs/trace-{run_id}.json; also turns on the "
+                         "in-trace telemetry counters of the exchange")
+    ap.add_argument("--telemetry-dir", default="obs",
+                    help="sink directory for --telemetry")
+    ap.add_argument("--run-id", default=None,
+                    help="telemetry run id (default: a wall-clock stamp)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -574,10 +587,31 @@ def main(argv=None):
     mesh = make_cpu_mesh(data=args.data, model=args.model)
 
     membership_masks = None
+    epoch_events = {}
     if args.node_failures:
         from repro.core.topology import MembershipSchedule
-        membership_masks = MembershipSchedule.from_spec(
-            args.node_failures, args.nodes).masks
+        sched = MembershipSchedule.from_spec(args.node_failures, args.nodes)
+        membership_masks = sched.masks
+        epoch_events = {ev["epoch"]: ev for ev in sched.epoch_events()}
+
+    tel = None
+    if args.telemetry:
+        from repro.core import telemetry as tele
+        run_id = args.run_id or time.strftime("%Y%m%d-%H%M%S")
+        git_sha = None
+        try:
+            import subprocess
+            git_sha = subprocess.run(
+                ["git", "rev-parse", "HEAD"], capture_output=True,
+                text=True, timeout=5).stdout.strip() or None
+        except Exception:
+            pass
+        # created BEFORE the setups so the span recorder's trace observer
+        # sees the exchange schedule of the first compiled step
+        tel = tele.Telemetry(run_id, out_dir=args.telemetry_dir,
+                             config=dict(vars(args)), git_sha=git_sha,
+                             spans=True)
+        print(f"[telemetry] -> {tel.path}")
 
     setups: dict[str, TrainSetup] = {}
 
@@ -607,6 +641,7 @@ def main(argv=None):
                 straggle_rate=args.straggle,
                 straggle_seed=args.straggle_seed,
                 membership=membership_masks,
+                telemetry=args.telemetry,
                 track_consensus_error=(args.algorithm != "allreduce"))
         return setups[codec_name]
 
@@ -658,6 +693,30 @@ def main(argv=None):
               f"(budget={args.byte_budget})")
 
     setup = setup_for(codec_name)
+
+    def emit_wire_plan_event(at_step: int) -> None:
+        """Host-side snapshot of the shipped wire geometry (telemetry/v1
+        ``wire_plan`` event): plan runs + layout slots + the unified byte
+        accounting the in-trace counters are derived from."""
+        if tel is None or args.algorithm != "adc_dgd":
+            return
+        layout = consensus_wire_layout(setup.defs, setup.ctx)
+        acct = setup.consensus.wire_accounting(layout.n_elements,
+                                               layout=layout)
+        data = dict(codec=codec_name, layout=layout.describe())
+        if acct is not None:
+            data.update(wire_bytes_per_step=acct.shipped_per_step,
+                        shipped_payload=acct.shipped_payload,
+                        trailer_bytes=acct.trailer_bytes)
+        if args.wire_packing in ("packed", "pipelined", "async"):
+            data["plan"] = setup.consensus.wire_plan_for(layout).describe()
+        if setup.consensus.loss is not None:
+            data["channel"] = setup.consensus.loss.describe()
+        if setup.consensus.straggler is not None:
+            data["straggler"] = setup.consensus.straggler.describe()
+        tel.event("wire_plan", step=at_step, **data)
+
+    emit_wire_plan_event(0)
     state = init_train_state(setup, args.seed)
     ds_kw = {}
     if cfg.frontend == "audio_frames":
@@ -670,13 +729,41 @@ def main(argv=None):
     step_times: list[float] = []
     overhead = {}
     overhead_setup = None
+    prev_epoch = 0
+    if tel is not None and membership_masks is not None:
+        tel.event("membership_epoch", step=0, epoch=0,
+                  active=int(sum(membership_masks[0])),
+                  mask=list(membership_masks[0]))
     for step in range(args.steps):
         batch = jax.device_put(ds.global_batch_arrays(step), setup.batch_sharding)
         ts = time.perf_counter()
         state, metrics = setup.train_step(state, batch)
         jax.block_until_ready(metrics)
+        dur = time.perf_counter() - ts
         if step >= 2:                 # skip compile + cache-warm steps
-            step_times.append(time.perf_counter() - ts)
+            step_times.append(dur)
+        if tel is not None:
+            mfloat = {k: float(v) for k, v in metrics.items()}
+            mfloat["step_s"] = dur
+            tel.record_step(step + 1, mfloat)
+            if step >= 1:   # step 0's window is dominated by compile
+                frac = overhead.get("consensus_overhead_frac", 0.25)
+                tel.spans.record_step_window(step + 1, ts, dur,
+                                             exchange_frac=frac)
+            if mfloat.get("resync_fired", 0.0) > 0.5:
+                tel.event("resync", step=step + 1,
+                          ok=mfloat.get("resync_ok", 0.0) > 0.5)
+            if membership_masks is not None:
+                e = min((step + 1) // max(args.schedule_period, 1),
+                        len(membership_masks) - 1)
+                if e != prev_epoch:
+                    ev = epoch_events.get(e, {})
+                    tel.event("membership_epoch", step=step + 2, epoch=e,
+                              active=int(sum(membership_masks[e])),
+                              mask=list(membership_masks[e]),
+                              joined=ev.get("joined", []),
+                              departed=ev.get("departed", []))
+                    prev_epoch = e
         if controller is not None:
             ep_res.append(float(metrics["residual_norm"]))
             ep_ovf.append(float(metrics["overflow_frac"]))
@@ -694,14 +781,27 @@ def main(argv=None):
                     n_rows=n_rows,
                     consensus_err=(float(np.mean(ep_ce)) if ep_ce else None))
                 new = spec_for(tier)
+                if tel is not None:
+                    tel.event(
+                        "codec_decision", step=step + 1,
+                        old=codec_name, new=new, tier=tier,
+                        residual_rms=float(np.mean(ep_res)),
+                        overflow_frac=float(np.mean(ep_ovf)),
+                        consensus_rms=(float(np.mean(ep_ce))
+                                       if ep_ce else None),
+                        candidates=controller.candidate_table(n_rows))
                 if new != codec_name:
                     print(f"[codec] step {step + 1}: {codec_name} -> {new} "
                           f"(residual_rms={np.mean(ep_res):.3g}, "
                           f"overflow={np.mean(ep_ovf):.3g}"
                           + (f", consensus_rms={np.mean(ep_ce):.3g}"
                              if ep_ce else "") + ")")
+                    if tel is not None and controller.plan is not None:
+                        tel.event("plan_retier", step=step + 1,
+                                  old=codec_name, new=new, tier=tier)
                     codec_name = new
                     setup = setup_for(new)
+                    emit_wire_plan_event(step + 2)
                 ep_res, ep_ovf, ep_ce = [], [], []
         if step % max(1, args.steps // 10) == 0 or step == args.steps - 1:
             m = jax.tree.map(float, metrics)
@@ -726,6 +826,15 @@ def main(argv=None):
             from repro.checkpoint import save_checkpoint
             save_checkpoint(args.checkpoint_dir, step + 1, jax.device_get(state))
     print(f"done: {args.steps} steps in {time.time()-t0:.1f}s")
+    if tel is not None:
+        tel.event("run_end", step=args.steps,
+                  wall_s=time.time() - t0,
+                  steps_per_s=(1.0 / float(np.median(step_times))
+                               if step_times else None),
+                  **{k: v for k, v in overhead.items()})
+        tel.close()
+        print(f"[telemetry] wrote {tel.path}" +
+              (f" and {tel.trace_path}" if tel.spans is not None else ""))
 
 
 if __name__ == "__main__":

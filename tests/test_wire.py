@@ -937,3 +937,83 @@ print("RESULT", json.dumps(out))
     assert r["push_fly_bytes"] == r["int8_fly_bytes"] + 4  # fp32 trailer
     assert r["push_ps_w_dev"] == 0.0, \
         f"async push-sum drifted: {r['push_ps_w_dev']}"
+
+
+def test_telemetry_off_is_free():
+    """Acceptance (telemetry satellite): with ``telemetry=False`` (the
+    default) the step jaxpr is BIT-IDENTICAL to a telemetry-less build —
+    no extra metric outputs, no extra ops, exactly 2 ring ppermutes —
+    on the packed AND async transports.  Installing a SpanRecorder
+    (trace-time marks only) must not change the jaxpr either, while
+    still capturing the full exchange schedule.  The telemetry-off
+    metric keyset is pinned so new always-on metrics cannot sneak in."""
+    body = """
+import sys
+sys.path.insert(0, os.path.join(%r, "benchmarks"))
+from consensus_step import count_eqns
+from repro.core import telemetry as tele
+
+tree = make_tree(jax.random.PRNGKey(4))
+out = {}
+
+def jaxpr_and_keys(cfg_kw):
+    rt = ConsensusRuntime(ConsensusConfig(**cfg_kw), ctx)
+    init_f, step_f = build(rt, tree)
+    st = init_f(tree)
+    keys_box = {}
+    pspec = jax.tree.map(lambda a: P("data"), tree)
+    cons_spec = {"x_tilde": P("data", None, None),
+                 "m_agg": P("data", None, None)}
+    if rt.cfg.wire_packing == "async":
+        for fk in wire.INFLIGHT_KEYS:
+            cons_spec[fk] = P("data", None)
+    def probe(xp, xh, s, k):
+        s = jax.tree.map(lambda a: a[0], s)
+        xn, s2, m = rt.exchange(xp, xh, s, k, jax.random.PRNGKey(7))
+        keys_box["keys"] = sorted(m.keys())
+        return xn, jax.tree.map(lambda a: a[None], s2)
+    probe_f = shard_map_compat(
+        probe, mesh, in_specs=(pspec, pspec, cons_spec, P()),
+        out_specs=(pspec, cons_spec), check=False)
+    jaxpr = jax.make_jaxpr(probe_f)(tree, tree, st,
+                                    jnp.asarray(2, jnp.int32))
+    return jaxpr, keys_box["keys"]
+
+for mode in ("packed", "async"):
+    kw = dict(algorithm="adc_dgd", wire_packing=mode)
+    j_default, keys_default = jaxpr_and_keys(kw)
+    j_off, _ = jaxpr_and_keys({**kw, "telemetry": False})
+    sr = tele.SpanRecorder().install()
+    j_obs, _ = jaxpr_and_keys(kw)
+    sr.uninstall()
+    out[f"{mode}_default_eq_off"] = str(j_default) == str(j_off)
+    out[f"{mode}_default_eq_observed"] = str(j_default) == str(j_obs)
+    out[f"{mode}_ppermutes"] = count_eqns(j_default, "ppermute")
+    out[f"{mode}_metric_keys"] = keys_default
+    out[f"{mode}_marks"] = sorted(set(p for p, _, _ in sr.schedule))
+    cfg = ConsensusConfig(**kw)
+    out[f"{mode}_extra_keys"] = list(cfg.telemetry_metric_keys())
+    on = ConsensusConfig(**kw, telemetry=True)
+    _, keys_on = jaxpr_and_keys({**kw, "telemetry": True})
+    out[f"{mode}_on_adds_exactly"] = (
+        sorted(keys_on) == sorted(keys_default
+                                  + list(on.telemetry_metric_keys())))
+print("RESULT", json.dumps(out))
+""" % REPO
+    r = run_sub(body)
+    pinned = ["collectives_per_step", "overflow_frac", "residual_norm",
+              "wire_bytes_per_step"]
+    for mode in ("packed", "async"):
+        assert r[f"{mode}_default_eq_off"], \
+            f"{mode}: default != explicit telemetry=False jaxpr"
+        assert r[f"{mode}_default_eq_observed"], \
+            f"{mode}: installing the span observer changed the jaxpr"
+        assert r[f"{mode}_ppermutes"] == 2, r
+        # frozen telemetry-off metric keyset: any always-on addition
+        # must consciously update this pin (it costs every user)
+        assert r[f"{mode}_metric_keys"] == pinned, r
+        assert r[f"{mode}_extra_keys"] == [], r
+        assert r[f"{mode}_on_adds_exactly"], r
+        # the observer saw the full exchange schedule without touching it
+        assert r[f"{mode}_marks"] == ["dequant_combine", "launch",
+                                      "quantize", "retire"], r
