@@ -68,7 +68,12 @@ artifact tracked from PR 2 onward) plus a copy under
     consensus error, rate 0.0 not bit-identical to the lossless path, the
     push-sum weight drifting off 1.0 on the homogeneous ring, or the
     delivered-bytes total not matching the ``faults.LossModel`` host
-    oracle exactly (dropped payloads must be excluded from accounting).
+    oracle exactly (dropped payloads must be excluded from accounting),
+  * the **hierarchy sweep** (two-level consensus, DESIGN.md §14): the
+    inter-pod byte total failing to shrink by ~pod_size vs the flat
+    compressed ring, the hierarchical gossip ending at worse consensus
+    error than flat, or the hierarchical step tracing more than the
+    2 ring ppermutes of the outer exchange.
 
 Run standalone (sets up its own host devices):
 
@@ -210,6 +215,21 @@ OVERLAP_MAX_ITERS = 512
 #: consensus overhead (t_step - t_compute) / t_step must stay below 15%
 OVERLAP_OVERHEAD_BUDGET = 0.15
 OVERLAP_PIPE_CHUNKS = 2
+#: hierarchy sweep (two-level consensus, DESIGN.md §14): flat compressed
+#: ring vs intra-pod fp32 all-reduce + compressed inter-pod ADC gossip,
+#: same packed wire and the same pod-identical inits.  The inter-pod
+#: byte total counts one logical payload per DISTINCT pod (pod members
+#: trace replicated sends of the same representative payload), so it
+#: must shrink by ~pod_size vs the flat ring where every node is its own
+#: pod.  CI gates: the measured ratio >= HIER_BYTES_RATIO_TOL x
+#: pod_size, the hierarchical gossip ends at consensus error no worse
+#: than flat (matched steps — bytes are bought with a psum, not
+#: fidelity), both runs contract, and the hierarchical step still traces
+#: EXACTLY 2 ring ppermutes (the outer exchange; the inner level is a
+#: psum, not extra ring hops).
+HIER_PODS = 2
+HIER_GOSSIP_STEPS = 6
+HIER_BYTES_RATIO_TOL = 0.9
 
 
 def _timing_gate(*paths) -> float:
@@ -411,12 +431,17 @@ def codec_section(mesh, ctx) -> tuple[dict, bool]:
         rt = ConsensusRuntime(
             ConsensusConfig(algorithm="adc_dgd", quant_mode="adaptive",
                             wire_codec=spec), ctx)
-        noise = _codec_noise(rt, layout)
+        # the runtime's buffer order, NOT the flat tree order: mixed
+        # plans reorder slots by codec at layout-build time (DESIGN.md
+        # §Wire plans), so anything written into x_tilde/m_agg must be
+        # packed with the placed layout the exchange actually uses
+        slayout = rt.state_layout(local)
+        noise = _codec_noise(rt, slayout)
         built = build_step(rt, mesh, xp)
         r = time_path(rt, mesh, xp, xh, noise, f"{arch}/codec[{name}]",
                       built=built)
         r["wire_bytes_per_step"] = rt.wire_bytes_per_step(
-            layout.n_elements, layout=layout)
+            slayout.n_elements, layout=slayout)
         # pure-gossip fidelity: same compiled step, xh == x, distinct inits.
         # init_state's m_0 = (1 - W_ii) x0 bakes in the shared-init
         # contract (DESIGN.md §Changed assumptions); these nodes start
@@ -425,7 +450,7 @@ def codec_section(mesh, ctx) -> tuple[dict, bool]:
         # epoch-boundary resync performs
         init_f, step_f = built
         st = init_f(x0)
-        xt0 = np.stack([np.asarray(layout.pack(
+        xt0 = np.stack([np.asarray(slayout.pack(
             jax.tree.map(lambda a, d=d: a[d], x0))) for d in range(N_DEVICES)])
         w_side = rt.cfg.side_weight
         m0 = w_side * (np.roll(xt0, 1, axis=0) + np.roll(xt0, -1, axis=0))
@@ -1083,6 +1108,121 @@ def overlap_section(mesh, ctx) -> tuple[dict, bool]:
     return out, ok
 
 
+def hierarchy_sweep_section(mesh, ctx) -> tuple[dict, bool]:
+    """Two-level hierarchical consensus vs the flat compressed ring
+    (smollm-135m, packed path; DESIGN.md §14).
+
+    Both modes run the same harness from the same POD-IDENTICAL inits
+    (every pod member holds the same copy — the shared-x0 contract that
+    makes the broadcast-back implicit; pods differ).  Per mode: steps/s,
+    traced ppermutes, the per-level byte split, and a
+    ``HIER_GOSSIP_STEPS`` pure-gossip consensus-error trajectory.  The
+    inter-pod bytes column counts one logical compressed payload per
+    DISTINCT pod per step; under hierarchy the intra-pod fp32 all-reduce
+    is accounted separately (``inner_bytes_per_step``).  Gates: see the
+    ``HIER_*`` constants above.
+    """
+    arch = "smollm-135m"
+    ok = True
+    m = N_DEVICES // HIER_PODS
+    key = jax.random.PRNGKey(hash(arch) % 2**31)
+    local = local_leaf_tree(arch, key)
+    layout = wire.WireLayout.for_tree(local)
+    xp = jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (N_DEVICES, *a.shape)), local)
+    xh = jax.tree.map(
+        lambda a: (a.astype(jnp.float32) + 1e-3).astype(a.dtype), xp)
+    # pod-identical distinct inits: pods differ, members within a pod are
+    # bitwise equal — the contract under which pod members stay replicas
+    # by induction and the inner broadcast-back is free
+    leaves, treedef = jax.tree_util.tree_flatten(local)
+    ks = jax.random.split(jax.random.fold_in(key, 3), len(leaves))
+    x0 = jax.tree_util.tree_unflatten(treedef, [
+        jnp.repeat(
+            (jax.random.normal(k2, (HIER_PODS, *a.shape), jnp.float32)
+             * 0.05).astype(a.dtype), m, axis=0)
+        for k2, a in zip(ks, leaves)])
+    xt0 = np.stack([np.asarray(layout.pack(
+        jax.tree.map(lambda a, d=d: a[d], x0))) for d in range(N_DEVICES)])
+    out = {"pods": HIER_PODS, "pod_size": m,
+           "gossip_steps": HIER_GOSSIP_STEPS, "modes": {}}
+    print(f"hierarchy sweep ({arch}, packed, {HIER_PODS} pods x {m} "
+          f"nodes, {HIER_GOSSIP_STEPS} gossip steps):", flush=True)
+    for name, extra, shift in (("flat", {}, 1),
+                               ("hier", {"hierarchy": HIER_PODS}, m)):
+        rt = ConsensusRuntime(
+            ConsensusConfig(algorithm="adc_dgd", quant_mode="adaptive",
+                            **extra), ctx)
+        if shift == 1:
+            noise = _codec_noise(rt, layout, seed=7)
+        else:
+            # the runtime's own PRNG is pod-granular under hierarchy;
+            # injected noise must match or pod members would diverge
+            pod_noise = np.random.default_rng(7).random(
+                (HIER_PODS, layout.n_rows, rt.noise_cols_for(layout)),
+                np.float32)
+            noise = jnp.asarray(np.repeat(pod_noise, m, axis=0))
+        built = build_step(rt, mesh, xp)
+        r = time_path(rt, mesh, xp, xh, noise,
+                      f"{arch}/hierarchy[{name}]", built=built)
+        acct = rt.wire_accounting(layout.n_elements, layout=layout)
+        pods = N_DEVICES // rt.pod_size
+        r["inter_pod_bytes_per_step"] = pods * acct.shipped_payload
+        r["inner_bytes_per_step"] = N_DEVICES * acct.inner_bytes
+        # pure gossip from the pod-identical inits; m_agg rebuilt from
+        # the actual (pod-)ring neighbors — the epoch-resync correction,
+        # with the permutation stepping in units of pod_size
+        init_f, step_f = built
+        st = init_f(x0)
+        w_side = rt.cfg.side_weight
+        m0 = w_side * (np.roll(xt0, shift, axis=0)
+                       + np.roll(xt0, -shift, axis=0))
+        st = {"x_tilde": st["x_tilde"], "m_agg": jnp.asarray(m0)}
+        x = x0
+        r["consensus_err_start"] = _consensus_err(x)
+        for k2 in range(1, HIER_GOSSIP_STEPS + 1):
+            x, st = step_f(x, x, st, noise, jnp.asarray(k2, jnp.int32))
+        r["consensus_err_end"] = _consensus_err(x)
+        print(f"    gossip err {r['consensus_err_start']:.3e} -> "
+              f"{r['consensus_err_end']:.3e}   inter-pod "
+              f"{r['inter_pod_bytes_per_step'] / 1e6:.2f} MB/step   "
+              f"intra-pod {r['inner_bytes_per_step'] / 1e6:.2f} MB/step",
+              flush=True)
+        out["modes"][name] = r
+    f, h = out["modes"]["flat"], out["modes"]["hier"]
+    ratio = (f["inter_pod_bytes_per_step"]
+             / max(h["inter_pod_bytes_per_step"], 1e-30))
+    out["inter_pod_ratio"] = ratio
+    out["expected_ratio"] = float(m)
+    print(f"  inter-pod bytes: flat {f['inter_pod_bytes_per_step'] / 1e6:.2f}"
+          f" MB/step -> hier {h['inter_pod_bytes_per_step'] / 1e6:.2f} "
+          f"MB/step ({ratio:.2f}x, pod_size {m})", flush=True)
+    if ratio < HIER_BYTES_RATIO_TOL * m:
+        print(f"FAIL[hier]: inter-pod bytes shrank only {ratio:.2f}x vs "
+              f"flat (want >= {HIER_BYTES_RATIO_TOL:.1f} x pod_size "
+              f"= {HIER_BYTES_RATIO_TOL * m:.2f}x)")
+        ok = False
+    if h["collectives_per_step"] != 2:
+        print(f"FAIL[hier]: hierarchical step traced "
+              f"{h['collectives_per_step']} ppermutes (want 2 — the inner "
+              "level must be a psum, not extra ring hops)")
+        ok = False
+    for name in out["modes"]:
+        r = out["modes"][name]
+        if not r["consensus_err_end"] < r["consensus_err_start"]:
+            print(f"FAIL[hier]: {name} gossip did not contract consensus "
+                  f"error ({r['consensus_err_start']:.3e} -> "
+                  f"{r['consensus_err_end']:.3e})")
+            ok = False
+    if h["consensus_err_end"] > f["consensus_err_end"]:
+        print(f"FAIL[hier]: hierarchical gossip ended WORSE than flat "
+              f"({h['consensus_err_end']:.3e} vs "
+              f"{f['consensus_err_end']:.3e}) — the byte saving is not at "
+              "matched consensus error")
+        ok = False
+    return out, ok
+
+
 def _git_sha() -> str | None:
     import subprocess
     try:
@@ -1100,7 +1240,8 @@ def _config_hash(payload: dict) -> str:
     import hashlib
     cfg = {k: v for k, v in payload.items()
            if k not in ("archs", "codecs", "choco_equal_bytes",
-                        "loss_sweep", "churn_sweep", "overlap")}
+                        "loss_sweep", "churn_sweep", "overlap",
+                        "hierarchy_sweep")}
     return hashlib.sha256(
         json.dumps(cfg, sort_keys=True, default=float).encode()).hexdigest()[:12]
 
@@ -1240,6 +1381,8 @@ def main() -> int:
     ok = ok and churn_ok
     overlap, overlap_ok = overlap_section(mesh, ctx)
     ok = ok and overlap_ok
+    hier_sweep, hier_ok = hierarchy_sweep_section(mesh, ctx)
+    ok = ok and hier_ok
     payload = {"n_devices": N_DEVICES, "nodes": NODES,
                "prod_mesh": f"{PROD_FSDP}x{PROD_TP}",
                "steps_timed": STEPS_TIMED, "chunk_sweep": list(CHUNK_SWEEP),
@@ -1248,7 +1391,8 @@ def main() -> int:
                "mixed_fidelity_tol": MIXED_FIDELITY_TOL,
                "archs": out, "codecs": codecs,
                "choco_equal_bytes": choco_eb, "loss_sweep": loss_sweep,
-               "churn_sweep": churn_sweep, "overlap": overlap}
+               "churn_sweep": churn_sweep, "overlap": overlap,
+               "hierarchy_sweep": hier_sweep}
     series = append_run(os.path.join(REPO, "BENCH_consensus_step.json"),
                         payload, ok)
     print(f"bench series: {len(series['runs'])} run(s) recorded "

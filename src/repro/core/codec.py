@@ -81,6 +81,16 @@ class WireCodec:
         """Transmitted codes per row (the clip-fraction denominator)."""
         return block
 
+    def coverage(self, block: int = kops.BLOCK) -> float:
+        """Fraction of each block row the codec actually transmits — 1.0
+        for dense codecs; ``k / block`` for the sparse top-k family.  The
+        AdaptiveBitController scales ``code_max`` by this when ranking
+        candidates: an unbiased sparsifier inflates per-element variance by
+        ~``1 / coverage``, so a rung's usable fidelity is its grid ceiling
+        TIMES how much of the row it ships."""
+        del block
+        return 1.0
+
     # -- wire transformation --------------------------------------------
     def encode_payload(self, y, noise, fixed_step=None,
                        use_pallas: bool = False, row_offset: int = 0,
@@ -244,6 +254,9 @@ class TopKCodec(WireCodec):
     def codes_per_row(self, block: int = kops.BLOCK) -> int:
         return self.k
 
+    def coverage(self, block: int = kops.BLOCK) -> float:
+        return self.k / block
+
     def encode_payload(self, y, noise, fixed_step=None, use_pallas=False,
                        row_offset=0, n_rows=None):
         return kops.topk_encode_payload(
@@ -319,8 +332,20 @@ class AdaptiveBitController:
       candidates      ladder entries whose 2 * n_rows * payload_width fits
                       ``byte_budget`` (all, when no budget; the cheapest
                       entry when nothing fits)
-      target          cheapest candidate with code_max >= n(k); the
-                      highest-fidelity candidate when none reaches n(k)
+      target          cheapest candidate whose *capacity* — code_max times
+                      row coverage (:meth:`WireCodec.coverage`) — reaches
+                      n(k); the highest-capacity candidate when none does
+
+    **Variance-adaptive top-k**: a ladder over the sparse family, e.g.
+    ``("topk:k=16", "topk:k=32", "topk:k=64", "topk:k=128", "topk:k=256")``
+    (priced exactly: ``block // 8 + k + 2`` bytes/row), shares one grid
+    ceiling (code_max = 127) across every rung, so raw code_max cannot
+    rank them.  Capacity = ``code_max * k / block`` restores the ordering:
+    rising residual RMS (or consensus drift) walks the controller up in k,
+    a shrinking residual walks it down after ``patience`` epochs — the
+    same state machine, now selecting sample count instead of bit width.
+    Dense ladders are decision-identical to the historical controller
+    (coverage = 1).
       up-switches     (more bits) immediate — clipping destroys the
                       unbiased-compression contract; additionally forced
                       one ladder rung up when overflow_frac > overflow_hi
@@ -402,6 +427,8 @@ class AdaptiveBitController:
         return [{"name": name,
                  "wire_bytes": self.wire_bytes(name, n_rows, block),
                  "code_max": by_name(name).code_max,
+                 "coverage": by_name(name).coverage(block),
+                 "capacity": self._capacity(name, block),
                  "payload_width": by_name(name).payload_width(block),
                  "fits_budget": name in cands,
                  "current": name == self.current}
@@ -409,6 +436,18 @@ class AdaptiveBitController:
 
     def _fidelity(self, name: str) -> int:
         return self.ladder.index(name)
+
+    @staticmethod
+    def _capacity(name: str, block: int = kops.BLOCK) -> float:
+        """Variance-scaled fidelity ceiling of one rung: the grid's
+        ``code_max`` times the fraction of the row shipped
+        (:meth:`WireCodec.coverage`).  For dense codecs this IS
+        ``code_max`` (decision-identical to the historical controller);
+        for a ``topk:k=<int>`` ladder it makes the rungs comparable —
+        ``topk:k=64`` has capacity ``127 * 64/512``, so a rising residual
+        pushes the controller toward larger k (variance-adaptive top-k)."""
+        c = by_name(name)
+        return float(c.code_max) * c.coverage(block)
 
     def target(self, next_step: int, residual_rms: float | None,
                overflow_frac: float, n_rows: int,
@@ -427,11 +466,11 @@ class AdaptiveBitController:
             need = float(residual_rms) * self.headroom / delta_k
             pick = None
             for name in cands:
-                if by_name(name).code_max >= need:
+                if self._capacity(name, block) >= need:
                     pick = name
                     break
             if pick is None:
-                pick = max(cands, key=lambda n: by_name(n).code_max)
+                pick = max(cands, key=lambda n: self._capacity(n, block))
         if (self.current is not None and overflow_frac > self.overflow_hi
                 and self._fidelity(pick) <= self._fidelity(self.current)):
             # observed clipping overrides the prediction: force a rung up

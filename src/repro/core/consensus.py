@@ -50,9 +50,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from .compression import Compressor, IdentityCompressor
+from .hierarchy import HierarchySpec
 from .problems import ConsensusProblem
 from .telemetry import WireAccounting
-from .topology import MixingMatrix, TopologySchedule
+from .topology import MixingMatrix, TopologySchedule, fully_connected, ring
 
 __all__ = [
     "StepSize",
@@ -65,6 +66,8 @@ __all__ = [
     "CentralizedGD",
     "run",
     "run_elastic",
+    "pod_problem",
+    "run_hierarchical",
     "by_name",
     "on_wire_plan",
 ]
@@ -843,6 +846,113 @@ def run_elastic(
     if ps is not None:
         result["ps_w_final"] = np.asarray(ps)
     return result
+
+
+def pod_problem(problem: ConsensusProblem, pods: int) -> ConsensusProblem:
+    """Project an ``n``-node consensus problem onto its ``pods``-node
+    **outer** problem under two-level hierarchy (core.hierarchy).
+
+    Pod ``g`` aggregates its ``m = n // pods`` consecutive members into one
+    logical node with objective ``f_g = (1/m) sum_{i in pod g} f_i`` — the
+    inner psum-average of the optimizer delta IS a gradient step on this
+    mean objective when all members hold identical parameters (the shared-x0
+    contract).  The pod problem's grad rows are the pod-mean of the member
+    gradients evaluated at the pod iterate; ``global_obj``/``global_grad``
+    are scaled by ``1/m`` for self-consistency (so the reported
+    ``grad_norm = ||global_grad / m|| / pods = ||global_grad|| / n``
+    matches the flat run's metric exactly).  The minimizer is unchanged.
+    """
+    spec = HierarchySpec.from_spec(pods)
+    m = spec.pod_size(problem.n_nodes)
+
+    def grad_fn(x_pods, key=None):
+        full = jnp.repeat(x_pods, m, axis=0)
+        g = (problem.grad_fn(full) if key is None
+             else problem.grad_fn(full, key=key))
+        return g.reshape(spec.pods, m, -1).mean(axis=1)
+
+    return dataclasses.replace(
+        problem,
+        n_nodes=spec.pods,
+        grad_fn=grad_fn,
+        global_obj=lambda x: problem.global_obj(x) / m,
+        global_grad=lambda x: problem.global_grad(x) / m,
+        name=f"{problem.name}/pods={spec.pods}",
+    )
+
+
+def run_hierarchical(
+    problem: ConsensusProblem,
+    pods: int,
+    n_steps: int,
+    *,
+    compressor: Compressor | None = None,
+    stepsize: StepSize,
+    gamma: float = 1.0,
+    self_weight: float = 0.5,
+    key: jax.Array | int = 0,
+    x0: jax.Array | None = None,
+    log_every: int = 1,
+) -> dict[str, np.ndarray]:
+    """Two-level hierarchical ADC-DGD reference (core.hierarchy): the inner
+    level averages each pod of ``m = n // pods`` members exactly (fp32
+    psum in the runtime; algebraically :func:`pod_problem` here), the outer
+    level runs compressed ADC-DGD over the ``pods``-node ring.  The
+    effective mixing is ``W_outer (x) (1/m) 11^T``
+    (:func:`repro.core.topology.hierarchical_mixing`).
+
+    Degenerate identities (pinned by tests):
+      * ``pods == n`` — bit-identical to the flat compressed ring
+        ``run(ADCDGD(ring(n, self_weight), compressor, stepsize, gamma))``;
+      * ``pods == 1`` — exact gradient descent on the mean objective
+        ``x_{k+1} = x_k - alpha_k (1/n) sum_i grad f_i(x_k)`` (nothing on
+        the wire; the compressor is bypassed), matching the runtime's
+        delegation to ``algorithm="allreduce"``.
+
+    ``x0`` may be shaped ``(pods, P)`` (outer iterates), ``(P,)``
+    (broadcast), or ``(n, P)`` with pod-identical rows (the shared-x0
+    contract; the pod representative rows ``x0[::m]`` are taken bitwise).
+
+    Returns the :func:`run` dict over the OUTER problem, with ``x_final``
+    expanded back to ``(n, P)``, plus ``bytes_outer`` (the compressed
+    inter-pod traffic, == :func:`run`'s ``bytes``), ``bytes_inner`` (the
+    uncompressed fp32 intra-pod ring all-reduce model, zero for singleton
+    pods), ``bytes`` = inner + outer totals, and ``pods`` / ``pod_size``.
+    """
+    spec = HierarchySpec.from_spec(pods)
+    n = problem.n_nodes
+    m = spec.pod_size(n)
+    if compressor is None:
+        compressor = IdentityCompressor()
+    # pods == n is the flat ring: keep the problem object itself so the
+    # identity is structural (same trace, same bits), not just algebraic.
+    pp = problem if m == 1 else pod_problem(problem, spec.pods)
+    if x0 is not None:
+        x0 = jnp.asarray(x0)
+        if x0.ndim == 1:
+            x0 = jnp.broadcast_to(x0[None], (spec.pods, x0.shape[0]))
+        elif x0.shape[0] == n and m > 1:
+            x0 = x0[::m]  # pod representatives, bitwise (shared-x0 contract)
+    if spec.pods == 1:
+        # single outer node: ADC-DGD with W = [[1]] and the identity
+        # compressor collapses to exact GD on the mean objective
+        outer = ADCDGD(mixing=fully_connected(1),
+                       compressor=IdentityCompressor(),
+                       stepsize=stepsize, gamma=gamma)
+    else:
+        outer = ADCDGD(mixing=ring(spec.pods, self_weight),
+                       compressor=compressor, stepsize=stepsize, gamma=gamma)
+    out = run(outer, pp, n_steps, key=key, x0=x0, log_every=log_every)
+    out["x_final"] = np.repeat(out["x_final"], m, axis=0)
+    sl = slice(log_every - 1, None, log_every)
+    inner_per_step = spec.inner_bytes_per_step(problem.dim, n) * n
+    out["bytes_outer"] = out["bytes"]
+    out["bytes_inner"] = (inner_per_step
+                          * (np.arange(n_steps, dtype=np.float64) + 1))[sl]
+    out["bytes"] = out["bytes_outer"] + out["bytes_inner"]
+    out["pods"] = spec.pods
+    out["pod_size"] = m
+    return out
 
 
 def run_many(

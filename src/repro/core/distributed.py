@@ -83,13 +83,14 @@ import numpy as np
 
 from repro.core import codec as wire_codec
 from repro.core import faults, telemetry, wire, wireplan
+from repro.core.hierarchy import HierarchySpec
 from repro.kernels import ops as kops
 from repro.models.sharding import ParallelContext
 
-__all__ = ["ConsensusConfig", "ConsensusRuntime"]
+__all__ = ["ConsensusConfig", "ConsensusRuntime", "HierarchySpec"]
 
 
-def _device_key(key, ctx: ParallelContext):
+def _device_key(key, ctx: ParallelContext, group: int = 1):
     """Fold the device's data/pod coordinates into the PRNG key so
     quantization noise is independent across consensus nodes and FSDP shards.
 
@@ -99,7 +100,22 @@ def _device_key(key, ctx: ParallelContext):
     the replicas would drift apart.  Sharing the key across tp ranks is
     harmless for tp-sharded leaves (noise is still i.i.d. across *elements*;
     Definition 1 unbiasedness is per-element).
+
+    ``group > 1`` (hierarchical consensus, DESIGN.md §14) folds the POD
+    index instead of the node index: all ``group`` members of a pod hold
+    identical post-inner-average parameters and must draw bit-identical
+    quantization noise, or their x_tilde shadows would diverge and break
+    the pod-replica invariant the outer exchange rests on.  FSDP ranks
+    within a node still get independent streams.
     """
+    if group > 1:
+        flat = jnp.zeros((), jnp.int32)
+        if ctx.data_size > 1:
+            flat = jax.lax.axis_index(ctx.data_axis)
+        if ctx.pod_axis is not None and ctx.pods > 1:
+            flat = flat + ctx.data_size * jax.lax.axis_index(ctx.pod_axis)
+        pod = flat // (ctx.fsdp * group)
+        return jax.random.fold_in(key, pod * ctx.fsdp + flat % ctx.fsdp)
     if ctx.data_size > 1:
         key = jax.random.fold_in(key, jax.lax.axis_index(ctx.data_axis))
     if ctx.pod_axis is not None and ctx.pods > 1:
@@ -235,6 +251,18 @@ class ConsensusConfig:
     #: build: no extra outputs, no extra ops (tests/test_wire.py pins
     #: the jaxpr).
     telemetry: bool = False
+    #: two-level hierarchical consensus (DESIGN.md §14, core.hierarchy):
+    #: a :class:`~repro.core.hierarchy.HierarchySpec`, an int pod count,
+    #: or the ``"pods=P"`` CLI grammar (normalized in __post_init__).
+    #: Every pod of ``m = n // pods`` consecutive nodes psum-averages its
+    #: optimizer delta (uncompressed fp32, the fast interconnect), then
+    #: one representative per pod runs the compressed ADC exchange on the
+    #: POD ring — the effective mixing is ``W_outer (x) (1/m) 11^T``.
+    #: ``pods == n`` is bit-identical to the flat ring; ``pods == 1`` is
+    #: bit-identical to ``algorithm="allreduce"``.  ``membership`` masks
+    #: (and the fault models' receiver ids) then index PODS, not nodes.
+    #: None = flat single-level consensus.
+    hierarchy: "HierarchySpec | int | str | None" = None
 
     @property
     def schedule_varying(self) -> bool:
@@ -252,6 +280,10 @@ class ConsensusConfig:
         if not self.telemetry or self.algorithm != "adc_dgd":
             return ()
         keys = ["wire_bytes_shipped", "saturated_count"]
+        if self.hierarchy is not None:
+            # per-level traffic split (DESIGN.md §14): intra-pod fp32
+            # all-reduce bytes vs compressed inter-pod ring bytes
+            keys += ["wire_bytes_inner", "wire_bytes_outer"]
         if self.schedule_varying:
             keys += ["resync_fired", "resync_ok"]
         if self.wire_packing == "async" and self.staleness == 1:
@@ -426,6 +458,25 @@ class ConsensusConfig:
                     "push-sum mass handoff under churn is reference-side "
                     "(topology.MembershipSchedule.handoff_at + "
                     "consensus.run_elastic)")
+        if self.hierarchy is not None:
+            # normalize int / "pods=P" CLI specs into a HierarchySpec
+            # (frozen dataclass, hence object.__setattr__)
+            object.__setattr__(
+                self, "hierarchy", HierarchySpec.from_spec(self.hierarchy))
+            if self.algorithm != "adc_dgd":
+                raise ValueError(
+                    "hierarchy composes the inner all-reduce with the "
+                    "compressed adc_dgd outer exchange; algorithm="
+                    f"{self.algorithm!r} does not support it")
+            if directed or self.push_sum_enabled:
+                raise ValueError(
+                    "hierarchical consensus supports the symmetric outer "
+                    "ring only; directed/push-sum pod rings are a "
+                    "follow-up (ROADMAP)")
+            if self.wire_packing == "per_leaf":
+                raise ValueError(
+                    "hierarchy requires the packed/pipelined/async "
+                    "transports; the per-leaf reference path predates it")
         if ((directed or self.push_sum or self.link_loss is not None
              or loss_spec["kind"] != "bernoulli"
              or self.straggle_rate is not None
@@ -437,18 +488,26 @@ class ConsensusConfig:
                 f"wire; algorithm={self.algorithm!r} does not support them")
 
 
-def _flat_ring_perm(ctx: ParallelContext, shift: int):
-    """Ring permutation over flattened (pod, data) in node steps."""
+def _flat_ring_perm(ctx: ParallelContext, shift: int, group: int = 1):
+    """Ring permutation over flattened (pod, data) in ring-element steps.
+
+    ``group`` is the node count of one ring element (1 = the flat node
+    ring; the hierarchical pod size otherwise): the permutation steps in
+    units of ``group * fsdp`` devices, so every pod member exchanges with
+    the SAME-offset member of the neighbor pod and the pod-replica
+    invariant survives the transfer."""
     total = ctx.pods * ctx.data_size
-    step = shift * ctx.fsdp
+    step = shift * ctx.fsdp * group
     return [(i, (i + step) % total) for i in range(total)]
 
 
-def _flat_ring_perm_masked(ctx: ParallelContext, shift: int, mask):
-    """Ring permutation compacted over the ACTIVE nodes of ``mask``.
+def _flat_ring_perm_masked(ctx: ParallelContext, shift: int, mask,
+                           group: int = 1):
+    """Ring permutation compacted over the ACTIVE elements of ``mask``
+    (nodes on the flat ring, pods under hierarchy).
 
     Survivors form a stride-``|shift|`` ring in active-position order;
-    inactive nodes' devices appear as neither source nor destination —
+    inactive elements' devices appear as neither source nor destination —
     ``ppermute`` delivers ZEROS to absent destinations, which is exactly
     the dropped-packet decode path (zero payload -> zero differential),
     so routing around a node and losing its packets share one mechanism.
@@ -458,7 +517,7 @@ def _flat_ring_perm_masked(ctx: ParallelContext, shift: int, mask):
     permutation — identical pairs, bit-identical trace.
     """
     if mask is None or all(mask):
-        return _flat_ring_perm(ctx, shift)
+        return _flat_ring_perm(ctx, shift, group)
     active = [v for v, a in enumerate(mask) if a]
     m = len(active)
     sign = 1 if shift >= 0 else -1
@@ -467,14 +526,15 @@ def _flat_ring_perm_masked(ctx: ParallelContext, shift: int, mask):
         s_eff = 1
     pos = {node: p for p, node in enumerate(active)}
     total = ctx.pods * ctx.data_size
+    unit = ctx.fsdp * group
     pairs = []
     for i in range(total):
-        node = i // ctx.fsdp
+        node = i // unit
         p = pos.get(node)
         if p is None:
             continue
         tgt = active[(p + sign * s_eff) % m]
-        pairs.append((i, tgt * ctx.fsdp + i % ctx.fsdp))
+        pairs.append((i, tgt * unit + i % unit))
     return pairs
 
 
@@ -482,12 +542,13 @@ def _ring_axes(ctx: ParallelContext):
     return (("pod", "data") if ctx.pod_axis is not None else ("data",))
 
 
-def _ppermute_ring(x, ctx: ParallelContext, shift: int, mask=None):
-    if ctx.total_consensus_nodes <= 1:
+def _ppermute_ring(x, ctx: ParallelContext, shift: int, mask=None,
+                   group: int = 1):
+    if ctx.total_consensus_nodes // group <= 1:
         return x
     axes = _ring_axes(ctx)
     return jax.lax.ppermute(x, axes if len(axes) > 1 else axes[0],
-                            _flat_ring_perm_masked(ctx, shift, mask))
+                            _flat_ring_perm_masked(ctx, shift, mask, group))
 
 
 def _pipeline_schedule(n_units: int, launch, retire, inspect=None) -> list:
@@ -526,35 +587,51 @@ class ConsensusRuntime:
                       if self.plan_spec.is_uniform else None)
         self._plan_cache: dict = {}
         n = ctx.total_consensus_nodes
-        #: the loss model bound to this mesh's node count (GilbertElliott
-        #: realizes per-edge Markov chains) and the straggler-deadline
-        #: model of the async transport; None keeps either out of the trace
-        self.loss = config.loss_model_for(n)
+        #: hierarchical grouping (DESIGN.md §14): ring elements are PODS
+        #: of ``pod_size`` consecutive nodes; the flat ring is pod_size=1.
+        #: Every per-element concept below — loss receiver ids, membership
+        #: masks, stride connectivity — indexes the ``ring_len`` ring.
+        hier = config.hierarchy
+        self.pod_size = 1 if hier is None else hier.pod_size(n)
+        self.ring_len = n // self.pod_size
+        if hier is not None and ctx.pod_axis is not None and ctx.pods > 1:
+            raise ValueError(
+                "hierarchy partitions the flattened node ring; combining "
+                "it with a physical multi-pod mesh axis is unsupported — "
+                "build the mesh over the data axis only")
+        #: the loss model bound to this mesh's ring-element count
+        #: (GilbertElliott realizes per-edge Markov chains) and the
+        #: straggler-deadline model of the async transport; None keeps
+        #: either out of the trace
+        self.loss = config.loss_model_for(self.ring_len)
         self.straggler = config.straggler_model
         if config.membership is not None:
             for e, m in enumerate(config.membership):
-                if len(m) != n:
+                if len(m) != self.ring_len:
                     raise ValueError(
-                        f"membership mask {e} covers {len(m)} nodes but the "
-                        f"mesh has {n} consensus nodes")
-        if n > 1 and config.algorithm in ("adc_dgd", "dgd", "compressed_dgd"):
+                        f"membership mask {e} covers {len(m)} ring elements "
+                        f"but the mesh has {self.ring_len} "
+                        f"({'pods' if self.pod_size > 1 else 'nodes'})")
+        if (self.ring_len > 1
+                and config.algorithm in ("adc_dgd", "dgd", "compressed_dgd")):
+            rl = self.ring_len
             for s in config.ring_strides:
-                if s % n == 0:
+                if s % rl == 0:
                     raise ValueError(
-                        f"ring stride {s} is a self-loop on {n} consensus "
-                        "nodes — the exchange would silently carry no "
+                        f"ring stride {s} is a self-loop on {rl} ring "
+                        "elements — the exchange would silently carry no "
                         "communication; drop it from ring_strides")
             # joint connectivity: the union graph over one schedule cycle is
             # the circulant with connection set {±s}; it is connected iff
-            # gcd(s_1, ..., s_k, n) == 1.
-            g = n
+            # gcd(s_1, ..., s_k, ring_len) == 1.
+            g = rl
             for s in config.ring_strides:
                 g = math.gcd(g, s)
             if g != 1:
                 raise ValueError(
-                    f"ring_strides {config.ring_strides} on {n} consensus "
-                    f"nodes share the common factor {g}: the union of all "
-                    "schedule epochs splits the network into disjoint "
+                    f"ring_strides {config.ring_strides} on {rl} ring "
+                    f"elements share the common factor {g}: the union of "
+                    "all schedule epochs splits the network into disjoint "
                     "components and consensus can never be reached")
 
     # -- state ---------------------------------------------------------
@@ -574,7 +651,7 @@ class ConsensusRuntime:
         # neighbor estimate x_tilde_j,0 = x0 and the incremental aggregate
         # m_0 = sum_{j != i} W_ij x_tilde_j,0 = (1 - W_ii) * x0.
         side_total = 1.0 - self.cfg.self_weight
-        layout = wire.WireLayout.for_tree(params)
+        layout = self.state_layout(params)
         x_tilde = layout.pack(params)
         st = {"x_tilde": x_tilde, "m_agg": side_total * x_tilde}
         if self.cfg.push_sum_enabled:
@@ -602,8 +679,23 @@ class ConsensusRuntime:
         return st
 
     def state_layout(self, params: Any) -> wire.WireLayout:
-        """The static packing plan for a (local) parameter tree."""
-        return wire.WireLayout.for_tree(params)
+        """The static packing plan for a (local) parameter tree.
+
+        Mixed plans get a **grouped placement**: same-codec leaves are
+        packed adjacently (stable, first-occurrence codec order —
+        wireplan.grouped_placement), collapsing the plan to one codec run
+        per codec so the tile-aligned run interiors stay on the Pallas
+        kernel path instead of shattering into ragged row-granular
+        fragments.  Uniform plans keep leaf order (placement is moot: one
+        run either way, bit-identical to the historical buffer)."""
+        layout = wire.WireLayout.for_tree(params)
+        if not self.plan_spec.is_uniform:
+            codecs = tuple(self.plan_spec.codec_for_path(s.path)
+                           for s in layout.slots)
+            placement = wireplan.grouped_placement(layout, codecs)
+            if placement is not None:
+                layout = layout.with_placement(placement)
+        return layout
 
     def wire_plan_for(self, layout: wire.WireLayout) -> wireplan.WirePlan:
         """The (cached) WirePlan binding this runtime's plan spec to a
@@ -643,6 +735,14 @@ class ConsensusRuntime:
         cfg = self.cfg
         if cfg.algorithm in ("adc_dgd", "compressed_dgd"):
             push = cfg.algorithm == "adc_dgd" and cfg.push_sum_enabled
+            hier = cfg.hierarchy if cfg.algorithm == "adc_dgd" else None
+            inner = (0.0 if hier is None else hier.inner_bytes_per_step(
+                n_params_local, self.ctx.total_consensus_nodes))
+            if hier is not None and self.ring_len <= 1:
+                # one pod spans every node: nothing rides the compressed
+                # wire; the inner all-reduce is the whole exchange
+                return telemetry.WireAccounting(
+                    payload_bytes=0, inner_bytes=inner)
             if layout is not None and cfg.wire_packing == "per_leaf":
                 rows = sum(kops.padded_block_rows(s.size)
                            for s in layout.slots)
@@ -669,7 +769,8 @@ class ConsensusRuntime:
                 payload_bytes=int(payload),
                 trailer_bytes=(wireplan.PUSH_SUM_TRAILER_BYTES
                                if push else 0),
-                resync_bytes_amortized=resync)
+                resync_bytes_amortized=resync,
+                inner_bytes=inner)
         if cfg.algorithm == "dgd":
             return telemetry.WireAccounting.uncompressed(
                 n_params_local, jnp.dtype(cfg.wire_dtype).itemsize)
@@ -732,12 +833,19 @@ class ConsensusRuntime:
         else:
             chunks = 1.0
         if cfg.algorithm == "adc_dgd":
+            if cfg.hierarchy is not None and self.ring_len <= 1:
+                # one pod spans every node: the rotation all-reduce IS
+                # the whole exchange (cf. the allreduce branch below)
+                return float(n - 1) * n_leaves
+            # the intra-pod delta psum of the hierarchical inner level
+            inner = 1.0 if self.pod_size > 1 else 0.0
             # push-sum weight: free on the packed wire (payload trailer)
             # except 2 scalar ppermutes inside the amortized resync cond;
             # 2 scalar ppermutes every step on the per-leaf reference
             ps = 2.0 if cfg.push_sum_enabled else 0.0
             if cfg.wire_packing in ("packed", "pipelined", "async"):
-                return 2.0 * chunks + (2.0 * chunks + ps) * resync_amort
+                return (inner + 2.0 * chunks
+                        + (2.0 * chunks + ps) * resync_amort)
             return 4.0 * n_leaves + ps + 2.0 * n_leaves * resync_amort
         if cfg.algorithm == "compressed_dgd":
             return (2.0 * chunks if cfg.wire_packing in ("packed", "pipelined")
@@ -764,7 +872,7 @@ class ConsensusRuntime:
         """
         alg = self.cfg.algorithm
         ctx = self.ctx
-        layout = wire.WireLayout.for_tree(x_half)
+        layout = self.state_layout(x_half)
 
         def base_metrics(x_out):
             # every key train.py's out_specs declares for this config must
@@ -797,6 +905,22 @@ class ConsensusRuntime:
             # across nodes & pods) — classic synchronous data parallelism.
             x_next = _allreduce_mean_delta(x_prev, x_half, ctx)
             return x_next, state, base_metrics(x_next)
+        if alg == "adc_dgd" and self.cfg.hierarchy is not None:
+            if self.ring_len <= 1:
+                # one pod spans every node: the inner level IS the whole
+                # exchange — delegate to the same rotation all-reduce as
+                # algorithm="allreduce", making the pods==1 degeneracy
+                # bit-identical to it by construction (nothing rides the
+                # compressed wire, so the shadows pass through untouched)
+                x_next = _allreduce_mean_delta(x_prev, x_half, ctx)
+                return x_next, state, base_metrics(x_next)
+            if self.pod_size > 1:
+                # inner level first: pod members average their optimizer
+                # delta and enter the outer compressed exchange as bitwise
+                # replicas of their pod representative (same parameters,
+                # same noise key, same fault draws) — the broadcast-back
+                # of the outer combine is therefore implicit and free
+                x_half = self._pod_mean_delta(x_prev, x_half)
         packed = self.cfg.wire_packing in ("packed", "pipelined")
         if alg == "dgd":
             impl = lambda s: self._dgd_exchange(  # noqa: E731
@@ -898,18 +1022,53 @@ class ConsensusRuntime:
             self.cfg.resync_retries)
         return jnp.logical_and(ok_up, ok_dn)
 
+    def _ring(self, x, shift, mask=None):
+        """This runtime's ring transfer: the flat node ring, or — under
+        hierarchy — the POD ring (permutation steps in units of
+        ``pod_size`` nodes, so every pod member exchanges with its
+        same-offset counterpart in the neighbor pod).  Still exactly one
+        ppermute per call; bit-identical to the flat helper at
+        pod_size == 1."""
+        return _ppermute_ring(x, self.ctx, shift, mask=mask,
+                              group=self.pod_size)
+
+    def _pod_mean_delta(self, x_prev, x_half):
+        """Inner hierarchy level (DESIGN.md §14): psum-average the
+        optimizer delta ``x_half - x_prev`` across each pod's members so
+        every member enters the outer compressed exchange holding the
+        pod-mean parameters (the ``(1/m) 11^T`` Kronecker factor of the
+        effective mixing).  Groups hold SAME-fsdp-rank devices across one
+        pod — different fsdp ranks hold different parameter shards.  One
+        psum per step; uncompressed fp32 (the fast intra-pod
+        interconnect)."""
+        ctx = self.ctx
+        m = self.pod_size
+        groups = self.cfg.hierarchy.pod_psum_groups(
+            ctx.total_consensus_nodes, ctx.fsdp)
+        axes = _ring_axes(ctx)
+        axis = axes if len(axes) > 1 else axes[0]
+
+        def avg(xp, xh):
+            delta = (xh - xp).astype(jnp.float32)
+            s = jax.lax.psum(delta, axis, axis_index_groups=groups)
+            return (xp.astype(jnp.float32) + s / m).astype(xh.dtype)
+
+        return jax.tree.map(avg, x_prev, x_half)
+
     def _node_index(self):
-        """Traced consensus-node index of this device (shared by all its
-        FSDP shards, so one drop decision covers the whole sharded
-        payload) — the LossModel's receiver id.  Matches the flattened
-        (pod, data) // fsdp node numbering of ``_flat_ring_perm``."""
+        """Traced ring-element index of this device (shared by all its
+        FSDP shards — and, under hierarchy, by every member of its pod —
+        so one drop decision covers the whole sharded/replicated
+        payload) — the LossModel's receiver id and the membership mask
+        index.  Matches the flattened (pod, data) // (fsdp * pod_size)
+        element numbering of ``_flat_ring_perm``."""
         ctx = self.ctx
         idx = jnp.zeros((), jnp.int32)
         if ctx.data_size > 1:
             idx = jax.lax.axis_index(ctx.data_axis)
         if ctx.pod_axis is not None and ctx.pods > 1:
             idx = idx + ctx.data_size * jax.lax.axis_index(ctx.pod_axis)
-        return idx // ctx.fsdp
+        return idx // (ctx.fsdp * self.pod_size)
 
     def _keep_flags(self, step):
         """(keep_upstream, keep_downstream) boolean scalars of this step's
@@ -994,13 +1153,13 @@ class ConsensusRuntime:
         """
         cfg, ctx = self.cfg, self.ctx
         if layout is None:
-            layout = wire.WireLayout.for_tree(x_half)
+            layout = self.state_layout(x_half)
         plan = self.wire_plan_for(layout)
         units = plan.transfer_units(
             cfg.pipeline_chunks if cfg.wire_packing == "pipelined" else None)
         resync = self._resync_flag(step)
         step_k = self._step_k(step)
-        key = _device_key(key, ctx)
+        key = _device_key(key, ctx, group=self.pod_size)
         push = cfg.push_sum_enabled
         w_fwd, w_bwd = cfg.in_weights
         directed = w_fwd != w_bwd
@@ -1052,8 +1211,8 @@ class ConsensusRuntime:
                 # offsets address the payload from 0 and never see it
                 pay = wire.lift_concat([pay, trailer])
             telemetry.trace_mark("launch", c, rows=units[c].n_rows)
-            return (pay, _ppermute_ring(pay, ctx, +stride, mask=mask),
-                    _ppermute_ring(pay, ctx, -stride, mask=mask))
+            return (pay, self._ring(pay, +stride, mask=mask),
+                    self._ring(pay, -stride, mask=mask))
 
         recv_w = {}
         dense = {"l": [], "r": []} if directed else None
@@ -1085,8 +1244,8 @@ class ConsensusRuntime:
                 xt_u = jax.lax.slice_in_dim(xt, unit.row_start, unit.row_end)
 
                 def _rebuild(xt_u=xt_u, unit=unit):
-                    xt_l = _ppermute_ring(xt_u, ctx, +stride, mask=mask)
-                    xt_r = _ppermute_ring(xt_u, ctx, -stride, mask=mask)
+                    xt_l = self._ring(xt_u, +stride, mask=mask)
+                    xt_r = self._ring(xt_u, -stride, mask=mask)
                     if directed:
                         built = (jnp.float32(w_fwd) * xt_l
                                  + jnp.float32(w_bwd) * xt_r)
@@ -1177,8 +1336,8 @@ class ConsensusRuntime:
                 # the bounded-retry control plane alongside the m_agg
                 # rebuild (a failed handshake keeps the stale weights)
                 def _refresh(w_l=w_l, w_r=w_r):
-                    fresh_l = _ppermute_ring(ps_w, ctx, +stride, mask=mask)
-                    fresh_r = _ppermute_ring(ps_w, ctx, -stride, mask=mask)
+                    fresh_l = self._ring(ps_w, +stride, mask=mask)
+                    fresh_r = self._ring(ps_w, -stride, mask=mask)
                     if resync_ok is not None:
                         return (jnp.where(resync_ok, fresh_l, w_l),
                                 jnp.where(resync_ok, fresh_r, w_r))
@@ -1267,6 +1426,15 @@ class ConsensusRuntime:
         metrics["wire_bytes_shipped"] = act * jnp.float32(
             acct.shipped_payload)
         metrics["saturated_count"] = act * saturated
+        if "wire_bytes_inner" in keys:
+            # per-level split (DESIGN.md §14): the intra-pod fp32 level
+            # is lossless and always paid by an active member; the outer
+            # value is per POD (every member reports its representative's
+            # payload — sum over distinct pods, not devices)
+            metrics["wire_bytes_inner"] = act * jnp.float32(
+                acct.inner_bytes)
+            metrics["wire_bytes_outer"] = act * jnp.float32(
+                acct.shipped_payload)
         if "resync_fired" in keys:
             fired = (jnp.zeros((), jnp.float32) if resync is None
                      else resync.astype(jnp.float32))
@@ -1319,11 +1487,11 @@ class ConsensusRuntime:
                 ns[fk] = state[fk]
             return x_next, ns, metrics
         if layout is None:
-            layout = wire.WireLayout.for_tree(x_half)
+            layout = self.state_layout(x_half)
         plan = self.wire_plan_for(layout)
         unit = plan.transfer_units(None)[0]      # monolithic packed payload
         resync = self._resync_flag(step)
-        key = _device_key(key, ctx)
+        key = _device_key(key, ctx, group=self.pod_size)
         push = cfg.push_sum_enabled
         w_fwd, w_bwd = cfg.in_weights
         directed = w_fwd != w_bwd
@@ -1397,8 +1565,8 @@ class ConsensusRuntime:
             # NEW neighbors' post-retire x_tilde (all nodes' shadows are
             # consistent at this point — the buffer is fully drained)
             def _rebuild():
-                xt_l = _ppermute_ring(xt_new, ctx, +stride, mask=mask)
-                xt_r = _ppermute_ring(xt_new, ctx, -stride, mask=mask)
+                xt_l = self._ring(xt_new, +stride, mask=mask)
+                xt_r = self._ring(xt_new, -stride, mask=mask)
                 if directed:
                     built = (jnp.float32(w_fwd) * xt_l
                              + jnp.float32(w_bwd) * xt_r)
@@ -1418,8 +1586,8 @@ class ConsensusRuntime:
                 w_r = jnp.where(eff_dn, w_r, state["ps_nbr"][1:2])
             if resync is not None:
                 def _refresh(w_l=w_l, w_r=w_r):
-                    fresh_l = _ppermute_ring(ps_w, ctx, +stride, mask=mask)
-                    fresh_r = _ppermute_ring(ps_w, ctx, -stride, mask=mask)
+                    fresh_l = self._ring(ps_w, +stride, mask=mask)
+                    fresh_r = self._ring(ps_w, -stride, mask=mask)
                     if resync_ok is not None:
                         return (jnp.where(resync_ok, fresh_l, w_l),
                                 jnp.where(resync_ok, fresh_r, w_r))
@@ -1468,8 +1636,8 @@ class ConsensusRuntime:
             # an inactive node carries a zero-differential payload: its
             # next retire decodes to an exact no-op even if it rejoins
             new_pay = jnp.where(act_b, new_pay, jnp.zeros_like(new_pay))
-        new_l = _ppermute_ring(new_pay, ctx, +stride, mask=mask)
-        new_r = _ppermute_ring(new_pay, ctx, -stride, mask=mask)
+        new_l = self._ring(new_pay, +stride, mask=mask)
+        new_r = self._ring(new_pay, -stride, mask=mask)
 
         clipped = jnp.zeros((), jnp.float32)
         if cfg.quant_mode == "fixed":
@@ -1540,7 +1708,7 @@ class ConsensusRuntime:
         cfg, ctx = self.cfg, self.ctx
         assert mask is None, "per-leaf reference path has no membership"
         if layout is None:
-            layout = wire.WireLayout.for_tree(x_half)
+            layout = self.state_layout(x_half)
         resync = self._resync_flag(step)
         step_k = self._step_k(step)
         key = _device_key(key, ctx)
@@ -1691,7 +1859,7 @@ class ConsensusRuntime:
         uncompressed ``dgd`` baseline."""
         cfg, ctx = self.cfg, self.ctx
         if layout is None:
-            layout = wire.WireLayout.for_tree(x_half)
+            layout = self.state_layout(x_half)
         chunks = self._chunks_for(layout)
         key = _device_key(key, ctx)
         xp_p = layout.pack(x_prev)
@@ -1734,7 +1902,7 @@ class ConsensusRuntime:
         noise buffer."""
         cfg, ctx = self.cfg, self.ctx
         if layout is None:
-            layout = wire.WireLayout.for_tree(x_half)
+            layout = self.state_layout(x_half)
         key = _device_key(key, ctx)
         leaves, treedef = jax.tree_util.tree_flatten(x_half)
         prev_leaves = jax.tree_util.tree_flatten(x_prev)[0]
@@ -1777,7 +1945,7 @@ class ConsensusRuntime:
         del step, key
         w_self, w_side = cfg.self_weight, cfg.side_weight
         if layout is None:
-            layout = wire.WireLayout.for_tree(x_half)
+            layout = self.state_layout(x_half)
         leaves, treedef = jax.tree_util.tree_flatten(x_half)
         prev_leaves = jax.tree_util.tree_flatten(x_prev)[0]
         out = []

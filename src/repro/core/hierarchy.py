@@ -1,0 +1,113 @@
+"""Two-level hierarchical consensus (DESIGN.md §14).
+
+Production decentralized training is hierarchical: the interconnect
+*inside* a pod is orders of magnitude faster than the links *between*
+pods/regions, so compressing intra-pod traffic buys nothing while the
+inter-pod ring is exactly the slow-link regime the paper's ADC-DGD
+targets.  :class:`HierarchySpec` declares the two levels on top of the
+existing flattened consensus-node ring:
+
+  inner   every pod of ``m = n // pods`` consecutive nodes psum-averages
+          its optimizer delta each step (uncompressed fp32 — the fast
+          interconnect), so all members enter the outer exchange holding
+          identical parameters;
+  outer   ONE logical representative per pod runs the full compressed
+          ADC exchange — any wire_packing (packed/pipelined/async), any
+          WirePlan, over the existing MembershipSchedule so pods can
+          churn.  On the SPMD device mesh every member traces the
+          identical exchange at pod granularity (the ring permutation
+          steps in units of ``m`` nodes), which makes the broadcast-back
+          of the combined result implicit and free: pod members are
+          bitwise replicas of their representative by induction.
+
+The effective mixing matrix is the Kronecker product
+
+    W_eff = W_outer (x) (1/m) 11^T
+
+whose spectrum is ``eig(W_outer)`` plus ``n - pods`` zeros, so the
+consensus rate is governed by the POD ring alone
+(:func:`repro.core.topology.hierarchical_mixing`).  Degenerate cases
+collapse exactly: ``pods == n`` (singleton pods) is the flat compressed
+ring bit-for-bit, and ``pods == 1`` (one pod spans every node) is
+``algorithm="allreduce"`` bit-for-bit (the runtime delegates to the same
+rotation all-reduce).
+
+The runtime threading lives in :mod:`repro.core.distributed`
+(``ConsensusConfig(hierarchy=...)``); the single-process reference rule
+with convergence metrics is :func:`repro.core.consensus.run_hierarchical`.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["HierarchySpec"]
+
+#: fp32 element size of the inner all-reduce wire model
+_INNER_ITEMSIZE = 4.0
+
+
+@dataclasses.dataclass(frozen=True)
+class HierarchySpec:
+    """Two-level consensus declaration: ``pods`` equal groups of
+    consecutive consensus nodes.  ``pods`` counts GROUPS (the outer ring
+    length), not members: ``pods == n`` means singleton pods (flat ring),
+    ``pods == 1`` means one pod spanning every node (pure all-reduce).
+    """
+
+    pods: int = 1
+
+    def __post_init__(self):
+        if self.pods < 1:
+            raise ValueError(f"hierarchy pods must be >= 1, got {self.pods}")
+
+    @classmethod
+    def from_spec(cls, spec) -> "HierarchySpec":
+        """Normalize a user-facing spec — an int, ``"pods=P"``, or an
+        existing :class:`HierarchySpec` — into a spec object (the
+        ``--hierarchy pods=P`` train-CLI grammar)."""
+        if isinstance(spec, HierarchySpec):
+            return spec
+        if isinstance(spec, int):
+            return cls(pods=spec)
+        s = str(spec).strip()
+        if s.startswith("pods="):
+            try:
+                return cls(pods=int(s[len("pods="):]))
+            except ValueError:
+                pass
+        raise ValueError(
+            f"unrecognized hierarchy spec {spec!r}; expected 'pods=P', "
+            "an int pod count, or a HierarchySpec")
+
+    def pod_size(self, n_nodes: int) -> int:
+        """Members per pod (``m``); pods must tile the node set exactly."""
+        if n_nodes % self.pods != 0:
+            raise ValueError(
+                f"hierarchy pods={self.pods} does not divide the "
+                f"{n_nodes}-node consensus set into equal pods")
+        return n_nodes // self.pods
+
+    def pod_psum_groups(self, n_nodes: int, fsdp: int) -> tuple:
+        """``axis_index_groups`` of the inner delta psum: each group holds
+        the SAME-fsdp-rank devices across one pod's ``m`` members (pod
+        devices at different fsdp ranks hold different parameter shards
+        and must never be summed together)."""
+        m = self.pod_size(n_nodes)
+        return tuple(
+            tuple((g * m + j) * fsdp + f for j in range(m))
+            for g in range(self.pods) for f in range(fsdp))
+
+    def inner_bytes_per_step(self, n_elements: int, n_nodes: int) -> float:
+        """Intra-pod bytes per member per step under the standard fp32
+        ring all-reduce model, ``2 (m-1)/m * 4 * n_elements`` — zero for
+        singleton pods (no inner level in the trace)."""
+        m = self.pod_size(n_nodes)
+        if m <= 1:
+            return 0.0
+        return 2.0 * (m - 1) / m * _INNER_ITEMSIZE * n_elements
+
+    def describe(self, n_nodes: int) -> str:
+        m = self.pod_size(n_nodes)
+        return (f"hierarchy[{self.pods} pods x {m} nodes: inner fp32 "
+                f"psum-average, outer compressed ring over {self.pods} "
+                "representatives]")

@@ -54,7 +54,7 @@ SCHEMA = "telemetry/v1"
 
 #: host-event record names (``kind="event"``, field ``event``)
 EVENT_KINDS = ("codec_decision", "plan_retier", "membership_epoch",
-               "resync", "wire_plan", "run_end")
+               "resync", "wire_plan", "kernel_fallback", "run_end")
 
 #: exchange span taxonomy (DESIGN.md §Observability): the five phases of
 #: one transfer unit's life on the wire
@@ -81,6 +81,8 @@ STEP_METRICS: dict[str, str] = {
     "consensus_err": "gauge",
     # -- ConsensusConfig(telemetry=True) extras --------------------------
     "wire_bytes_shipped": "counter",
+    "wire_bytes_inner": "counter",
+    "wire_bytes_outer": "counter",
     "saturated_count": "counter",
     "resync_fired": "counter",
     "resync_ok": "gauge",
@@ -111,12 +113,21 @@ class WireAccounting:
 
     for any delivered direction count ``d`` in [0, directions] — traced
     or host-side.
+
+    Under hierarchical consensus (DESIGN.md §14) ``inner_bytes`` carries
+    the *intra-pod* level — the uncompressed fp32 delta all-reduce each
+    pod member pays per step (ring all-reduce model,
+    ``HierarchySpec.inner_bytes_per_step``).  It is lossless (the fault
+    models act on the inter-pod wire only), so the shipped ==
+    delivered + dropped invariant stays a statement about the OUTER
+    payload; ``shipped_per_step`` totals both levels.
     """
 
     payload_bytes: int                 # one direction, codes + scales
     trailer_bytes: int = 0             # push-sum fp32 weight trailer
     directions: int = 2                # ring directions per step
     resync_bytes_amortized: float = 0.0
+    inner_bytes: float = 0.0           # intra-pod fp32 level (hierarchy)
 
     @property
     def bytes_per_direction(self) -> int:
@@ -130,9 +141,11 @@ class WireAccounting:
 
     @property
     def shipped_per_step(self) -> float:
-        """Static bytes/step accounting incl. amortized resync — what
+        """Static bytes/step accounting incl. amortized resync and the
+        intra-pod inner level — what
         ``ConsensusRuntime.wire_bytes_per_step`` reports."""
-        return self.shipped_payload + self.resync_bytes_amortized
+        return (self.shipped_payload + self.resync_bytes_amortized
+                + self.inner_bytes)
 
     def delivered_bytes(self, delivered_directions):
         """Bytes that arrived, given how many directions survived (a

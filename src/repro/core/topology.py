@@ -37,6 +37,7 @@ __all__ = [
     "expander",
     "paper_fig3",
     "paper_circle",
+    "hierarchical_mixing",
     "directed_ring",
     "directed_cycle",
     "directed_erdos_renyi",
@@ -294,6 +295,25 @@ def fully_connected(n: int) -> MixingMatrix:
     With W = (1/n) 11^T, DGD reduces to synchronous data-parallel SGD.
     """
     return _mm(np.full((n, n), 1.0 / n), f"full{n}")
+
+
+def hierarchical_mixing(outer: MixingMatrix, pod_size: int) -> MixingMatrix:
+    """Two-level effective mixing ``W_outer (x) (1/m) 11^T`` over
+    ``outer.n * pod_size`` nodes (DESIGN.md §14): every pod of ``m``
+    consecutive nodes averages internally (the uniform ``(1/m) 11^T``
+    factor) while the pods themselves mix by ``outer``.
+
+    The Kronecker structure makes the spectrum explicit:
+    ``eig(W_eff) = eig(W_outer) x {1} ∪ eig(W_outer) x {0, ...}``, i.e.
+    the outer eigenvalues plus ``n - pods`` zeros — so
+    ``spectral_beta(W_eff) == spectral_beta(W_outer)`` and the consensus
+    rate is governed by the pod ring alone.
+    """
+    if pod_size < 1:
+        raise ValueError(f"pod_size must be >= 1, got {pod_size}")
+    m = pod_size
+    w = np.kron(outer.w, np.full((m, m), 1.0 / m))
+    return _mm(w, f"hier[{outer.name}x{m}]")
 
 
 def star(n: int) -> MixingMatrix:

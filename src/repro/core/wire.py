@@ -153,6 +153,14 @@ class WireLayout:
     n_rows: int
     n_data_rows: int
     block: int = kops.BLOCK
+    #: buffer-order permutation of leaf indices (``()`` = leaf order): slot
+    #: ``placement[0]`` owns the first row range, and so on.  ``slots`` stay
+    #: in LEAF order (``row_start`` is always absolute), so ``unpack`` /
+    #: ``leaf_rows`` are placement-oblivious; only ``pack`` /
+    #: ``from_leaf_rows`` iterate buffer order.  WirePlan groups same-codec
+    #: leaves with this so mixed plans keep their codec runs few and large
+    #: (core.wireplan.grouped_placement).
+    placement: tuple[int, ...] = ()
 
     # -- construction ---------------------------------------------------
     @classmethod
@@ -173,6 +181,31 @@ class WireLayout:
         return cls(slots=tuple(slots), treedef=treedef, n_rows=total,
                    n_data_rows=row, block=block)
 
+    # -- buffer order -----------------------------------------------------
+    @property
+    def buffer_order(self) -> tuple[int, ...]:
+        """Leaf indices in buffer-row order (identity without placement)."""
+        return self.placement or tuple(range(len(self.slots)))
+
+    def with_placement(self, placement) -> "WireLayout":
+        """The same leaves re-packed in ``placement`` order: every slot's
+        ``row_start`` is recomputed to its position in the new buffer order
+        (heights, padding and the TILE_N tail are unchanged, so the total
+        geometry — ``n_rows`` / ``n_data_rows`` — is invariant)."""
+        placement = tuple(int(i) for i in placement)
+        if sorted(placement) != list(range(len(self.slots))):
+            raise ValueError(f"placement {placement} is not a permutation "
+                             f"of {len(self.slots)} leaf indices")
+        slots = list(self.slots)
+        row = 0
+        for i in placement:
+            slots[i] = dataclasses.replace(slots[i], row_start=row)
+            row += slots[i].n_rows
+        assert row == self.n_data_rows, (row, self.n_data_rows)
+        identity = placement == tuple(range(len(self.slots)))
+        return dataclasses.replace(self, slots=tuple(slots),
+                                   placement=() if identity else placement)
+
     # -- derived sizes ---------------------------------------------------
     @property
     def n_leaves(self) -> int:
@@ -190,7 +223,8 @@ class WireLayout:
         """JSON-able geometry snapshot (telemetry ``wire_plan`` events)."""
         return {"n_leaves": self.n_leaves, "n_elements": self.n_elements,
                 "n_rows": self.n_rows, "n_data_rows": self.n_data_rows,
-                "block": self.block}
+                "block": self.block,
+                "reordered": bool(self.placement)}
 
     # -- pack / unpack ---------------------------------------------------
     def check_tree(self, tree: Any) -> list:
@@ -212,7 +246,8 @@ class WireLayout:
         TILE_N-alignment tail."""
         leaves = self.check_tree(tree)
         flats = []
-        for leaf, slot in zip(leaves, self.slots):
+        for i in self.buffer_order:
+            leaf, slot = leaves[i], self.slots[i]
             flat = leaf.astype(jnp.float32).reshape(-1)
             pad = slot.n_rows * self.block - slot.size
             flats.append(jnp.pad(flat, (0, pad)))
@@ -246,11 +281,11 @@ class WireLayout:
                                     axis=0)
 
     def from_leaf_rows(self, rows: list) -> jax.Array:
-        """Reassemble a packed buffer from per-leaf row blocks (the
-        TILE_N-alignment tail is re-zeroed)."""
+        """Reassemble a packed buffer from per-leaf row blocks, given in
+        LEAF order (the TILE_N-alignment tail is re-zeroed)."""
         if len(rows) != len(self.slots):
             raise ValueError(f"{len(rows)} row blocks != {len(self.slots)}")
-        rows = list(rows)
+        rows = [rows[i] for i in self.buffer_order]
         tail = self.n_rows - self.n_data_rows
         if tail:
             rows.append(jnp.zeros((tail, self.block), jnp.float32))

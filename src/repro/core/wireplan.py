@@ -65,8 +65,9 @@ from repro.core import wire
 from repro.core.compression import Compressor
 from repro.kernels import ops as kops
 
-__all__ = ["PlanSpec", "parse_spec", "CodecRun", "Fragment", "TransferUnit",
-           "WirePlan", "WirePlanCompressor", "PUSH_SUM_TRAILER_BYTES"]
+__all__ = ["PlanSpec", "parse_spec", "grouped_placement", "CodecRun",
+           "Fragment", "TransferUnit", "WirePlan", "WirePlanCompressor",
+           "PUSH_SUM_TRAILER_BYTES"]
 
 #: the push-sum weight scalar rides the packed payload as an fp32 bitcast
 #: appended AFTER the last codec run's fragment (core.distributed), so the
@@ -167,6 +168,35 @@ class PlanSpec:
         rules = tuple((p, name if n == hot else n) for p, n in self.rules)
         default = name if self.default == hot else self.default
         return PlanSpec(rules=rules, default=default)
+
+
+def grouped_placement(layout: wire.WireLayout,
+                      slot_codecs) -> tuple[int, ...] | None:
+    """Stable group-by-codec buffer placement for a mixed plan.
+
+    Leaves keep their relative order inside each codec group; groups are
+    ordered by first occurrence in the current buffer order.  Interleaved
+    codec assignments otherwise shatter the plan into many row-granular
+    runs whose ragged (non-``TILE_N``) edges drop off the Pallas kernel
+    path (kernels/ops.py ``_tile_aligned``); grouping collapses the plan to
+    one run per codec, so at most ``n_codecs - 1`` interior boundaries can
+    still be unaligned and every run's tile-aligned interior launches as a
+    Pallas grid.  Decode results are placement-oblivious (``unpack`` /
+    ``leaf_rows`` address slots absolutely).  Returns ``None`` when the
+    current order is already codec-contiguous (nothing to reorder).
+    """
+    slot_codecs = tuple(slot_codecs)
+    if len(slot_codecs) != len(layout.slots):
+        raise ValueError(f"{len(slot_codecs)} slot codecs != "
+                         f"{len(layout.slots)} layout slots")
+    order = layout.buffer_order
+    first_seen: list[str] = []
+    for i in order:
+        if slot_codecs[i] not in first_seen:
+            first_seen.append(slot_codecs[i])
+    placement = tuple(i for name in first_seen for i in order
+                      if slot_codecs[i] == name)
+    return None if placement == tuple(order) else placement
 
 
 def _pattern_matches(pat: str, path: str) -> bool:
@@ -312,7 +342,11 @@ class WirePlan:
             _check_codec_name(name)
         runs: list[CodecRun] = []
         byte = 0
-        for slot, name in zip(layout.slots, slot_codecs):
+        # runs follow BUFFER order (row_start increases); a reordered
+        # layout (wire.WireLayout.placement) groups same-codec leaves so
+        # adjacent-slot merging collapses the plan to one run per codec
+        for i in layout.buffer_order:
+            slot, name = layout.slots[i], slot_codecs[i]
             if runs and runs[-1].codec == name:
                 prev = runs[-1]
                 runs[-1] = CodecRun(codec=name, row_start=prev.row_start,
@@ -536,6 +570,22 @@ class WirePlan:
         """Effective pipelined chunk count (>= n_runs, clamped to the
         available tile pieces)."""
         return len(self.chunk_bounds(pipeline_chunks))
+
+    def fallback_fragments(self, pipeline_chunks: int | None = None,
+                           tile: int = kops.TILE_N) -> int:
+        """How many of one exchange's fragments CANNOT launch as Pallas
+        grids (non-``TILE_N``-aligned offset or height — kernels/ops.py
+        ``_tile_aligned``) and take the bit-identical jnp reference path
+        instead.  Zero for a grouped-placement plan whose codec-group row
+        counts are all tile multiples; the trainer raises a telemetry
+        ``kernel_fallback`` event when ``use_pallas`` is on and this is
+        still positive (launch/train.py)."""
+        count = 0
+        for unit in self.transfer_units(pipeline_chunks, tile):
+            for f in unit.fragments:
+                if f.n_rows and (f.row_start % tile or f.n_rows % tile):
+                    count += 1
+        return count
 
     def run_at(self, row: int) -> CodecRun:
         for r in self.runs:

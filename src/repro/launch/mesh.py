@@ -8,6 +8,13 @@ jax device state).  Shapes:
 
 The dry-run launcher sets XLA_FLAGS=--xla_force_host_platform_device_count=512
 *before any jax import* so these meshes can be built on the CPU container.
+
+The mesh "pod" axis shards *devices*; it is orthogonal to hierarchical
+consensus pods (``ConsensusConfig(hierarchy="pods=P")``, DESIGN.md §14),
+which partition the consensus *node ring* over the flattened
+(pod, data) axes — the two compose: a multi-pod mesh flattens into one
+ring, and the HierarchySpec groups consecutive ring nodes into
+psum-averaged consensus pods on top of it.
 """
 from __future__ import annotations
 

@@ -90,6 +90,19 @@ def series_rows(payload: dict) -> dict:
                 "mb_per_step": None,
                 "consensus_overhead_frac": t.get("consensus_overhead_frac"),
             }
+    for mode, t in ((payload.get("hierarchy_sweep") or {})
+                    .get("modes") or {}).items():
+        if _is_timing(t):
+            # hierarchy rows track INTER-POD bytes (the slow links the
+            # two-level design exists to relieve); intra-pod fp32 traffic
+            # is reported by the health section, not regression-gated
+            rows[("hierarchy", mode)] = {
+                "steps_per_s": t.get("steps_per_s"),
+                "timing_spread": t.get("timing_spread", 0.0),
+                "mb_per_step": (t["inter_pod_bytes_per_step"] / 1e6
+                                if t.get("inter_pod_bytes_per_step")
+                                is not None else None),
+            }
     return rows
 
 
@@ -194,6 +207,17 @@ def health_report(path: str) -> dict:
                 "dropped_mb": (shipped - delivered) / 1e6,
                 "delivered_frac": delivered / shipped if shipped else 1.0,
             }
+        inner = totals.get("wire_bytes_inner")
+        outer = totals.get("wire_bytes_outer")
+        if inner is not None and outer is not None:
+            # two-level split: intra-pod fp32 psum traffic vs the
+            # compressed inter-pod ring (core.hierarchy)
+            rep["hierarchy_wire"] = {
+                "intra_pod_mb": inner / 1e6,
+                "inter_pod_mb": outer / 1e6,
+                "inter_frac": (outer / (inner + outer)
+                               if inner + outer else 1.0),
+            }
     by_kind: dict[str, int] = {}
     for ev in events:
         by_kind[ev["event"]] = by_kind.get(ev["event"], 0) + 1
@@ -228,6 +252,11 @@ def _print_health(rep: dict) -> None:
               f"delivered={w['delivered_mb']:.3f}MB "
               f"dropped={w['dropped_mb']:.3f}MB "
               f"(delivered_frac={w['delivered_frac']:.3f})")
+    if "hierarchy_wire" in rep:
+        h = rep["hierarchy_wire"]
+        print(f"   hierarchy: intra-pod={h['intra_pod_mb']:.3f}MB "
+              f"inter-pod={h['inter_pod_mb']:.3f}MB "
+              f"(inter_frac={h['inter_frac']:.3f})")
     for k, v in sorted(rep.get("counters_total", {}).items()):
         if not k.startswith("wire_bytes"):
             print(f"   total {k}={v:g}")

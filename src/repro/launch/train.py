@@ -120,13 +120,21 @@ def _sync_replicated_grads(grads, defs: T.ModelDefs, ctx: ParallelContext):
                         is_leaf=lambda x: isinstance(x, ParamDef))
 
 
-def consensus_wire_layout(defs: T.ModelDefs, ctx: ParallelContext
+def consensus_wire_layout(defs: T.ModelDefs, ctx: ParallelContext,
+                          consensus: ConsensusRuntime | None = None
                           ) -> wire.WireLayout:
-    """The static packing plan for one device's local parameter shard."""
+    """The static packing plan for one device's local parameter shard.
+
+    Pass the runtime when one exists: ``ConsensusRuntime.state_layout``
+    applies the mixed-plan grouped placement (core.wireplan), and the
+    heterogeneous payload size — e.g. the async in-flight buffer shape —
+    must be computed on the SAME buffer order the exchange packs."""
     local = jax.tree.map(
         lambda d: jax.ShapeDtypeStruct(
             local_block_shape(d, ctx.tp, ctx.fsdp), d.dtype),
         defs.storage, is_leaf=lambda x: isinstance(x, ParamDef))
+    if consensus is not None:
+        return consensus.state_layout(local)
     return wire.WireLayout.for_tree(local)
 
 
@@ -141,7 +149,7 @@ def train_state_specs(defs: T.ModelDefs, ctx: ParallelContext,
     # (n_rows, BLOCK) fp32 buffer per shadow; globally a leading device
     # dim sharded over every mesh axis.
     if consensus.cfg.algorithm == "adc_dgd":
-        layout = consensus_wire_layout(defs, ctx)
+        layout = consensus_wire_layout(defs, ctx, consensus)
         lead = _mesh_lead_axes(ctx)
         n_dev = ctx.pods * ctx.data_size * ctx.tp
         packed = jax.ShapeDtypeStruct((n_dev, layout.n_rows, layout.block),
@@ -221,6 +229,8 @@ def build_train_setup(
     straggle_seed: int = 0,                # straggler-mask seed (core.faults)
     membership: tuple | None = None,       # per-epoch active-node masks
     telemetry: bool = False,               # in-trace telemetry counters
+    hierarchy=None,                        # two-level consensus: "pods=P" |
+                                           # int | HierarchySpec (core.hierarchy)
 ) -> TrainSetup:
     ctx = make_context(mesh, consensus_nodes)
     defs = T.build_defs(cfg, ctx, dtype=compute_dtype)
@@ -236,7 +246,7 @@ def build_train_setup(
         link_loss=link_loss, loss_seed=loss_seed, push_sum=push_sum,
         link_loss_model=link_loss_model, resync_retries=resync_retries,
         straggle_rate=straggle_rate, straggle_seed=straggle_seed,
-        membership=membership, telemetry=telemetry)
+        membership=membership, telemetry=telemetry, hierarchy=hierarchy)
     consensus = ConsensusRuntime(ccfg, ctx)
     opt = opt_by_name(optimizer)
     if schedule == "constant":
@@ -548,6 +558,24 @@ def main(argv=None):
                          "StragglerModel)")
     ap.add_argument("--straggle-seed", type=int, default=0,
                     help="seed of the deterministic straggler masks")
+    ap.add_argument("--hierarchy", default=None,
+                    help="two-level consensus spec 'pods=P' (DESIGN.md "
+                         "§Hierarchical consensus): every pod of nodes/P "
+                         "consecutive nodes psum-averages its optimizer "
+                         "delta (uncompressed fp32 inner level), then one "
+                         "representative per pod runs the compressed ADC "
+                         "exchange over the P-pod outer ring (any "
+                         "--wire-packing / wire plan; --node-failures then "
+                         "churns PODS, so masks index the outer ring).  "
+                         "pods=nodes is the flat ring bit-for-bit; pods=1 "
+                         "is --algorithm allreduce bit-for-bit")
+    ap.add_argument("--codec-ladder", default=None,
+                    help="comma-separated AdaptiveBitController ladder, "
+                         "coarsest first — e.g. 'topk:k=16,topk:k=32,"
+                         "topk:k=64,topk:k=128,topk:k=256' for "
+                         "variance-adaptive top-k (rungs ranked by "
+                         "code_max * coverage; priced at 64+k+2 bytes/row); "
+                         "default int2,int4,int8")
     ap.add_argument("--node-failures", default=None,
                     help="elastic-membership spec 'node@start:end[;...]' — "
                          "node inactive for schedule epochs [start, end), "
@@ -586,11 +614,20 @@ def main(argv=None):
             raise SystemExit(f"--wire-codec: {e.args[0]}") from None
     mesh = make_cpu_mesh(data=args.data, model=args.model)
 
+    hierarchy_spec = None
+    if args.hierarchy:
+        from repro.core.hierarchy import HierarchySpec
+        hierarchy_spec = HierarchySpec.from_spec(args.hierarchy)
+        hierarchy_spec.pod_size(args.nodes)  # divisibility: fail at the CLI
+
     membership_masks = None
     epoch_events = {}
     if args.node_failures:
         from repro.core.topology import MembershipSchedule
-        sched = MembershipSchedule.from_spec(args.node_failures, args.nodes)
+        # under hierarchy the churn unit is the POD: masks index the outer
+        # ring of pod representatives, not individual nodes
+        ring_n = hierarchy_spec.pods if hierarchy_spec is not None else args.nodes
+        sched = MembershipSchedule.from_spec(args.node_failures, ring_n)
         membership_masks = sched.masks
         epoch_events = {ev["epoch"]: ev for ev in sched.epoch_events()}
 
@@ -642,6 +679,7 @@ def main(argv=None):
                 straggle_seed=args.straggle_seed,
                 membership=membership_masks,
                 telemetry=args.telemetry,
+                hierarchy=hierarchy_spec,
                 track_consensus_error=(args.algorithm != "allreduce"))
         return setups[codec_name]
 
@@ -682,10 +720,20 @@ def main(argv=None):
         n_rows = probe_layout.n_rows
         n_elements_global = (probe_layout.n_elements * probe_ctx.fsdp
                              * probe_ctx.tp)
+        ladder_kw = {}
+        if args.codec_ladder:
+            ladder_kw["ladder"] = tuple(
+                s.strip() for s in args.codec_ladder.split(",") if s.strip())
         controller = AdaptiveBitController(byte_budget=args.byte_budget,
-                                           gamma=args.gamma)
+                                           gamma=args.gamma, **ladder_kw)
         if plan_spec is not None and not plan_spec.is_uniform:
-            # plan mode: candidates re-tier the hot slots of this plan
+            # plan mode: candidates re-tier the hot slots of this plan;
+            # price on the grouped buffer order the runtime actually ships
+            codecs = tuple(plan_spec.codec_for_path(s.path)
+                           for s in probe_layout.slots)
+            placement = wireplan.grouped_placement(probe_layout, codecs)
+            if placement is not None:
+                probe_layout = probe_layout.with_placement(placement)
             controller.plan = plan_spec.build(probe_layout)
         tier = controller.initial(n_rows)
         codec_name = spec_for(tier)
@@ -700,16 +748,32 @@ def main(argv=None):
         accounting the in-trace counters are derived from."""
         if tel is None or args.algorithm != "adc_dgd":
             return
-        layout = consensus_wire_layout(setup.defs, setup.ctx)
+        layout = consensus_wire_layout(setup.defs, setup.ctx,
+                                       setup.consensus)
         acct = setup.consensus.wire_accounting(layout.n_elements,
                                                layout=layout)
         data = dict(codec=codec_name, layout=layout.describe())
         if acct is not None:
             data.update(wire_bytes_per_step=acct.shipped_per_step,
                         shipped_payload=acct.shipped_payload,
-                        trailer_bytes=acct.trailer_bytes)
+                        trailer_bytes=acct.trailer_bytes,
+                        inner_bytes=acct.inner_bytes)
+        if hierarchy_spec is not None:
+            data["hierarchy"] = hierarchy_spec.describe(args.nodes)
         if args.wire_packing in ("packed", "pipelined", "async"):
-            data["plan"] = setup.consensus.wire_plan_for(layout).describe()
+            plan = setup.consensus.wire_plan_for(layout)
+            data["plan"] = plan.describe()
+            chunks = (args.pipeline_chunks
+                      if args.wire_packing == "pipelined" else None)
+            fb = plan.fallback_fragments(chunks)
+            data["fallback_fragments"] = fb
+            if fb:
+                # grouped placement could not align every codec-run edge:
+                # these fragments take the jnp reference path even when
+                # the Pallas kernels are on
+                tel.event("kernel_fallback", step=at_step, codec=codec_name,
+                          fragments=fb, reordered=bool(layout.placement),
+                          use_pallas=setup.consensus.cfg.use_pallas)
         if setup.consensus.loss is not None:
             data["channel"] = setup.consensus.loss.describe()
         if setup.consensus.straggler is not None:

@@ -495,6 +495,50 @@ def test_controller_hysteresis_and_overflow():
     assert ctl2.select(1, 0.01, overflow_frac=0.5, n_rows=n) == "int4"
 
 
+def test_controller_variance_adaptive_topk_ladder():
+    """Variance-adaptive top-k: every rung of a ``topk:k=<int>`` ladder
+    shares one grid ceiling (code_max = 127), so raw code_max cannot rank
+    them; capacity = code_max * k / block restores the ordering and the
+    controller walks k up/down exactly like bit width."""
+    n = _rows()
+    ks = (16, 32, 64, 128, 256)
+    ladder = tuple(f"topk:k={k}" for k in ks)
+    # exact pricing: block//8 selection bitmap + k codes + 2 scale rows
+    for k in ks:
+        assert C.by_name(f"topk:k={k}").payload_width() == \
+            kops.BLOCK // 8 + k + 2
+    # capacity is strictly increasing in k; dense rungs stay code_max
+    caps = [C.AdaptiveBitController._capacity(name) for name in ladder]
+    assert caps == sorted(caps) and len(set(caps)) == len(caps)
+    assert caps[2] == pytest.approx(127 * 64 / kops.BLOCK)
+    for name in ("int2", "int4", "int8"):
+        assert C.AdaptiveBitController._capacity(name) == \
+            float(C.by_name(name).code_max)
+    ctl = C.AdaptiveBitController(ladder=ladder, fixed_step0=1e-3,
+                                  gamma=0.0, headroom=4.0, patience=2)
+    assert ctl.initial(n) == "topk:k=256"            # conservative start
+    # tiny residual: the k=16 down-target persists patience epochs first
+    assert ctl.select(1, 1e-5, 0.0, n) == "topk:k=256"
+    assert ctl.select(2, 1e-5, 0.0, n) == "topk:k=16"
+    # rising residual: immediate up-switch to the cheapest sufficient k
+    # (need = 2e-3 * 4 / 1e-3 = 8 -> k=64, capacity 15.9)
+    assert ctl.select(3, 2e-3, 0.0, n) == "topk:k=64"
+    # need beyond every rung: highest-CAPACITY fallback (not code_max)
+    assert ctl.target(4, residual_rms=1.0, overflow_frac=0.0,
+                      n_rows=n) == "topk:k=256"
+    # observed clipping forces one ladder rung up from the current k
+    assert ctl.select(5, 1e-5, overflow_frac=0.5, n_rows=n) == "topk:k=128"
+    # the byte-budget filter prices each rung exactly
+    budget = 2 * n * C.by_name("topk:k=64").payload_width()
+    ctl2 = C.AdaptiveBitController(ladder=ladder, byte_budget=budget)
+    assert ctl2.candidates(n) == ladder[:3]
+    # candidate_table surfaces the new pricing columns (controller-trace
+    # telemetry events)
+    row = C.AdaptiveBitController(ladder=ladder).candidate_table(n)[0]
+    assert row["coverage"] == pytest.approx(16 / kops.BLOCK)
+    assert row["capacity"] == pytest.approx(127 * 16 / kops.BLOCK)
+
+
 def test_controller_switches_across_amplified_epochs():
     """The acceptance dynamic: with a constant residual and gamma > 0 the
     amplified grid Delta_0 / k^gamma shrinks, so the controller must walk

@@ -424,3 +424,114 @@ def test_choco_and_adc_gossip_through_plan_equal_bytes():
     assert r_choco["grad_norm"][-1] < r_choco["grad_norm"][0]
     assert np.mean(r_adc["consensus"][-50:]) \
         <= 10 * np.mean(r_choco["consensus"][-50:])
+
+
+# ---------------------------------------------------------------------------
+# Plan-time slot reordering (wire.WireLayout.placement)
+# ---------------------------------------------------------------------------
+
+def _interleaved_layout():
+    """A tuple tree (flatten preserves order) whose codec assignment
+    alternates, with per-leaf row counts that are NOT TILE_N multiples —
+    the shape that strands a flat mixed plan's fragments off the Pallas
+    kernel path."""
+    tree = tuple(jax.ShapeDtypeStruct((s,), jnp.float32)
+                 for s in (3 * BLOCK, 5 * BLOCK + 7, 7 * BLOCK,
+                           2 * BLOCK + 1, 9 * BLOCK))
+    layout = wire.WireLayout.for_tree(tree)
+    codecs = ("int8", "int2", "int8", "int2", "int8")
+    return tree, layout, codecs
+
+
+def test_grouped_placement_groups_by_codec():
+    _, layout, codecs = _interleaved_layout()
+    placement = wireplan.grouped_placement(layout, codecs)
+    # stable group-by-codec: first-occurrence codec order, leaf order
+    # preserved within each group
+    assert placement == (0, 2, 4, 1, 3)
+    # uniform / already-contiguous assignments need no reorder
+    assert wireplan.grouped_placement(layout, ("int8",) * 5) is None
+    assert wireplan.grouped_placement(
+        layout, ("int2", "int2", "int8", "int8", "int8")) is None
+    with pytest.raises(ValueError, match="slot codecs"):
+        wireplan.grouped_placement(layout, ("int8",))
+
+
+def test_with_placement_validation_and_identity():
+    _, layout, _ = _interleaved_layout()
+    with pytest.raises(ValueError, match="not a permutation"):
+        layout.with_placement((0, 0, 1, 2, 3))
+    # identity permutation normalizes back to the unreordered layout
+    ident = layout.with_placement(tuple(range(5)))
+    assert ident.placement == ()
+    assert not ident.describe()["reordered"]
+
+
+def test_reordered_layout_roundtrip_bit_identical():
+    """pack -> unpack under a placement is exact; leaf_rows stays
+    placement-oblivious (slots keep LEAF order, rows move); from_leaf_rows
+    rebuilds the reordered buffer."""
+    structs, layout, codecs = _interleaved_layout()
+    re = layout.with_placement(wireplan.grouped_placement(layout, codecs))
+    assert re.buffer_order == (0, 2, 4, 1, 3)
+    assert re.describe()["reordered"]
+    # same leaves, same total rows; row_start follows buffer order
+    assert re.n_rows == layout.n_rows
+    starts = [re.slots[i].row_start for i in re.buffer_order]
+    assert starts == sorted(starts)
+    ks = jax.random.split(jax.random.PRNGKey(3), len(structs))
+    tree = tuple(jax.random.normal(k, s.shape, jnp.float32)
+                 for k, s in zip(ks, structs))
+    packed = re.pack(tree)
+    assert packed.shape == (re.n_rows, BLOCK)
+    for a, b in zip(tree, re.unpack(packed)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # each leaf's rows equal its flat-layout rows, wherever they landed
+    flat_packed = layout.pack(tree)
+    for i in range(len(structs)):
+        np.testing.assert_array_equal(
+            np.asarray(re.leaf_rows(packed, i)),
+            np.asarray(layout.leaf_rows(flat_packed, i)))
+    np.testing.assert_array_equal(
+        np.asarray(re.from_leaf_rows(
+            [re.leaf_rows(packed, i) for i in range(len(structs))])),
+        np.asarray(packed))
+
+
+def test_reordered_plan_collapses_runs_and_fragments():
+    """The satellite's point: grouping same-codec leaves merges the mixed
+    plan's interleaved runs, so far fewer transfer fragments miss the
+    TILE_N alignment the Pallas kernels require."""
+    from repro.core import telemetry
+    _, layout, codecs = _interleaved_layout()
+    flat_plan = wireplan.WirePlan.from_slot_codecs(layout, codecs)
+    re = layout.with_placement(wireplan.grouped_placement(layout, codecs))
+    grouped_plan = wireplan.WirePlan.from_slot_codecs(re, codecs)
+    assert flat_plan.n_runs == 5
+    assert grouped_plan.n_runs == 2
+    assert grouped_plan.fallback_fragments() < flat_plan.fallback_fragments()
+    # residual misalignment is surfaced as a host telemetry event kind
+    assert "kernel_fallback" in telemetry.EVENT_KINDS
+
+
+def test_state_layout_applies_grouping_only_for_mixed_plans():
+    """ConsensusRuntime.state_layout reorders slots for non-uniform plans
+    (dict keys flatten sorted, so norm/proj alternation is genuinely
+    interleaved) and leaves uniform plans untouched."""
+    from repro.core.distributed import ConsensusConfig, ConsensusRuntime
+    from repro.models.sharding import ParallelContext
+    ctx = ParallelContext(tp=1, data_size=4, n_nodes=4, in_shard_map=True)
+    params = {"a_norm": jax.ShapeDtypeStruct((513,), jnp.float32),
+              "b_proj": jax.ShapeDtypeStruct((3 * BLOCK,), jnp.float32),
+              "c_norm": jax.ShapeDtypeStruct((7,), jnp.float32),
+              "d_proj": jax.ShapeDtypeStruct((2 * BLOCK + 1,), jnp.float32)}
+    rt = ConsensusRuntime(
+        ConsensusConfig(algorithm="adc_dgd",
+                        wire_codec="mixed:norm=int2,*=int8"), ctx)
+    lo = rt.state_layout(params)
+    assert lo.placement == (0, 2, 1, 3)
+    plan = rt.wire_plan_for(lo)
+    assert plan.n_runs == 2
+    rt_uniform = ConsensusRuntime(
+        ConsensusConfig(algorithm="adc_dgd", wire_codec="int8"), ctx)
+    assert rt_uniform.state_layout(params).placement == ()
